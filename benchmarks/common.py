@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.perfmodel import A100_NVLINK, TPU_V5E, ModelCost
+from repro.core.simulator import Request, ServingSimulator
+
+
+def make_requests(rate: float, n: int, seed: int = 0,
+                  prompt=(400, 1600), gen=(150, 500), lora_bytes=0.0):
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(i, float(arr[i]),
+                    int(rng.integers(*prompt)), int(rng.integers(*gen)),
+                    lora_bytes=lora_bytes)
+            for i in range(n)]
+
+
+def codellama_sim(hw, scheduler, tier, **kw):
+    cfg = get_config("aqua-codellama-34b")
+    mc = ModelCost.from_config(cfg)
+    wb = cfg.param_count() * 2
+    # a 34B model needs a TP group on 16GB v5e chips; A100-80G serves it solo
+    while hw.hbm_bytes < wb + 10e9:
+        hw = hw.pod_slice(2)
+    args = dict(weight_bytes=wb, kv_capacity_bytes=hw.hbm_bytes - wb - 2e9,
+                scheduler=scheduler, offload_tier=tier, max_running=20)
+    args.update(kw)
+    return ServingSimulator(hw, mc, **args)
+
+
+def pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(int(q * len(xs)), len(xs) - 1)] if xs else float("nan")

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks (interpret-mode wall time is NOT TPU time — the
+derived column reports the analytic VMEM working set + arithmetic intensity
+used for the roofline argument in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    t0 = time.monotonic()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.monotonic() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.flash_attention.kernel import flash_attention
+    B, S, H, K, hd = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    us = _time(lambda a, b, c: flash_attention(a, b, c, block_q=128,
+                                               block_k=128, interpret=True),
+               q, k, v)
+    vmem_kb = (128 * hd * 3 + 128 * hd) * 4 / 1024
+    rows.append(("kernel/flash_attention/us_interp", us,
+                 f"VMEM working set {vmem_kb:.0f}KB per (128,128) tile"))
+
+    from repro.kernels.paged_attention.kernel import paged_attention
+    P, page, pps = 64, 16, 8
+    q1 = jnp.asarray(rng.standard_normal((4, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((K, P, page, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((K, P, page, hd)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, P, (4, pps)), jnp.int32)
+    ln = jnp.full((4,), pps * page, jnp.int32)
+    us = _time(lambda *a: paged_attention(*a, interpret=True), q1, kp, vp, bt, ln)
+    rows.append(("kernel/paged_attention/us_interp", us,
+                 f"one page DMA per grid step: {page*hd*4/1024:.0f}KB/step"))
+
+    from repro.kernels.kv_gather.kernel import gather_pages
+    pool = jnp.asarray(rng.standard_normal((256, 32, 128)), jnp.float32)
+    ids = jnp.asarray(rng.choice(256, 64, replace=False), jnp.int32)
+    us = _time(lambda *a: gather_pages(*a, interpret=True), pool, ids)
+    coalesced_mb = 64 * 32 * 128 * 4 / 1e6
+    rows.append(("kernel/kv_gather/us_interp", us,
+                 f"coalesces 64 pages -> one {coalesced_mb:.1f}MB message"))
+
+    from repro.kernels.rwkv6_wkv.kernel import wkv6
+    B, T, Hh, hdd = 1, 128, 2, 64
+    r = jnp.asarray(rng.standard_normal((B, T, Hh, hdd)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((B, T, Hh, hdd)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((B, T, Hh, hdd)), jnp.float32)
+    w = -jnp.asarray(rng.uniform(0.01, 1.0, (B, T, Hh, hdd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((Hh, hdd)), jnp.float32)
+    s0 = jnp.zeros((B, Hh, hdd, hdd), jnp.float32)
+    us = _time(lambda *a: wkv6(*a, chunk=32, interpret=True), r, kk, vv, w, u, s0)
+    rows.append(("kernel/rwkv6_wkv/us_interp", us,
+                 "chunked: 3 MXU matmuls + (C,C,hd) VPU pairwise per chunk"))
+    return rows

@@ -1,0 +1,29 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV (value is seconds / GB/s / ratio as the
+name indicates; ``us_per_call`` rows come from kernel_bench).
+Usage:  PYTHONPATH=src python -m benchmarks.run [--skip-kernels]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    import benchmarks.figures as F
+    rows = []
+    for fig in F.ALL_FIGURES:
+        try:
+            rows += fig()
+        except Exception as e:  # a failing figure must not hide the others
+            rows.append((f"{fig.__name__}/ERROR", float("nan"), repr(e)[:80]))
+    if "--skip-kernels" not in sys.argv:
+        from benchmarks.kernel_bench import run as krun
+        rows += krun()
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

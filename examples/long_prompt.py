@@ -1,0 +1,33 @@
+"""Long-prompt inference throughput: FlexGen-style host offload vs AQUA
+fabric offload (paper Fig. 7), on the paper's A100 testbed constants and on
+the TPU v5e port.
+
+    PYTHONPATH=src python examples/long_prompt.py
+"""
+from repro.configs import get_config
+from repro.core.perfmodel import A100_NVLINK, TPU_V5E, ModelCost
+from repro.core.simulator import long_prompt_tokens_per_s
+
+
+def main():
+    cfg = get_config("aqua-opt-30b")
+    mc = ModelCost.from_config(cfg)
+    wb = cfg.param_count() * 2
+    print(f"model: OPT-30B ({wb/1e9:.0f} GB bf16); prompt 8000 tokens "
+          f"-> KV {mc.kv_bytes(8000)/1e9:.1f} GB")
+    for hw in (A100_NVLINK, TPU_V5E):
+        free = max(hw.hbm_bytes - wb - 12e9, 2e9)
+        host = long_prompt_tokens_per_s(hw, mc, ctx_tokens=8000,
+                                        free_hbm_bytes=free,
+                                        weight_bytes=min(wb, hw.hbm_bytes * 0.8),
+                                        tier="host")
+        fab = long_prompt_tokens_per_s(hw, mc, ctx_tokens=8000,
+                                       free_hbm_bytes=free,
+                                       weight_bytes=min(wb, hw.hbm_bytes * 0.8),
+                                       tier="fabric")
+        print(f"{hw.name:12s}: host {host:6.2f} tok/s | fabric {fab:6.2f} "
+              f"tok/s | {fab/host:.1f}x  (paper: 6x on A100/NVLink)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Regenerate the auto-generated tables section of EXPERIMENTS.md from the
+dry-run results (optimized) and the preserved baseline artifacts.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.analysis.report import summarize  # noqa: E402
+
+BEGIN = "<!-- BEGIN GENERATED TABLES -->"
+END = "<!-- END GENERATED TABLES -->"
+
+
+def main():
+    parts = ["", "## Optimized (current defaults)", "",
+             summarize("results/dryrun")]
+    try:
+        parts += ["", "## Paper-faithful baseline (pre-hillclimb, preserved)",
+                  "", summarize("results/dryrun_baseline")]
+    except Exception as e:
+        parts += ["", f"(baseline tables unavailable: {e})"]
+    body = "\n".join(parts)
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = re.sub(re.escape(BEGIN) + ".*" + re.escape(END),
+                  BEGIN + "\n" + body + "\n" + END, text, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,372 @@
+"""Roofline analysis from compiled HLO (§Roofline deliverable).
+
+Three terms per (arch × shape × mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` counts every computation in the module ONCE — it does
+NOT multiply while-loop bodies by their trip counts (verified empirically;
+scan-over-layers would be undercounted by L). So this module parses the
+post-SPMD optimized HLO text instead and walks the computation call graph:
+
+    cost(entry) = Σ op costs + fusion -> cost(called)
+                + while -> trip_count x (cost(body) + cost(cond))
+
+Trip counts come from the ``backend_config={"known_trip_count":{"n":"N"}}``
+annotation XLA attaches to canonical scan-derived loops (fallback: parse the
+`compare(..., constant)` in the condition computation).
+
+Costs counted per instruction (per-device, post-partitioning):
+  flops       : dot (2*M*N*K*batch), convolution (approximated via shapes)
+  bytes       : sum of unique operand + output buffer sizes of non-fusion
+                top-level ops (a standard HBM-traffic proxy post-fusion)
+  collectives : output bytes of all-reduce / all-gather / reduce-scatter /
+                all-to-all / collective-permute (x2 for all-reduce: ring
+                all-reduce moves ~2x the payload)
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import math
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+               "token": 0, "opaque": 0, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# v5e constants (from the brief)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+) = (.*)$")
+# first lowercase identifier followed by '(' after the type — the opcode.
+# (type strings contain only dtype[dims]{layout} and /*index=N*/ comments,
+# none of which match word-followed-by-paren)
+_OP_RE = re.compile(r"(?:^|[\s,*/])([a-z][\w\-]*)\(")
+
+
+def _parse_shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            # computation header: [ENTRY] %name (params) -> type {
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", line.strip())
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        m = _ASSIGN_RE.match(line)
+        if m:
+            name, rest = m.groups()
+            op_m = _OP_RE.search(rest)
+            if not op_m:
+                continue
+            op = op_m.group(1)
+            type_str = rest[: op_m.start()].strip()
+            ins = Instr(name, type_str, op, line)
+            cur.instrs.append(ins)
+            cur.by_name[name] = ins
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    """2 * batch * M * N * K from output shape + contracting dims."""
+    out_dt, out_dims = _shape_dims(instr.type_str)
+    m = re.search(r"dot\(([^)]*)\)", instr.line)
+    if not m:
+        return 0.0
+    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
+    lhs = comp.by_name.get(lhs_name)
+    k = 1
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    if lhs is not None and cd:
+        _, ldims = _shape_dims(lhs.type_str)
+        for d in cd.group(1).split(","):
+            if d and int(d) < len(ldims):
+                k *= ldims[int(d)]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * k
+
+
+def _conv_flops(instr: Instr, comp: Computation) -> float:
+    out_dt, out_dims = _shape_dims(instr.type_str)
+    m = re.search(r"convolution\(([^)]*)\)", instr.line)
+    if not m:
+        return 0.0
+    rhs_name = m.group(1).split(",")[1].strip().lstrip("%")
+    rhs = comp.by_name.get(rhs_name)
+    kn = 1
+    if rhs is not None:
+        _, rdims = _shape_dims(rhs.type_str)
+        for d in rdims:
+            kn *= d
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # output elems x (kernel elems / out_channels) x 2 — good enough for the
+    # stub conv frontends; transformers have no convs on the hot path
+    return 2.0 * out_n * max(kn, 1) ** 0.5
+
+
+def _trip_count(instr: Instr, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'known_trip_count.*?n["\':\s]+(\d+)', instr.line)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"condition=%?([\w.\-]+)", instr.line)
+    if m and m.group(1) in comps:
+        for ins in comps[m.group(1)].instrs:
+            c = re.search(r"compare\([^)]*\).*direction=LT", ins.line)
+            if c:
+                k = re.search(r"constant\((\d+)\)", ins.line)
+                if k:
+                    return int(k.group(1))
+        # condition compares against a constant defined in the computation
+        consts = [re.search(r"constant\((\d+)\)", i.line)
+                  for i in comps[m.group(1)].instrs]
+        consts = [int(c.group(1)) for c in consts if c]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _update_bytes(instr: Instr, comp: Computation) -> int:
+    """Traffic of an in-place dynamic-update-slice/scatter = 2x update size."""
+    m = re.search(rf"{instr.op}\(([^)]*)\)", instr.line)
+    if m:
+        args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+        if len(args) >= 2 and args[1] in comp.by_name:
+            return 2 * _parse_shape_bytes(comp.by_name[args[1]].type_str)
+    return _parse_shape_bytes(instr.type_str) // 8
+
+
+def _dims_only(type_str: str) -> str:
+    m = _SHAPE_RE.search(type_str)
+    return m.group(2) if m else ""
+
+
+def _fusion_out_bytes(ins: Instr, called: Computation) -> int:
+    """Fusion output traffic. A fusion whose root is an in-place update
+    (dynamic-update-slice / scatter, possibly convert-wrapped by the CPU
+    backend's float normalization — bf16 has no native CPU support, so XLA
+    wraps bf16 loop updates in f32 round-trips that do NOT exist on the TPU
+    target) only writes the updated slice, not the whole stacked buffer."""
+    if not called.instrs:
+        return _parse_shape_bytes(ins.type_str)
+    root = called.instrs[-1]
+    if root.op in ("dynamic-update-slice", "scatter"):
+        return _update_bytes(root, called)
+    if root.op == "tuple":
+        m = re.search(r"tuple\(([^)]*)\)", root.line)
+        tot = 0
+        if m:
+            for a in m.group(1).split(","):
+                el = called.by_name.get(a.strip().lstrip("%"))
+                if el is None:
+                    continue
+                if el.op in ("dynamic-update-slice", "scatter"):
+                    tot += _update_bytes(el, called)
+                else:
+                    tot += _parse_shape_bytes(el.type_str)
+        return tot or _parse_shape_bytes(ins.type_str)
+    # convert-rooted fusion hiding a full-size in-place update
+    out_dims = _dims_only(ins.type_str)
+    for el in called.instrs:
+        if el.op in ("dynamic-update-slice", "scatter") \
+                and _dims_only(el.type_str) == out_dims:
+            return _update_bytes(el, called)
+    return _parse_shape_bytes(ins.type_str)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+
+    def __add__(self, o):
+        cc = dict(self.coll_counts)
+        for k, v in o.coll_counts.items():
+            cc[k] = cc.get(k, 0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll_bytes + o.coll_bytes, cc)
+
+    def scale(self, k: float):
+        return Cost(self.flops * k, self.bytes * k, self.coll_bytes * k,
+                    {n: int(v * k) for n, v in self.coll_counts.items()})
+
+
+def cost_of(comp: Computation, comps: Dict[str, Computation],
+            memo: Dict[str, Cost]) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = Cost()          # guard cycles
+    total = Cost()
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            total.flops += _dot_flops(ins, comp)
+            total.bytes += _parse_shape_bytes(ins.type_str)
+        elif ins.op == "convolution":
+            total.flops += _conv_flops(ins, comp)
+            total.bytes += _parse_shape_bytes(ins.type_str)
+        elif ins.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if m and m.group(1) in comps:
+                called = comps[m.group(1)]
+                total = total + cost_of(called, comps, memo)
+                total.bytes += _fusion_out_bytes(ins, called)
+            else:
+                total.bytes += _parse_shape_bytes(ins.type_str)
+        elif ins.op == "while":
+            trips = _trip_count(ins, comps)
+            sub = Cost()
+            for key in ("body", "condition"):
+                m = re.search(rf"{key}=%?([\w.\-]+)", ins.line)
+                if m and m.group(1) in comps:
+                    sub = sub + cost_of(comps[m.group(1)], comps, memo)
+            total = total + sub.scale(trips)
+        elif ins.op in ("call", "conditional", "async-start"):
+            for m in re.finditer(r"(?:to_apply|calls|branch_computations)="
+                                 r"\{?%?([\w.\-]+)\}?", ins.line):
+                if m.group(1) in comps:
+                    total = total + cost_of(comps[m.group(1)], comps, memo)
+        elif any(ins.op.startswith(c) for c in COLLECTIVES):
+            b = _parse_shape_bytes(ins.type_str)
+            if ins.op.startswith("all-reduce"):
+                b *= 2                 # ring AR moves ~2x payload
+            total.coll_bytes += b
+            total.coll_counts[ins.op] = total.coll_counts.get(ins.op, 0) + 1
+            total.bytes += _parse_shape_bytes(ins.type_str)
+        elif ins.op in ("dynamic-update-slice", "scatter"):
+            # in-place update: traffic = read+write of the UPDATE operand,
+            # not the whole (potentially multi-GB stacked) buffer
+            total.bytes += _update_bytes(ins, comp)
+        elif ins.op in ("copy", "transpose", "reshape", "broadcast", "reduce",
+                        "gather", "dynamic-slice",
+                        "sort", "iota",
+                        "add", "multiply", "select", "exponential", "tanh",
+                        "concatenate", "slice", "pad", "compare", "divide"):
+            # NB: bare `convert` is excluded — on the CPU backend XLA's float
+            # normalization inserts bf16<->f32 round-trips that fuse away on
+            # the TPU target
+            total.bytes += _parse_shape_bytes(ins.type_str)
+    memo[comp.name] = total
+    return total
+
+
+def analyze_text(text: str) -> Cost:
+    comps = parse_hlo(text)
+    entry = "__entry__" if "__entry__" in comps else list(comps)[-1]
+    return cost_of(comps[entry], comps, {})
+
+
+def analyze_file(path: str) -> Cost:
+    op = gzip.open if path.endswith(".gz") else open
+    with op(path, "rt") as f:
+        return analyze_text(f.read())
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def table_row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline_from_cost(cost: Cost, *, model_flops_per_device: float,
+                       n_links: float = 2.0) -> Roofline:
+    """All quantities are PER DEVICE (post-SPMD HLO is per-device)."""
+    t_c = cost.flops / PEAK_FLOPS
+    t_m = cost.bytes / HBM_BW
+    t_x = cost.coll_bytes / (ICI_BW * n_links)
+    term = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+               key=lambda kv: kv[1])
+    return Roofline(cost.flops, cost.bytes, cost.coll_bytes, t_c, t_m, t_x,
+                    term[0], model_flops_per_device,
+                    model_flops_per_device / cost.flops if cost.flops else 0.0)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D (train) or 2*N*D (inference), N = active params."""
+    from repro.core.perfmodel import ModelCost
+    n_active = ModelCost.from_config(cfg).n_params
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch          # decode: one token/seq

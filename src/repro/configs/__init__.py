@@ -1,0 +1,35 @@
+"""Per-architecture configs (one module per assigned arch)."""
+import importlib
+
+_ARCH_MODULES = [
+    "internvl2_1b",
+    "rwkv6_3b",
+    "gemma_7b",
+    "qwen1_5_0_5b",
+    "minicpm_2b",
+    "gemma3_12b",
+    "deepseek_v2_lite_16b",
+    "dbrx_132b",
+    "whisper_tiny",
+    "jamba_v0_1_52b",
+    "aqua_paper",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True
+
+
+from repro.configs.base import (  # noqa: E402,F401
+    ModelConfig, ShapeConfig, MoEConfig, MLAConfig, SSMConfig, HybridConfig,
+    EncDecConfig, get_config, list_archs, smoke_config, shape_applicable,
+    ALL_SHAPES, SHAPES_BY_NAME, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    DENSE, MOE, SSM, HYBRID, ENCDEC, VLM,
+)

@@ -1,0 +1,315 @@
+"""Architecture + shape configuration for the repro framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The config is a
+plain frozen dataclass so it can be hashed into jit static args and printed into
+EXPERIMENTS.md verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+DENSE = "dense"          # decoder-only transformer (GQA/MQA)
+MOE = "moe"              # decoder-only transformer with MoE FFN
+SSM = "ssm"              # RWKV-6 (attention-free)
+HYBRID = "hybrid"        # Jamba: Mamba + attention interleave, MoE
+ENCDEC = "encdec"        # Whisper: encoder-decoder
+VLM = "vlm"              # LM backbone + stub patch-embedding frontend
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8                # routed experts
+    top_k: int = 2
+    n_shared_experts: int = 0         # always-on shared experts (DeepSeek style)
+    d_ff_expert: int = 0              # per-expert FFN width (0 = use d_ff)
+    capacity_factor: float = 1.25     # dispatch capacity factor
+    router_jitter: float = 0.0
+    moe_every: int = 1                # apply MoE every k-th layer (Jamba: 2)
+    aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0              # 0 = direct q projection (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """RWKV-6 / Mamba specific knobs."""
+    # RWKV-6
+    rwkv_head_dim: int = 64
+    rwkv_lora_decay: int = 64         # rank of the data-dependent decay LoRA
+    rwkv_lora_mix: int = 32           # rank of the token-shift interpolation LoRA
+    # Mamba (Jamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0            # 0 = d_model // 16
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Jamba interleave: every `period` layers, `attn_index` is attention."""
+    period: int = 8
+    attn_index: int = 4
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    n_encoder_layers: int = 4
+    encoder_seq_len: int = 1500      # whisper: 30s audio -> 1500 frames
+    max_decoder_len: int = 448       # whisper decoder context
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 = d_model // n_heads
+    # flavour knobs
+    activation: str = "swiglu"        # swiglu | geglu | gelu | relu_sq
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    use_qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rmsnorm_eps: float = 1e-6
+    embed_scale: bool = False         # gemma: embeddings * sqrt(d_model)
+    logit_softcap: float = 0.0
+    attn_logit_softcap: float = 0.0
+    # sliding window pattern: (local_window, pattern_period, global_every)
+    sliding_window: int = 0           # 0 = full attention
+    global_layer_every: int = 0       # gemma3: every 6th layer is global (5:1)
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    # multimodality stub: number of prefix embedding positions fed by the
+    # (stubbed) frontend, e.g. ViT patch embeddings for a VLM.
+    n_prefix_embeds: int = 0
+    max_seq_len: int = 8192
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # implementation selection: "xla" einsum attention (used for CPU dry-run so
+    # cost_analysis reflects true FLOPs) or "pallas" kernels (TPU target).
+    attn_impl: str = "xla"
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def is_attention_layer(self, layer_idx: int) -> bool:
+        if self.family == SSM:
+            return False
+        if self.family == HYBRID:
+            assert self.hybrid is not None
+            return layer_idx % self.hybrid.period == self.hybrid.attn_index
+        return True
+
+    def is_global_attn_layer(self, layer_idx: int) -> bool:
+        """gemma3-style 5 local : 1 global interleave."""
+        if self.global_layer_every <= 0:
+            return self.sliding_window == 0
+        return (layer_idx + 1) % self.global_layer_every == 0
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return (layer_idx % self.moe.moe_every) == (self.moe.moe_every - 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count N (for 6*N*D model flops)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        nh, nkv, L = self.n_heads, self.n_kv_heads, self.n_layers
+        total = v * d * (1 if self.tie_embeddings else 2)
+        for i in range(L):
+            if self.family == SSM:
+                total += self._rwkv_layer_params()
+                continue
+            if self.family == HYBRID and not self.is_attention_layer(i):
+                total += self._mamba_layer_params()
+            elif self.mla is not None:
+                total += self._mla_layer_params()
+            else:
+                total += d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+            # FFN
+            if self.is_moe_layer(i):
+                m = self.moe
+                fe = m.d_ff_expert or f
+                glu = 3 if self.activation in ("swiglu", "geglu") else 2
+                total += d * m.n_experts          # router
+                total += (m.n_experts + m.n_shared_experts) * glu * d * fe
+            else:
+                glu = 3 if self.activation in ("swiglu", "geglu") else 2
+                total += glu * d * f
+            total += 2 * d                         # norms
+        if self.family == ENCDEC and self.encdec is not None:
+            # encoder layers + cross attention already counted above only for
+            # decoder; add encoder stack.
+            enc = self.encdec.n_encoder_layers * (
+                4 * d * (nh * hd) + 3 * d * f + 2 * d)
+            # cross-attention per decoder layer
+            enc += L * (4 * d * (nh * hd) + d)
+            total += enc
+        return total
+
+    def _rwkv_layer_params(self) -> int:
+        d = self.d_model
+        s = self.ssm or SSMConfig()
+        # time-mix: r,k,v,g,w projections + output + decay/mix LoRAs + channel mix
+        tm = 5 * d * d + d * d + 2 * d * s.rwkv_lora_decay + 5 * 2 * d * s.rwkv_lora_mix
+        cm = 2 * d * self.d_ff + self.d_ff * d
+        return tm + cm
+
+    def _mamba_layer_params(self) -> int:
+        d = self.d_model
+        s = self.ssm or SSMConfig()
+        di = s.mamba_expand * d
+        dtr = s.mamba_dt_rank or d // 16
+        return (d * 2 * di + di * s.mamba_d_conv + di * (dtr + 2 * s.mamba_d_state)
+                + dtr * di + di * s.mamba_d_state + di + di * d)
+
+    def _mla_layer_params(self) -> int:
+        d = self.d_model
+        m = self.mla
+        nh = self.n_heads
+        qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        q = d * nh * qd if m.q_lora_rank == 0 else d * m.q_lora_rank + m.q_lora_rank * nh * qd
+        kv = d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        kv += m.kv_lora_rank * nh * (m.qk_nope_head_dim + m.v_head_dim)
+        o = nh * m.v_head_dim * d
+        return q + kv + o
+
+    def dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+# archs that may run long_500k (sub-quadratic decode; see DESIGN.md skip list)
+LONG_CONTEXT_OK = ("rwkv6-3b", "jamba-v0.1-52b", "gemma3-12b")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a given (arch, shape) cell is runnable; else reason."""
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return False, "pure full-attention arch: 500k KV decode is quadratic-cost/OOM (DESIGN.md skip list)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        # import all config modules lazily
+        from repro import configs as _c  # noqa
+        _c.load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    from repro import configs as _c
+    _c.load_all()
+    return sorted(_REGISTRY)
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=128,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+    if cfg.family == HYBRID:
+        kw["n_layers"] = 8   # one full interleave period
+    if cfg.global_layer_every:
+        kw["n_layers"] = min(cfg.n_layers, 6)
+        kw["sliding_window"] = 16
+    if cfg.sliding_window and not cfg.global_layer_every:
+        kw["sliding_window"] = 16
+    if cfg.moe is not None:
+        # capacity_factor = n_experts makes routing dropless, so smoke tests can
+        # assert exact train/prefill/decode agreement (see moe_apply docstring).
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=2,
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+            d_ff_expert=128 if cfg.moe.d_ff_expert else 0,
+            capacity_factor=4.0)
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(kv_lora_rank=64, q_lora_rank=0,
+                              qk_nope_head_dim=32, qk_rope_head_dim=16,
+                              v_head_dim=32)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, rwkv_head_dim=32, rwkv_lora_decay=16, rwkv_lora_mix=8,
+            mamba_d_state=8, mamba_dt_rank=8)
+    if cfg.encdec is not None:
+        kw["encdec"] = EncDecConfig(n_encoder_layers=2, encoder_seq_len=32,
+                                    max_decoder_len=64)
+    if cfg.n_prefix_embeds:
+        kw["n_prefix_embeds"] = 8
+    return cfg.replace(**kw)

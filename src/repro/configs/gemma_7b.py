@@ -1,0 +1,21 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256, MQA on 2b (this is the 7b: 16 kv heads).
+
+28L d_model=3072 16H (GQA kv=16) d_ff=24576 vocab=256000  [arXiv:2403.08295; hf]
+"""
+from repro.configs.base import ModelConfig, DENSE, register
+
+CONFIG = register(ModelConfig(
+    name="gemma-7b",
+    family=DENSE,
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    activation="geglu",
+    tie_embeddings=True,
+    embed_scale=True,
+    max_seq_len=32768,
+))

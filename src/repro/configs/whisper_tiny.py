@@ -1,0 +1,24 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (STUB).  [arXiv:2212.04356]
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865. The conv1d audio frontend is a
+stub per the brief: input_specs() supplies precomputed frame embeddings
+(B, 1500, d_model). Adaptation note: we use RMSNorm+RoPE in place of
+LayerNorm+learned positions (uniform substrate); documented in DESIGN.md.
+"""
+from repro.configs.base import ModelConfig, ENCDEC, EncDecConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-tiny",
+    family=ENCDEC,
+    n_layers=4,                    # decoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    activation="gelu",
+    encdec=EncDecConfig(n_encoder_layers=4, encoder_seq_len=1500,
+                        max_decoder_len=448),
+    max_seq_len=32768,             # synthetic decode_32k cell stresses the cache
+))

@@ -1,0 +1,315 @@
+"""AQUA TENSORS — transparent, elastic, tiered paged tensors (paper §3).
+
+A logical paged tensor whose pages physically live in one of three tiers:
+
+  LOCAL   the serving chip's own HBM page pool (directly addressable by the
+          paged_attention kernel)
+  REMOTE  a *donor* chip's HBM pool, reachable over the scale-up fabric
+          (NVLink in the paper; ICI here). Transfers are COALESCED: the
+          kv_gather Pallas kernel packs the victim pages into one contiguous
+          staging buffer, which moves as a single large message
+          (distributed/collectives.paging_permute on a real mesh).
+  HOST    host DRAM over PCIe — the FlexGen/vLLM-swap fallback tier the paper
+          compares against.
+
+The ML model is oblivious to placement (the paper's "transparent" property):
+the serving engine only sees logical page ids; ``ensure_local`` is invoked at
+inference-iteration boundaries (the paper's ``aqua.respond()`` insight — pages
+are only read/written between iterations, so migration is race-free).
+
+Elasticity: the remote tier is backed by *leases* from the coordinator; a
+donor can reclaim its memory at any iteration boundary via ``evict_remote``.
+
+On this CPU container every tier is a real buffer on the single device, so
+all data paths (gather -> transfer -> scatter) execute and are testable
+bit-exactly; on a multi-chip mesh the remote pool is resident on the donor
+and the staging transfer is one ppermute. Every movement is metered
+(bytes, messages, tier) and priced by core/perfmodel.py — that is the
+simulated clock the benchmarks report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import HardwareProfile, TPU_V5E
+from repro.kernels.kv_gather import ops as kv_ops
+
+LOCAL, REMOTE, HOST = 0, 1, 2
+TIER_NAMES = {LOCAL: "local", REMOTE: "remote", HOST: "host"}
+
+
+@dataclass
+class TransferMeter:
+    """Accounting for every page movement; priced by the perf model."""
+    hw: HardwareProfile = TPU_V5E
+    bytes_fabric: float = 0.0
+    bytes_host: float = 0.0
+    messages_fabric: int = 0
+    messages_host: int = 0
+    sim_time: float = 0.0
+    coalesced: bool = True
+
+    def record(self, nbytes: float, tier: int, n_pages: int):
+        link = self.hw.fabric if tier == REMOTE else self.hw.host_link
+        msgs = 1 if self.coalesced else max(1, n_pages)
+        if tier == REMOTE:
+            self.bytes_fabric += nbytes
+            self.messages_fabric += msgs
+        else:
+            self.bytes_host += nbytes
+            self.messages_host += msgs
+        self.sim_time += link.time(nbytes, n_messages=msgs)
+
+
+class AquaTensor:
+    """A paged tensor with tiered page placement. Page payload: (page, d)."""
+
+    def __init__(self, *, n_logical: int, page_shape: Tuple[int, ...],
+                 local_slots: int, host_slots: int, dtype=jnp.bfloat16,
+                 meter: Optional[TransferMeter] = None, name: str = "kv"):
+        self.name = name
+        self.page_shape = tuple(page_shape)
+        self.dtype = jnp.dtype(dtype)
+        self.page_bytes = int(np.prod(page_shape)) * self.dtype.itemsize
+        self.local_pool = jnp.zeros((local_slots,) + self.page_shape, self.dtype)
+        self.host_pool = np.zeros((host_slots,) + self.page_shape, self.dtype)
+        self.remote_pools: Dict[str, jnp.ndarray] = {}
+        self._remote_free: Dict[str, List[int]] = {}
+        # page_table[lp] = (tier, slot, donor_idx) ; -1 = unallocated
+        self.page_table = np.full((n_logical, 3), -1, np.int64)
+        self._free_local = list(range(local_slots))[::-1]
+        self._free_host = list(range(host_slots))[::-1]
+        self._donors: List[str] = []
+        self.meter = meter or TransferMeter()
+
+    # ------------------------------------------------------------------
+    # lease management (driven by the coordinator)
+    # ------------------------------------------------------------------
+    def add_remote_lease(self, donor: str, slots: int):
+        """Donor offered `slots` pages of its HBM (coordinator /lease)."""
+        assert donor not in self.remote_pools
+        self.remote_pools[donor] = jnp.zeros((slots,) + self.page_shape, self.dtype)
+        self._remote_free[donor] = list(range(slots))[::-1]
+        self._donors.append(donor)
+
+    def evict_remote(self, donor: str) -> int:
+        """Donor reclaims its lease: evacuate pages to host, drop the pool."""
+        moved = 0
+        victims = np.nonzero((self.page_table[:, 0] == REMOTE)
+                             & (self.page_table[:, 2] == self._donors.index(donor)))[0]
+        if len(victims):
+            self._move(victims, HOST)
+            moved = len(victims)
+        del self.remote_pools[donor]
+        del self._remote_free[donor]
+        # donor stays in _donors so indices of others remain stable
+        return moved
+
+    # ------------------------------------------------------------------
+    # allocation
+    # ------------------------------------------------------------------
+    def allocate(self, n: int, prefer: int = LOCAL) -> np.ndarray:
+        """Allocate n logical pages (preferred tier first, then fallbacks)."""
+        free_lp = np.nonzero(self.page_table[:, 0] == -1)[0]
+        if len(free_lp) < n:
+            raise MemoryError(f"{self.name}: out of logical pages")
+        lps = free_lp[:n]
+        for lp in lps:
+            tier, slot, donor = self._take_slot(prefer)
+            self.page_table[lp] = (tier, slot, donor)
+        return lps
+
+    def free(self, lps: Sequence[int]):
+        for lp in lps:
+            tier, slot, donor = self.page_table[lp]
+            if tier == LOCAL:
+                self._free_local.append(int(slot))
+            elif tier == HOST:
+                self._free_host.append(int(slot))
+            elif tier == REMOTE:
+                self._remote_free[self._donors[donor]].append(int(slot))
+            self.page_table[lp] = (-1, -1, -1)
+
+    def _take_slot(self, prefer: int = LOCAL) -> Tuple[int, int, int]:
+        order = {LOCAL: [LOCAL, REMOTE, HOST], REMOTE: [REMOTE, HOST, LOCAL],
+                 HOST: [HOST, REMOTE, LOCAL]}[prefer]
+        for tier in order:
+            if tier == LOCAL and self._free_local:
+                return LOCAL, self._free_local.pop(), -1
+            if tier == REMOTE:
+                for di, d in enumerate(self._donors):
+                    if d in self._remote_free and self._remote_free[d]:
+                        return REMOTE, self._remote_free[d].pop(), di
+            if tier == HOST and self._free_host:
+                return HOST, self._free_host.pop(), -1
+        raise MemoryError(f"{self.name}: all tiers full")
+
+    # ------------------------------------------------------------------
+    # data access
+    # ------------------------------------------------------------------
+    def write_local(self, lps: Sequence[int], data: jnp.ndarray):
+        """Write page payloads for LOCAL-resident logical pages."""
+        slots = self._slots_of(lps, LOCAL)
+        self.local_pool = kv_ops.scatter_pages(
+            self.local_pool, data.astype(self.dtype), jnp.asarray(slots, jnp.int32))
+
+    def write(self, lps: Sequence[int], data: jnp.ndarray, *, meter: bool = True):
+        """Write page payloads wherever the pages live. Non-local groups are
+        one coalesced transfer each (metered): data is already contiguous, so
+        this is the staging-buffer -> donor/host leg of a page-out."""
+        data = data.astype(self.dtype)
+        rows = self.page_table[np.asarray(lps, np.int64)]
+        for tier in (LOCAL, REMOTE, HOST):
+            idx = np.nonzero(rows[:, 0] == tier)[0]
+            if not len(idx):
+                continue
+            slots = rows[idx, 1].astype(np.int32)
+            part = data[idx]
+            if tier == LOCAL:
+                self.local_pool = kv_ops.scatter_pages(
+                    self.local_pool, part, jnp.asarray(slots))
+                continue
+            if tier == REMOTE:
+                for di in np.unique(rows[idx, 2]):
+                    sub = idx[rows[idx, 2] == di]
+                    d = self._donors[int(di)]
+                    self.remote_pools[d] = kv_ops.scatter_pages(
+                        self.remote_pools[d], data[sub],
+                        jnp.asarray(rows[sub, 1].astype(np.int32)))
+                    if meter:
+                        self.meter.record(data[sub].nbytes, REMOTE, len(sub))
+            else:
+                self.host_pool[slots] = np.asarray(part)
+                if meter:
+                    self.meter.record(part.nbytes, HOST, len(idx))
+
+    def read(self, lps: Sequence[int], *, meter: bool = False) -> jnp.ndarray:
+        """Gather page payloads regardless of tier (does not migrate).
+        meter=True prices the non-local groups as coalesced page-in
+        transfers (the restore leg of a context switch)."""
+        rows = self.page_table[np.asarray(lps, np.int64)]
+        out = []
+        for lp in lps:
+            tier, slot, donor = self.page_table[lp]
+            if tier == LOCAL:
+                out.append(self.local_pool[slot])
+            elif tier == REMOTE:
+                out.append(self.remote_pools[self._donors[donor]][slot])
+            else:
+                out.append(jnp.asarray(self.host_pool[slot]))
+        if meter:
+            for tier in (REMOTE, HOST):
+                idx = np.nonzero(rows[:, 0] == tier)[0]
+                if len(idx):
+                    self.meter.record(len(idx) * self.page_bytes, tier, len(idx))
+        return jnp.stack(out)
+
+    def local_slots_of(self, lps: Sequence[int]) -> np.ndarray:
+        return self._slots_of(lps, LOCAL)
+
+    def _slots_of(self, lps, tier) -> np.ndarray:
+        rows = self.page_table[np.asarray(lps, np.int64)]
+        if not (rows[:, 0] == tier).all():
+            bad = [int(l) for l, r in zip(lps, rows) if r[0] != tier]
+            raise ValueError(f"pages {bad} not in tier {TIER_NAMES[tier]}")
+        return rows[:, 1].astype(np.int32)
+
+    # ------------------------------------------------------------------
+    # migration (the AQUA mechanism)
+    # ------------------------------------------------------------------
+    def ensure_local(self, lps: Sequence[int]):
+        """Page-in: make all listed logical pages LOCAL (coalesced per tier)."""
+        lps = np.asarray(lps, np.int64)
+        rows = self.page_table[lps]
+        for tier in (REMOTE, HOST):
+            sel = lps[rows[:, 0] == tier]
+            if len(sel):
+                self._move(sel, LOCAL)
+
+    def offload(self, lps: Sequence[int], *, prefer: int = REMOTE):
+        """Page-out LOCAL pages to the fast remote tier (host as fallback)."""
+        lps = np.asarray(lps, np.int64)
+        rows = self.page_table[lps]
+        sel = lps[rows[:, 0] == LOCAL]
+        if len(sel):
+            self._move(sel, prefer)
+
+    def _move(self, lps: np.ndarray, dst_tier: int):
+        """Coalesced migration of a batch of pages between tiers."""
+        # group by (source tier, donor) so each group is ONE gather + transfer
+        rows = self.page_table[lps]
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for lp, (tier, slot, donor) in zip(lps, rows):
+            groups.setdefault((int(tier), int(donor)), []).append(int(lp))
+        for (src_tier, src_donor), group in groups.items():
+            slots = self.page_table[group, 1].astype(np.int32)
+            # 1) coalescing gather into a contiguous staging buffer
+            if src_tier == LOCAL:
+                staging = kv_ops.gather_pages(self.local_pool, jnp.asarray(slots))
+                for s in slots:
+                    self._free_local.append(int(s))
+            elif src_tier == REMOTE:
+                donor_name = self._donors[src_donor]
+                staging = kv_ops.gather_pages(self.remote_pools[donor_name],
+                                              jnp.asarray(slots))
+                for s in slots:
+                    self._remote_free[donor_name].append(int(s))
+            else:
+                staging = jnp.asarray(self.host_pool[slots])
+                for s in slots:
+                    self._free_host.append(int(s))
+            nbytes = staging.nbytes
+            # 2) one large message over the appropriate link (metered)
+            transfer_tier = REMOTE if (src_tier == REMOTE or dst_tier == REMOTE) else HOST
+            if dst_tier != src_tier:
+                self.meter.record(nbytes, transfer_tier, len(group))
+            # 3) scatter into destination slots
+            new_rows = []
+            if dst_tier == LOCAL:
+                dst_slots = [self._free_local.pop() for _ in group]
+                self.local_pool = kv_ops.scatter_pages(
+                    self.local_pool, staging, jnp.asarray(dst_slots, jnp.int32))
+                new_rows = [(LOCAL, s, -1) for s in dst_slots]
+            elif dst_tier == REMOTE:
+                placed = 0
+                for di, d in enumerate(self._donors):
+                    free = self._remote_free.get(d, [])
+                    take = min(len(free), len(group) - placed)
+                    if take <= 0:
+                        continue
+                    dst_slots = [free.pop() for _ in range(take)]
+                    self.remote_pools[d] = kv_ops.scatter_pages(
+                        self.remote_pools[d], staging[placed:placed + take],
+                        jnp.asarray(dst_slots, jnp.int32))
+                    new_rows += [(REMOTE, s, di) for s in dst_slots]
+                    placed += take
+                if placed < len(group):          # remote full -> host fallback
+                    rest = staging[placed:]
+                    dst_slots = [self._free_host.pop() for _ in range(len(group) - placed)]
+                    self.host_pool[np.asarray(dst_slots)] = np.asarray(rest)
+                    new_rows += [(HOST, s, -1) for s in dst_slots]
+            else:
+                dst_slots = [self._free_host.pop() for _ in group]
+                self.host_pool[np.asarray(dst_slots)] = np.asarray(staging)
+                new_rows = [(HOST, s, -1) for s in dst_slots]
+            for lp, row in zip(group, new_rows):
+                self.page_table[lp] = row
+
+    # ------------------------------------------------------------------
+    def tier_counts(self) -> Dict[str, int]:
+        t = self.page_table[:, 0]
+        return {TIER_NAMES[k]: int((t == k).sum()) for k in (LOCAL, REMOTE, HOST)}
+
+    @property
+    def local_free(self) -> int:
+        return len(self._free_local)
+
+    @property
+    def remote_free(self) -> int:
+        return sum(len(v) for v in self._remote_free.values())

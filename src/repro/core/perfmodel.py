@@ -1,0 +1,146 @@
+"""Calibrated analytical performance model.
+
+Two hardware profiles:
+  * ``A100_NVLINK``  — the paper's testbed (8x A100-80G, NVLink/NVSwitch,
+    PCIe-attached host DRAM). Used to reproduce the paper's figures
+    quantitatively (Fig. 1/3a/7/9/10/12/13).
+  * ``TPU_V5E``      — the port target (per-chip constants from the brief:
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI). Used for the
+    roofline analysis and the TPU-constant variants of each benchmark.
+
+The interconnect model is latency + bandwidth: t(s) = alpha + s / B_peak, so
+effective bandwidth  s / t(s)  reproduces the paper's Fig. 3a shape — tiny
+messages see almost no benefit over PCIe, and the NVLink curve crosses
+100 GB/s around 2 MB, reaching ~250 GB/s for large buffers. This is the
+quantitative basis of the AQUA TENSORS coalescing requirement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    name: str
+    peak_bw: float          # bytes/s
+    latency: float          # s per message
+
+    def time(self, nbytes: float, n_messages: int = 1) -> float:
+        return n_messages * self.latency + nbytes / self.peak_bw
+
+    def effective_bw(self, message_bytes: float) -> float:
+        return message_bytes / self.time(message_bytes)
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops_peak: float       # FLOP/s (bf16)
+    hbm_bw: float           # bytes/s
+    hbm_bytes: float        # device memory capacity
+    fabric: LinkModel       # scale-up interconnect (NVLink / ICI)
+    host_link: LinkModel    # PCIe path to host DRAM
+    mfu: float = 0.45       # achievable fraction of peak in serving kernels
+    membw_util: float = 0.75
+
+    def pod_slice(self, n: int) -> "HardwareProfile":
+        """Aggregate n TP-sharded chips into one logical serving unit (a 34B
+        model does not fit one 16 GB v5e chip; it is served by a TP group).
+        Compute/HBM scale with n; each chip pages its own shard concurrently,
+        so aggregate fabric/host bandwidth scales too (latency does not)."""
+        if n == 1:
+            return self
+        return HardwareProfile(
+            f"{self.name}x{n}", self.flops_peak * n, self.hbm_bw * n,
+            self.hbm_bytes * n,
+            LinkModel(self.fabric.name, self.fabric.peak_bw * n,
+                      self.fabric.latency),
+            LinkModel(self.host_link.name, self.host_link.peak_bw * n,
+                      self.host_link.latency),
+            self.mfu, self.membw_util)
+
+
+# Paper testbed: A100-80G SXM. Fig. 3a calibration: 100 GB/s @ 2 MB, ~250 GB/s peak
+#  => alpha = 2e6/100e9 - 2e6/250e9 = 12 us.
+A100_NVLINK = HardwareProfile(
+    name="a100-nvlink",
+    flops_peak=312e12,
+    hbm_bw=2.0e12,
+    hbm_bytes=80e9,
+    fabric=LinkModel("nvlink", 250e9, 12e-6),
+    host_link=LinkModel("pcie4", 25e9, 10e-6),
+)
+
+# TPU v5e (target): constants from the brief.
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e",
+    flops_peak=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16e9,
+    fabric=LinkModel("ici", 50e9, 5e-6),
+    host_link=LinkModel("pcie-host", 16e9, 20e-6),
+)
+
+PROFILES = {p.name: p for p in (A100_NVLINK, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# Model-level cost formulas
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModelCost:
+    """Analytic per-model serving costs (dense-equivalent active params)."""
+    n_params: float            # active parameters per token
+    kv_bytes_per_token: float  # whole-stack KV bytes per cached token
+    dtype_bytes: int = 2
+
+    @staticmethod
+    def from_config(cfg) -> "ModelCost":
+        from repro.configs.base import ModelConfig  # noqa
+        hd = cfg.resolved_head_dim
+        if cfg.mla is not None:
+            kvtok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * cfg.n_layers * 2
+        elif cfg.family == "ssm":
+            kvtok = 0.0                      # O(1) state, no per-token cache
+        else:
+            n_attn = sum(1 for i in range(cfg.n_layers) if cfg.is_attention_layer(i))
+            kvtok = 2 * cfg.n_kv_heads * hd * n_attn * 2
+        n_active = cfg.param_count()
+        if cfg.moe is not None:
+            m = cfg.moe
+            fe = m.d_ff_expert or cfg.d_ff
+            glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+            n_moe_layers = cfg.n_layers // m.moe_every
+            inactive = (m.n_experts - m.top_k) * glu * cfg.d_model * fe * n_moe_layers
+            n_active -= inactive
+        return ModelCost(float(n_active), float(kvtok))
+
+    def prefill_time(self, hw: HardwareProfile, n_tokens: int) -> float:
+        return 2.0 * self.n_params * n_tokens / (hw.flops_peak * hw.mfu)
+
+    def decode_step_time(self, hw: HardwareProfile, batch: int,
+                         ctx_tokens: float, weight_bytes: float) -> float:
+        """One token for `batch` sequences with mean context `ctx_tokens`."""
+        t_flops = 2.0 * self.n_params * batch / (hw.flops_peak * hw.mfu)
+        kv_read = self.kv_bytes_per_token * ctx_tokens * batch
+        t_mem = (weight_bytes + kv_read) / (hw.hbm_bw * hw.membw_util)
+        return max(t_flops, t_mem)
+
+    def kv_bytes(self, n_tokens: float) -> float:
+        return self.kv_bytes_per_token * n_tokens
+
+
+def context_switch_time(hw: HardwareProfile, kv_bytes: float, *,
+                        tier: str, coalesced: bool = True,
+                        n_fragments: int = 1) -> float:
+    """Time to page a prompt's context in or out.
+
+    tier: 'fabric' (AQUA: neighbor HBM over NVLink/ICI) or 'host' (DRAM/PCIe).
+    coalesced=False models the naive path the paper measured first: one message
+    per KV fragment (layer x page), which collapses to latency-bound transfers
+    (Fig. 3a) — the motivation for the kv_gather kernel.
+    """
+    link = hw.fabric if tier == "fabric" else hw.host_link
+    msgs = max(1, n_fragments) if not coalesced else 1
+    gather_overhead = kv_bytes / (hw.hbm_bw * hw.membw_util) if coalesced else 0.0
+    return gather_overhead + link.time(kv_bytes, n_messages=msgs)

@@ -1,0 +1,115 @@
+"""Blocked flash attention Pallas TPU kernel (train / prefill hot spot).
+
+Grid: (B*H, num_q_blocks, num_k_blocks); the k axis is minor-most so the f32
+VMEM scratch accumulators (acc, running max m, running sum l) persist across
+k iterations of one (bh, q_block) cell. GQA is handled in the k/v index maps
+(q head -> kv head via integer division), so KV tiles are fetched once per
+query-head group member without materializing repeated heads in HBM.
+
+Block sizes default to (128, 512): MXU-aligned (multiples of 128 on the
+contracting/lane dims) and small enough that the working set
+  q(128,hd) + k(512,hd) + v(512,hd) + acc(128,hd) f32
+fits VMEM comfortably for hd <= 256 (<= ~1.3 MB at hd=256).
+Causal/windowed cells are skipped *in-index-space* (the kernel computes the
+mask from absolute positions), so sliding-window layers do O(S*W) work.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_k: int, seq_q: int,
+                  seq_k: int, causal: bool, window: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (seq_k - seq_q)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    mask &= k_pos < seq_k
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 512, interpret: bool = False):
+    """q: (B, Sq, H, hd); k,v: (B, Sk, K, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+
+    nq = pl.cdiv(Sq, block_q)
+    nk = pl.cdiv(Sk, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_q=Sq, seq_k=Sk, causal=causal, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, iq, ik, g=G: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

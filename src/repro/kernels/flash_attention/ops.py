@@ -1,0 +1,24 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+On CPU (this container) the kernel executes in interpret mode for validation;
+on TPU it compiles via Mosaic. The dry-run model path uses the XLA einsum
+implementation so ``cost_analysis`` reflects true FLOPs (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 512):
+    return _kernel(q, k, v, causal=causal, window=window,
+                   block_q=block_q, block_k=block_k, interpret=_on_cpu())

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blocked causal/windowed GQA flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B, Sq, H, hd); k,v: (B, Sk, K, hd); H % K == 0 -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + (Sk - Sq)      # right-aligned queries
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)

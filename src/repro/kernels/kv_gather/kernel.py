@@ -1,0 +1,76 @@
+"""AQUA coalescing gather/scatter Pallas kernel.
+
+The paper's custom CUDA gather/scatter kernels (§5 "Small transfers are slow
+over NVlinks") exist because the fabric only reaches peak bandwidth for large
+messages: scattered KV pages of the prompts being context-switched must be
+packed into ONE contiguous staging buffer before the inter-accelerator copy,
+and scattered back on the way in.
+
+TPU adaptation: the kernel is a pure DMA engine — the scalar-prefetched page
+id list drives the input (gather) or output (scatter) BlockSpec index map, so
+Mosaic turns each grid step into an HBM->HBM DMA of one page, double-buffered
+across steps. The kernel body is a copy; no compute units are used, matching
+the paper's observation (Fig. 11) that providers see <5% interference.
+
+The staging buffer is then moved between devices by a single large
+``jax.lax.ppermute`` (see repro/distributed/collectives.py), which is the ICI
+analogue of the paper's single large cudaMemcpyPeer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(ids_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def gather_pages(pool, page_ids, *, interpret: bool = False):
+    """pool: (P, page, d); page_ids: (n,) int32 -> staging (n, page, d)."""
+    P, page, d = pool.shape
+    n = page_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, page, d), lambda i, ids: (ids[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, page, d), lambda i, ids: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, page, d), pool.dtype),
+        interpret=interpret,
+    )(page_ids, pool)
+
+
+def scatter_pages(pool, staging, page_ids, *, interpret: bool = False):
+    """Write staging (n, page, d) into pool (P, page, d) at page_ids; returns pool.
+
+    Uses input-output aliasing so the pool is updated in place on TPU (no
+    second copy of a multi-GB page pool).
+    """
+    P, page, d = pool.shape
+    n = page_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                         # pool (aliased)
+            pl.BlockSpec((1, page, d), lambda i, ids: (i, 0, 0)),      # staging
+        ],
+        out_specs=pl.BlockSpec((1, page, d), lambda i, ids: (ids[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},       # pool (arg idx incl. scalar) -> out 0
+        interpret=interpret,
+    )(page_ids, pool, staging)
+
+
+def _scatter_kernel(ids_ref, pool_ref, staging_ref, out_ref):
+    out_ref[...] = staging_ref[...]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the AQUA coalescing gather/scatter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_pages_ref(pool, page_ids):
+    """pool: (P, page, d); page_ids: (n,) -> staging (n, page, d)."""
+    return pool[page_ids]
+
+
+def scatter_pages_ref(pool, staging, page_ids):
+    """Inverse: write staging (n, page, d) back into pool at page_ids."""
+    return pool.at[page_ids].set(staging)

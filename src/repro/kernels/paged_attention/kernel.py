@@ -1,0 +1,98 @@
+"""Paged decode attention Pallas TPU kernel (serving hot spot).
+
+The block table is passed as a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``) so the K/V BlockSpec index maps can resolve
+``block_tables[b, i]`` **before** the DMA is issued — each grid step streams
+exactly one page per kv head from the HBM pool into VMEM, which is precisely
+the access pattern the paged pool is laid out for. Online softmax accumulators
+live in VMEM scratch and persist across the page-iteration (minor-most) grid
+axis. Pages past ``lengths[b]`` are masked (their DMA still targets page id 0,
+a resident dummy, so no out-of-bounds access happens).
+
+VMEM working set per step: q (G, hd) + k,v (page, hd) + acc (G, hd) f32
+≈ 0.3 MB at page=64, hd=256 — far below the ~16 MB VMEM budget, leaving room
+for the double-buffered page DMAs Mosaic inserts automatically.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, page: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (page, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G,page)
+    pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == npages - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    scale: float | None = None, interpret: bool = False):
+    """q: (B,H,hd); k/v_pages: (K,P,page,hd); block_tables: (B,pps); lengths (B,)."""
+    B, H, hd = q.shape
+    K, P, page, _ = k_pages.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, K, G, hd)
+    kernel = functools.partial(_paged_kernel, page=page, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block_tables, lengths
+        grid=(B, K, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd), lambda b, h, i, bt, ln: (h, bt[b, i], 0, 0)),
+            pl.BlockSpec((1, 1, page, hd), lambda b, h, i, bt, ln: (h, bt[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, block_tables, lengths):
+    return _kernel(q, k_pages, v_pages, block_tables, lengths,
+                   interpret=_on_cpu())

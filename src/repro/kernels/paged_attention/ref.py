@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                        scale: float | None = None):
+    """Decode attention over a paged KV pool.
+
+    q:            (B, H, hd)            one query token per sequence
+    k_pages/v_pages: (K, P, page, hd)   global page pool per kv head
+    block_tables: (B, pages_per_seq) int32  page ids per sequence
+    lengths:      (B,) int32            tokens present per sequence
+    -> (B, H, hd)
+    """
+    B, H, hd = q.shape
+    K, P, page, _ = k_pages.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # gather per-sequence K/V: (B, K, pps*page, hd)
+    kg = k_pages[:, block_tables]            # (K, B, pps, page, hd)
+    vg = v_pages[:, block_tables]
+    kg = jnp.moveaxis(kg, 1, 0).reshape(B, K, pps * page, hd)
+    vg = jnp.moveaxis(vg, 1, 0).reshape(B, K, pps * page, hd)
+
+    qg = q.reshape(B, K, G, hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, kg).astype(jnp.float32) * scale
+    pos = jnp.arange(pps * page)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, vg)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the chunked RWKV-6 WKV kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_wkv.kernel import wkv6 as _kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, state, chunk: int = 64):
+    return _kernel(r, k, v, w, u, state, chunk=chunk, interpret=_on_cpu())

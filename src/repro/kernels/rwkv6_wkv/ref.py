@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential scan)."""
+from repro.layers.rwkv6 import wkv6_ref  # noqa: F401  (the oracle lives with the layer)

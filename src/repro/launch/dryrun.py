@@ -1,0 +1,190 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell against the production mesh, record memory/cost analysis and the
+optimized HLO for the roofline pass.
+
+MUST be first: jax locks the device count on first init, and only the
+dry-run wants 512 placeholder host devices (smoke tests and benches see 1).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ALL_SHAPES, SHAPES_BY_NAME, get_config, list_archs,
+                           shape_applicable)
+from repro.distributed.sharding import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_loop import TrainConfig, make_train_step
+
+ASSIGNED = [
+    "internvl2-1b", "rwkv6-3b", "gemma-7b", "qwen1.5-0.5b", "minicpm-2b",
+    "gemma3-12b", "deepseek-v2-lite-16b", "dbrx-132b", "whisper-tiny",
+    "jamba-v0.1-52b",
+]
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = get_config(arch)
+    return api.make_inputs(cfg, SHAPES_BY_NAME[shape_name])
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, fsdp=True, remat=True,
+               overrides=None):
+    """Returns (jitted_fn, arg_specs tuple) for one cell."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    # Serving: FSDP re-gathers weights EVERY decode step (HC2: 963 all-gathers
+    # on the rwkv6 decode cell) — keep weights TP-resident unless they don't
+    # fit (dbrx-132b: 264 GB bf16 / 16-way TP = 16.5 GB > HBM needs FSDP).
+    if shape.kind != "train" and cfg.param_count() * 2 / 16 <= 4e9:
+        fsdp = False
+    rules = ShardingRules(mesh, cfg, fsdp=fsdp)
+    pspecs = api.param_specs(cfg)
+    pshard = rules.params(pspecs)
+    inputs = api.make_inputs(cfg, shape)
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        ocfg = AdamWConfig(lr=3e-4)
+        ospecs = jax.eval_shape(lambda p: adamw_init(p, ocfg), pspecs)
+        oshard = rules.opt_state(ospecs, pspecs)
+        shard_axes = {"dp": rules.dp, "tp": "model", "mesh": mesh, "sp": True}
+        # 4 microbatches of 64 sequences: grad accumulation bounds activation
+        # memory (temp/dev) at production batch 256 (see EXPERIMENTS.md §Perf)
+        step = make_train_step(cfg, ocfg, TrainConfig(micro_batches=4,
+                                                      remat=remat,
+                                                      shard_axes=shard_axes))
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, rules.batch(inputs, B)),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn, (pspecs, ospecs, inputs)
+
+    cache_specs = inputs.pop("cache")
+    cshard = rules.cache(cache_specs, B)
+    shard_axes = {"dp": rules.dp, "tp": "model", "mesh": mesh}
+    if shape.kind == "prefill":
+        tokens = inputs.pop("tokens")
+        extras = inputs
+
+        def prefill_fn(params, tokens, cache, extras):
+            return api.prefill(params, cfg, tokens, cache,
+                               shard_axes=shard_axes, **extras)
+
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(pshard, rules.batch(tokens, B), cshard,
+                                   rules.batch(extras, B)),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))
+        return fn, (pspecs, tokens, cache_specs, extras)
+
+    # decode
+    def decode_fn(params, cache, tokens, pos):
+        return api.decode_step(params, cfg, cache, tokens, pos,
+                               shard_axes=shard_axes)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(pshard, cshard,
+                               rules.batch(inputs["tokens"], B),
+                               rules.batch(inputs["pos"], B)),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(1,))
+    return fn, (pspecs, cache_specs, inputs["tokens"], inputs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             save_hlo: bool = True, fsdp=True, remat=True, overrides=None,
+             tag: str = "") -> dict:
+    mesh_name = "pod512" if multi_pod else "pod256"
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.monotonic()
+    try:
+        fn, specs = build_cell(arch, shape_name, mesh, fsdp=fsdp, remat=remat,
+                               overrides=overrides)
+        with mesh:
+            lowered = fn.lower(*specs)
+            t_lower = time.monotonic() - t0
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+        mem = {k: int(getattr(ma, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")}
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), memory=mem,
+                   cost={k: float(v) for k, v in ca.items()
+                         if isinstance(v, (int, float))})
+        print(f"[dryrun] {mesh_name} {arch} {shape_name} {tag} OK "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"args/dev={mem['argument_size_in_bytes']/1e9:.2f}GB "
+              f"temp/dev={mem['temp_size_in_bytes']/1e9:.2f}GB "
+              f"flops={rec['cost'].get('flops', 0):.3e}")
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            stem = f"{arch}_{shape_name}{('_' + tag) if tag else ''}"
+            with gzip.open(os.path.join(out_dir, stem + ".hlo.gz"),
+                           "wt") as f:
+                f.write(compiled.as_text())
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {mesh_name} {arch} {shape_name} FAILED: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["pod256", "pod512", "both"])
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = {"pod256": [False], "pod512": [True],
+              "both": [False, True]}[args.mesh]
+
+    for multi_pod in meshes:
+        mesh_name = "pod512" if multi_pod else "pod256"
+        out_dir = os.path.join(args.out, mesh_name)
+        os.makedirs(out_dir, exist_ok=True)
+        for arch in archs:
+            for shape in shapes:
+                rec_path = os.path.join(out_dir, f"{arch}_{shape}.json")
+                if args.skip_existing and os.path.exists(rec_path):
+                    continue
+                rec = run_cell(arch, shape, multi_pod=multi_pod,
+                               out_dir=out_dir, save_hlo=not args.no_hlo)
+                with open(rec_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Axes:
+  pod    2   data-parallel across pods (gradient all-reduce crosses DCI)
+  data  16   data parallel / FSDP within a pod
+  model 16   tensor/expert parallel within a pod (highest-bandwidth ICI ring)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_devices: int = 1):
+    """A tiny mesh over however many (CPU) devices exist — for tests."""
+    n = min(n_devices, len(jax.devices()))
+    return jax.make_mesh((1, n, 1), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def dp_axes(mesh) -> tuple:
+    """The axes a global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,64 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+
+On a real TPU slice this runs under the production mesh with the dry-run's
+sharding rules; on CPU (--smoke) it trains the reduced config unsharded.
+Restart-safe: re-invoking with the same --ckpt-dir resumes from the newest
+COMMITTED checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", choices=["cosine", "wsd"], default="cosine")
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_config
+    from repro.training.data import DataConfig
+    from repro.training.optimizer import (AdamWConfig, cosine_schedule,
+                                          wsd_schedule)
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    sched = (wsd_schedule if args.schedule == "wsd" else cosine_schedule)(
+        args.lr, warmup=max(args.steps // 20, 1), total=args.steps)
+    dcfg = DataConfig(seed=args.seed, batch=args.batch, seq_len=args.seq)
+    ocfg = AdamWConfig(lr=sched)
+    tcfg = TrainConfig(steps=args.steps, micro_batches=args.micro_batches,
+                       remat=args.remat, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every)
+
+    def on_step(step, stats):
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {float(stats['loss']):.4f}  "
+                  f"gnorm {float(stats['grad_norm']):.3f}  "
+                  f"lr {float(stats['lr']):.2e}", flush=True)
+
+    out = train(cfg, dcfg, ocfg, tcfg, seed=args.seed,
+                hooks={"on_step": on_step})
+    print(f"final loss: {out['losses'][-1]:.4f} "
+          f"(first: {out['losses'][0]:.4f}); "
+          f"straggler flags: {out['straggler_flags']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""GQA/MQA attention with full-sequence (train/prefill) and cached-decode paths.
+
+Features: grouped KV heads, RoPE, qk-norm (gemma3), attention-logit softcap,
+sliding-window masks, and ring-buffer KV caches for local (windowed) layers —
+a local layer's cache is only ``window`` slots, which is what makes the
+gemma3 long_500k cell feasible (40/48 layers hold 1024 slots instead of 512k).
+
+``impl='xla'`` uses einsum attention (the dry-run path: cost_analysis then sees
+the true FLOPs); ``impl='pallas'`` routes to the flash/paged kernels (TPU target,
+validated in interpret mode in tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.core import apply_rope, init_linear, linear, qk_head_norm, trunc_normal
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. ``k``/``v``: (B, S_slots, n_kv, hd).
+
+    For full-attention layers S_slots = max_seq; for windowed layers S_slots =
+    window and the buffer is a ring indexed by ``pos % window``.
+    """
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, dt, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(params["wq"], x).reshape(B, T, cfg.n_heads, hd)
+    k = linear(params["wk"], x).reshape(B, T, cfg.n_kv_heads, hd)
+    v = linear(params["wv"], x).reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = qk_head_norm(params["q_norm"], q, cfg.rmsnorm_eps)
+        k = qk_head_norm(params["k_norm"], k, cfg.rmsnorm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q: (B,T,H,hd) k/v: (B,S,K,hd) mask: broadcastable to (B,1,1,T,S).
+    """
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    q = q.reshape(B, T, K, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("btkgd,bskd->bkgts", q, k) * scale
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return ctx.reshape(B, T, H, hd)
+
+
+def _causal_mask(q_pos, k_pos, window: int):
+    """q_pos: (...,T) k_pos: (...,S) -> bool (...,1,1,T,S) mask."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    m &= k_pos[..., None, :] >= 0
+    return m[..., None, None, :, :]
+
+
+def attention_full(params, cfg: ModelConfig, x, *, window: int = 0,
+                   pos_offset=0, return_kv: bool = False):
+    """Training / prefill full-sequence causal attention."""
+    B, T, _ = x.shape
+    positions = pos_offset + jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    mask = _causal_mask(positions, positions, window)
+    ctx = _sdpa(cfg, q, k, v, mask)
+    out = linear(params["wo"], ctx.reshape(B, T, -1))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, seq: int, window: int = 0,
+                  dtype=None) -> KVCache:
+    slots = min(window, seq) if window > 0 else seq
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    shape = (batch, slots, cfg.n_kv_heads, hd)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def fill_kv_cache(cache: KVCache, k, v, window: int = 0) -> KVCache:
+    """Write prefill K/V (B,T,Hkv,hd) into slots [0,T) (or the ring tail)."""
+    T = k.shape[1]
+    slots = cache.k.shape[1]
+    if window > 0 and T > slots:
+        k, v = k[:, T - slots:], v[:, T - slots:]
+        # ring alignment: slot j holds position with pos % slots == j
+        roll = (T - slots) % slots
+        k = jnp.roll(k, roll, axis=1)
+        v = jnp.roll(v, roll, axis=1)
+        return KVCache(k.astype(cache.k.dtype), v.astype(cache.v.dtype))
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, 1)
+    return KVCache(ck, cv)
+
+
+def _write_slot(buf, new, slot):
+    """buf: (B,S,K,hd), new: (B,1,K,hd), slot: (B,) int."""
+    from repro.layers.core import select_update
+    return select_update(buf, new[:, 0], slot)
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache: KVCache, pos,
+                     *, window: int = 0) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode. x: (B,1,d); pos: scalar or (B,) current position."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1)[:, None] if pos.ndim
+                                 else pos[None, None], (B, 1))
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    slots = cache.k.shape[1]
+    is_ring = window > 0 and slots <= window
+    slot = positions[:, 0] % slots if is_ring else positions[:, 0]
+    ck = _write_slot(cache.k, k_new, slot)
+    cv = _write_slot(cache.v, v_new, slot)
+
+    j = jnp.arange(slots)
+    p = positions[:, :1]                                 # (B,1)
+    if is_ring:
+        # ring buffer: slot j holds k_pos = p - ((p - j) mod slots)
+        k_pos = p - ((p - j[None, :]) % slots)           # (B,S)
+    else:
+        k_pos = jnp.broadcast_to(j[None, :], (B, slots))
+    mask = _causal_mask(p, k_pos, window)                # (B,1,1,1,S)
+    ctx = _sdpa(cfg, q, ck, cv, mask)
+    out = linear(params["wo"], ctx.reshape(B, 1, -1))
+    return out, KVCache(ck, cv)

@@ -1,0 +1,157 @@
+"""Core layers: norms, rotary embeddings, linear/MLP, embeddings.
+
+Pure-functional: ``init_*`` build param pytrees (nested dicts of jnp arrays),
+``apply``-style functions are stateless. Everything is scan-stackable (params may
+carry a leading layer-group axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def select_update(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray):
+    """Write ``new[b]`` into ``buf[b, slot[b]]`` via a one-hot select.
+
+    Equivalent to ``buf.at[arange(B), slot].set(new)`` but avoids XLA's bf16
+    scatter lowering, which round-trips the ENTIRE buffer through f32 — on a
+    32k-slot stacked KV cache that was 26 GB of phantom traffic per decode
+    step (HC3, EXPERIMENTS.md §Perf). The select fuses into a masked copy.
+    """
+    B, S = buf.shape[:2]
+    oh = jnp.arange(S, dtype=slot.dtype)[None, :] == slot[:, None]   # (B,S)
+    oh = oh.reshape(oh.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(oh, new[:, None].astype(buf.dtype), buf)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}       # gemma-style (1 + w) param
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def qk_head_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """RMS norm over the head_dim of (..., H, hd) tensors (gemma3 qk-norm)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP
+# ---------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False,
+                std: Optional[float] = None) -> dict:
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": trunc_normal(key, (d_in, d_out), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def _act(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu" or name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.dtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    glu = cfg.activation in ("swiglu", "geglu")
+    p = {"up": init_linear(k1, d, f, dt),
+         "down": init_linear(k2, f, d, dt, std=1.0 / math.sqrt(f))}
+    if glu:
+        p["gate"] = init_linear(k3, d, f, dt)
+    return p
+
+
+def mlp(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    up = linear(params["up"], x)
+    if "gate" in params:
+        h = _act(cfg.activation, linear(params["gate"], x)) * up
+    else:
+        h = _act(cfg.activation, up)
+    return linear(params["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+def init_embedding(key, cfg: ModelConfig) -> dict:
+    dt = cfg.dtype()
+    p = {"tok": trunc_normal(key, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = trunc_normal(jax.random.fold_in(key, 1),
+                                 (cfg.d_model, cfg.vocab_size),
+                                 1.0 / math.sqrt(cfg.d_model), dt)
+    return p
+
+
+def embed(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = params["tok"].astype(cfg.compute_dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ params["tok"].astype(x.dtype).T
+    else:
+        logits = x @ params["head"].astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,151 @@
+"""Mamba-1 selective SSM block (used by the Jamba hybrid).
+
+Training/prefill use a chunked associative scan (memory O(B*chunk*di*ds) per
+chunk instead of O(B*T*di*ds)); decode is a single recurrence step over the
+per-request state — the "dynamic context" AQUA pages for hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.core import init_linear, linear, trunc_normal
+
+MAMBA_CHUNK = 128
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray    # (B, di, ds) f32
+    conv: jnp.ndarray   # (B, d_conv-1, di) last inputs for the causal conv
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.mamba_expand * cfg.d_model
+    dtr = s.mamba_dt_rank or cfg.d_model // 16
+    return di, s.mamba_d_state, s.mamba_d_conv, dtr
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    di, ds, dc, _ = _dims(cfg)
+    return MambaState(jnp.zeros((batch, di, ds), jnp.float32),
+                      jnp.zeros((batch, dc - 1, di), dtype))
+
+
+def init_mamba_layer(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, ds, dc, dtr = _dims(cfg)
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 5)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dt),
+        "conv_w": trunc_normal(ks[1], (dc, di), 0.5, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * ds, dt),
+        "dt_proj": init_linear(ks[3], dtr, di, dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),   # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, d, dt),
+    }
+
+
+def _ssm_inputs(p, cfg, xc):
+    """xc: (B,T,di) post-conv activations -> dt, B, C."""
+    _, ds, _, dtr = _dims(cfg)
+    bcd = linear(p["x_proj"], xc)
+    dt_in, Bm, Cm = jnp.split(bcd, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_in).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))       # (B,T,di)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _chunked_ssm_scan(dt, Bm, Cm, x, A, h0):
+    """Selective scan, chunked. dt,x: (B,T,di); Bm,Cm: (B,T,ds); A: (di,ds).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+
+    The discretized transition tensors a,b (B,ck,di,ds) are computed *inside*
+    the chunk body — materializing them over the full T is O(T*di*ds) memory
+    (265 GB/device on the jamba train cell; EXPERIMENTS.md §Perf) while the
+    per-chunk working set is O(ck*di*ds).
+    """
+    B, T, di = x.shape
+    ds = Bm.shape[-1]
+    nchunk = T // MAMBA_CHUNK if T % MAMBA_CHUNK == 0 and T >= MAMBA_CHUNK else 1
+    ck = T // nchunk
+
+    def chunk_step(h, inp):
+        dt_c, B_c, C_c, x_c = inp                                 # (B,ck,*)
+        a_c = jnp.exp(dt_c[..., None] * A[None, None])            # (B,ck,di,ds)
+        b_c = (dt_c * x_c.astype(jnp.float32))[..., None] * B_c[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+        aa, bb = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+        h_all = aa * h[:, None] + bb                              # (B,ck,di,ds)
+        y = jnp.einsum("btds,bts->btd", h_all, C_c)
+        return h_all[:, -1], y
+
+    def chunked(v):
+        return jnp.moveaxis(v.reshape((B, nchunk, ck) + v.shape[2:]), 1, 0)
+
+    h, ys = jax.lax.scan(chunk_step, h0,
+                         (chunked(dt), chunked(Bm), chunked(Cm), chunked(x)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, di)
+    return y, h
+
+
+def _causal_conv(p, x, conv_prev):
+    """Depthwise causal conv over time. x: (B,T,di); conv_prev: (B,dc-1,di)."""
+    dc = p["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_prev.astype(x.dtype), x], axis=1)  # (B,T+dc-1,di)
+    w = p["conv_w"].astype(x.dtype)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dc))
+    return out + p["conv_b"].astype(x.dtype), xp[:, -(dc - 1):]
+
+
+def mamba_forward(p, cfg: ModelConfig, x, state: MambaState, shard_axes=None
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    """Full-sequence forward. x: (B,T,d)."""
+    di, ds, dc, dtr = _dims(cfg)
+    xz = linear(p["in_proj"], x)
+    if shard_axes:
+        # keep the expanded inner dim (di = 2*d_model) TP-sharded through the
+        # conv/scan chain — the scan working set is O(ck*di*ds) per device
+        from repro.models.losses import constrain
+        xz = constrain(xz, (shard_axes["dp"], None, shard_axes["tp"]))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = _causal_conv(p, x_in, state.conv)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    y, h = _chunked_ssm_scan(dt, Bm, Cm, xc, A, state.ssm)
+    y = (y + p["D"][None, None] * xc.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out_proj"], y * jax.nn.silu(z))
+    return out, MambaState(h, conv_tail.astype(state.conv.dtype))
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state: MambaState
+                 ) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token step. x: (B,1,d)."""
+    di, ds, dc, dtr = _dims(cfg)
+    xz = linear(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = _causal_conv(p, x_in, state.conv)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A[None])                       # (B,di,ds)
+    b = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = a * state.ssm + b
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None]
+    y = (y + p["D"][None, None] * xc.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out_proj"], y * jax.nn.silu(z))
+    return out, MambaState(h, conv_tail.astype(state.conv.dtype))

@@ -1,0 +1,131 @@
+"""Multi-head latent attention (DeepSeek-V2).
+
+Train/prefill use the non-absorbed form (materialize per-head K/V from the
+latent); decode uses **matrix absorption**: the cache holds only the rank-512
+latent + the shared 64-dim RoPE key per token (576 elements/token), and the
+query is absorbed through W_uk so attention runs directly in latent space.
+This is the arch whose offloaded pages are smallest — the AQUA coalescing
+insight (Fig. 3a) matters most here (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.core import apply_rope, init_linear, init_rmsnorm, linear, rms_norm
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # (B, S, kv_lora)   normalized latent
+    k_rope: jnp.ndarray  # (B, S, rope_dim)  shared roped key
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dt = cfg.dtype()
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_linear(ks[0], d, H * qd, dt),
+        "wdkv": init_linear(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "wuk": init_linear(ks[2], m.kv_lora_rank, H * m.qk_nope_head_dim, dt),
+        "wuv": init_linear(ks[3], m.kv_lora_rank, H * m.v_head_dim, dt),
+        "wo": init_linear(ks[4], H * m.v_head_dim, d, dt),
+    }
+    return p
+
+
+def _latents(params, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    c = linear(params["wdkv"], x)
+    c_kv, k_rope = c[..., : m.kv_lora_rank], c[..., m.kv_lora_rank:]
+    c_kv = rms_norm(params["kv_norm"], c_kv, cfg.rmsnorm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _queries(params, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    B, T, _ = x.shape
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = linear(params["wq"], x).reshape(B, T, cfg.n_heads, qd)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(params, cfg: ModelConfig, x, *, return_cache: bool = False):
+    """Non-absorbed full-sequence causal MLA (train / prefill)."""
+    m = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    positions = jnp.arange(T)[None, :]
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+
+    k_nope = linear(params["wuk"], c_kv).reshape(B, T, H, m.qk_nope_head_dim)
+    v = linear(params["wuv"], c_kv).reshape(B, T, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, T, H, m.qk_rope_head_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    mask = (jnp.arange(T)[None, :] <= jnp.arange(T)[:, None])[None, None]
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v)
+    out = linear(params["wo"], ctx.reshape(B, T, -1))
+    if return_cache:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> MLACache:
+    m = cfg.mla
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    return MLACache(jnp.zeros((batch, seq, m.kv_lora_rank), dt),
+                    jnp.zeros((batch, seq, m.qk_rope_head_dim), dt))
+
+
+def fill_mla_cache(cache: MLACache, c_kv, k_rope) -> MLACache:
+    c = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv.astype(cache.c_kv.dtype), 0, 1)
+    r = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope.astype(cache.k_rope.dtype), 0, 1)
+    return MLACache(c, r)
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache: MLACache, pos
+               ) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed single-token decode; cache is latent-space only."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1)[:, None] if pos.ndim
+                                 else pos[None, None], (B, 1))
+    from repro.layers.core import select_update
+    c_new, r_new = _latents(params, cfg, x, positions)
+    c_kv = select_update(cache.c_kv, c_new[:, 0], positions[:, 0])
+    k_rope = select_update(cache.k_rope, r_new[:, 0], positions[:, 0])
+
+    q_nope, q_rope = _queries(params, cfg, x, positions)      # (B,1,H,*)
+    # absorb: q_eff[h] = q_nope[h] @ W_uk[h]^T  -> latent space
+    wuk = params["wuk"]["w"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bthd,chd->bthc", q_nope, wuk)          # (B,1,H,kv_lora)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bthc,bsc->bhts", q_eff, c_kv)
+              + jnp.einsum("bthd,bsd->bhts", q_rope, k_rope)) * scale
+    S = c_kv.shape[1]
+    mask = (jnp.arange(S)[None, :] <= positions[:, :1])[:, None, None, :]  # (B,1,1,S)
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhts,bsc->bthc", probs, c_kv)        # (B,1,H,kv_lora)
+    wuv = params["wuv"]["w"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    ctx = jnp.einsum("bthc,chd->bthd", ctx_lat, wuv)           # (B,1,H,v_dim)
+    out = linear(params["wo"], ctx.reshape(B, 1, -1))
+    return out, MLACache(c_kv, k_rope)

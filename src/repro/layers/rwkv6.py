@@ -1,0 +1,213 @@
+"""RWKV-6 "Finch" layers: time-mix with data-dependent decay + channel-mix.
+
+Recurrence (per head, head_dim hd, state S in R^{hd x hd}):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T          (w_t = -exp(...) < 0)
+
+The XLA path runs a ``lax.scan`` over time (sequential; small HLO, trip-count
+accounted by the roofline parser). The TPU-target chunked kernel lives in
+``repro.kernels.rwkv6_wkv`` and is validated against :func:`wkv6_ref` here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.core import init_linear, linear, trunc_normal
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray       # (B, H, hd, hd)
+    tm_shift: jnp.ndarray  # (B, d)  previous token (time-mix)
+    cm_shift: jnp.ndarray  # (B, d)  previous token (channel-mix)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    hd = cfg.ssm.rwkv_head_dim
+    H = cfg.d_model // hd
+    return RWKVState(
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, cfg.d_model), dtype),
+        jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def init_rwkv_layer(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    hd = s.rwkv_head_dim
+    H = d // hd
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {
+            "mu_x": jnp.zeros((d,), dt),
+            "maa": jnp.zeros((5, d), dt),
+            "mix_w1": trunc_normal(ks[0], (d, 5 * s.rwkv_lora_mix), 0.02, dt),
+            "mix_w2": trunc_normal(ks[1], (5, s.rwkv_lora_mix, d), 0.02, dt),
+            "w0": jnp.full((d,), -6.0, dt),
+            "decay_w1": trunc_normal(ks[2], (d, s.rwkv_lora_decay), 0.02, dt),
+            "decay_w2": trunc_normal(ks[3], (s.rwkv_lora_decay, d), 0.02, dt),
+            "u": trunc_normal(ks[4], (H, hd), 0.02, dt),
+            "wr": init_linear(ks[5], d, d, dt),
+            "wk": init_linear(ks[6], d, d, dt),
+            "wv": init_linear(ks[7], d, d, dt),
+            "wg": init_linear(ks[8], d, d, dt),
+            "wo": init_linear(ks[9], d, d, dt),
+            "ln_x": jnp.zeros((d,), dt),
+        },
+        "cm": {
+            "mu_k": jnp.zeros((d,), dt),
+            "mu_r": jnp.zeros((d,), dt),
+            "wk": init_linear(ks[10], d, cfg.d_ff, dt),
+            "wv": init_linear(jax.random.fold_in(ks[10], 1), cfg.d_ff, d, dt),
+            "wr": init_linear(ks[11], d, d, dt),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence (pure-jnp oracle; kernels/rwkv6_wkv implements the chunked form)
+# ---------------------------------------------------------------------------
+def wkv6_ref(r, k, v, w, u, state):
+    """r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) -> (y, state')."""
+    def step2(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)     # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = jnp.exp(w_t.astype(jnp.float32))[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step2, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state
+
+
+WKV_CHUNK = 32
+
+
+def wkv6_chunked(r, k, v, w, u, state, chunk: int = WKV_CHUNK):
+    """Chunked WKV — the same algorithm as kernels/rwkv6_wkv, in pure jnp.
+
+    Per chunk of C tokens: one (C,hd)x(hd,hd) state matmul, one exact-pairwise
+    (C,C,hd) intra-chunk decay tensor, one (C,C)x(C,hd) combine, one
+    (hd,C)x(C,hd) state update. vs. the per-token scan this raises arithmetic
+    intensity onto the MXU and cuts HBM round-trips by ~C (the §Perf HC1
+    iteration: t_memory 2868 s -> see EXPERIMENTS.md). Every materialized
+    exponent is <= 0 (stability invariant shared with the kernel).
+    """
+    B, T, H, hd = r.shape
+    chunk = min(chunk, T)
+    if T % chunk != 0:
+        return wkv6_ref(r, k, v, w, u, state)
+    nt = T // chunk
+
+    def fold(x):
+        return (x.astype(jnp.float32).transpose(0, 2, 1, 3)
+                .reshape(B * H, nt, chunk, hd))
+
+    rf, kf, vf, wf = fold(r), fold(k), fold(v), fold(w)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    S0 = state.reshape(B * H, hd, hd).astype(jnp.float32)
+    ti = jnp.arange(chunk)
+    tri = (ti[None, :] < ti[:, None]).astype(jnp.float32)         # strict lower
+
+    def step(S, inp):
+        rc, kc, vc, wc = inp                                      # (BH,C,hd)
+        lw = jnp.cumsum(wc, axis=1)
+        lw_prev = lw - wc
+        y_cross = jnp.einsum("bch,bhj->bcj", rc * jnp.exp(lw_prev), S)
+        ldiff = lw_prev[:, :, None, :] - lw[:, None, :, :]        # (BH,C,C,hd)
+        A = jnp.sum((rc[:, :, None] * kc[:, None]) * jnp.exp(ldiff), -1) * tri
+        diag = jnp.sum(rc * uf * kc, -1, keepdims=True)
+        y = y_cross + jnp.einsum("bct,bth->bch", A, vc) + diag * vc
+        k_tail = kc * jnp.exp(lw[:, -1:] - lw)
+        S = (jnp.exp(lw[:, -1])[..., None] * S
+             + jnp.einsum("bch,bcj->bhj", k_tail, vc))
+        return S, y
+
+    S, ys = jax.lax.scan(step, S0, tuple(jnp.moveaxis(a, 1, 0)
+                                         for a in (rf, kf, vf, wf)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B * H, T, hd)
+    y = y.reshape(B, H, T, hd).transpose(0, 2, 1, 3).astype(r.dtype)
+    return y, S.reshape(B, H, hd, hd)
+
+
+def _head_norm(scale, y, H, hd, eps=1e-5):
+    B, T = y.shape[:2]
+    yh = y.reshape(B, T, H, hd).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, T, H * hd) * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def _tm_inputs(p, x, xx):
+    """Data-dependent token-shift interpolation for (w,k,v,r,g)."""
+    x_mix = x + xx * p["mu_x"].astype(x.dtype)
+    B, T, d = x.shape
+    mr = p["mix_w1"].shape[1] // 5
+    mix = jnp.tanh(x_mix @ p["mix_w1"].astype(x.dtype)).reshape(B, T, 5, mr)
+    lora = jnp.einsum("btfr,frd->btfd", mix, p["mix_w2"].astype(x.dtype))
+    interp = p["maa"].astype(x.dtype)[None, None] + lora           # (B,T,5,d)
+    return [x + xx * interp[:, :, i] for i in range(5)]
+
+
+def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *, use_kernel=False):
+    """x: (B,T,d). shift_prev: (B,d) hidden state of last token from prev chunk."""
+    B, T, d = x.shape
+    hd = cfg.ssm.rwkv_head_dim
+    H = d // hd
+    prev = jnp.concatenate([shift_prev[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xw, xk, xv, xr, xg = _tm_inputs(p, x, xx)
+
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + (jnp.tanh(xw @ p["decay_w1"].astype(x.dtype))
+                       @ p["decay_w2"].astype(x.dtype)).astype(jnp.float32))
+    r = linear(p["wr"], xr).reshape(B, T, H, hd)
+    k = linear(p["wk"], xk).reshape(B, T, H, hd)
+    v = linear(p["wv"], xv).reshape(B, T, H, hd)
+    g = jax.nn.silu(linear(p["wg"], xg))
+    w = logw.reshape(B, T, H, hd)
+
+    if use_kernel:
+        from repro.kernels.rwkv6_wkv import ops as wkv_ops
+        y, wkv_state = wkv_ops.wkv6(r, k, v, w.astype(jnp.float32),
+                                    p["u"].astype(jnp.float32), wkv_state)
+    elif T >= 2 * WKV_CHUNK and T % WKV_CHUNK == 0:
+        # chunked XLA path (same algorithm as the Pallas kernel): MXU-friendly
+        y, wkv_state = wkv6_chunked(r, k, v, w, p["u"].astype(jnp.float32),
+                                    wkv_state)
+    else:
+        y, wkv_state = wkv6_ref(r, k, v, w, p["u"].astype(jnp.float32), wkv_state)
+    y = _head_norm(p["ln_x"], y.reshape(B, T, d), H, hd)
+    out = linear(p["wo"], y * g)
+    return out, x[:, -1], wkv_state
+
+
+def rwkv_channel_mix(p, x, shift_prev):
+    prev = jnp.concatenate([shift_prev[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
+    out = jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], k)
+    return out, x[:, -1]
+
+
+def rwkv_block(params, cfg: ModelConfig, x, state: RWKVState, norms,
+               *, use_kernel=False) -> Tuple[jnp.ndarray, RWKVState]:
+    from repro.layers.core import rms_norm
+    h, tm_shift, wkv = rwkv_time_mix(
+        params["tm"], cfg, rms_norm(norms["n1"], x, cfg.rmsnorm_eps),
+        state.tm_shift, state.wkv, use_kernel=use_kernel)
+    x = x + h
+    h, cm_shift = rwkv_channel_mix(
+        params["cm"], rms_norm(norms["n2"], x, cfg.rmsnorm_eps), state.cm_shift)
+    x = x + h
+    return x, RWKVState(wkv, tm_shift.astype(state.tm_shift.dtype),
+                        cm_shift.astype(state.cm_shift.dtype))

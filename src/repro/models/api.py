@@ -1,0 +1,109 @@
+"""Uniform model API across families + input construction for every
+(arch × shape) cell.
+
+``make_inputs`` returns ShapeDtypeStructs (dry-run safe); ``instantiate`` turns
+them into concrete deterministic arrays for tests/examples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ENCDEC, ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+
+
+def model_module(cfg: ModelConfig):
+    return encdec if cfg.family == ENCDEC else lm
+
+
+def init_params(key, cfg: ModelConfig):
+    return model_module(cfg).init_params(key, cfg)
+
+
+def param_specs(cfg: ModelConfig):
+    return model_module(cfg).param_specs(cfg)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat: bool = False,
+            shard_axes=None):
+    return model_module(cfg).loss_fn(params, cfg, batch, remat=remat,
+                                     shard_axes=shard_axes)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    return model_module(cfg).init_decode_state(cfg, batch, seq, dtype)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    return model_module(cfg).decode_state_specs(cfg, batch, seq, dtype)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, **extras):
+    return model_module(cfg).prefill(params, cfg, tokens, cache, **extras)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, shard_axes=None):
+    return model_module(cfg).decode_step(params, cfg, cache, tokens, pos,
+                                         shard_axes=shard_axes)
+
+
+# ---------------------------------------------------------------------------
+# Inputs per (arch, shape)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {tokens, prefix_embeds?/enc_embeds?}
+    prefill: {tokens, cache, prefix_embeds?/enc_embeds?}
+    decode:  {tokens (B,), pos (B,), cache}
+    """
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    tok = jnp.int32
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        t_text = S - cfg.n_prefix_embeds
+        out["tokens"] = _sds((B, t_text), tok)
+        if cfg.n_prefix_embeds:
+            out["prefix_embeds"] = _sds((B, cfg.n_prefix_embeds, cfg.d_model), dt)
+        if cfg.family == ENCDEC:
+            out["enc_embeds"] = _sds((B, cfg.encdec.encoder_seq_len, cfg.d_model), dt)
+    elif shape.kind == "prefill":
+        t_text = S - cfg.n_prefix_embeds
+        out["tokens"] = _sds((B, t_text), tok)
+        if cfg.n_prefix_embeds:
+            out["prefix_embeds"] = _sds((B, cfg.n_prefix_embeds, cfg.d_model), dt)
+        if cfg.family == ENCDEC:
+            out["enc_embeds"] = _sds((B, cfg.encdec.encoder_seq_len, cfg.d_model), dt)
+        out["cache"] = decode_state_specs(cfg, B, S)
+    elif shape.kind == "decode":
+        out["tokens"] = _sds((B,), tok)
+        out["pos"] = _sds((B,), tok)
+        out["cache"] = decode_state_specs(cfg, B, S)
+    else:
+        raise ValueError(shape.kind)
+    return out
+
+
+def instantiate(specs, seed: int = 0):
+    """Deterministic concrete arrays matching a spec pytree (tests/examples)."""
+    leaves, treedef = jax.tree.flatten(specs)
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in leaves:
+        if jnp.issubdtype(l.dtype, jnp.integer):
+            out.append(jnp.asarray(rng.integers(0, 100, l.shape), l.dtype))
+        else:
+            out.append(jnp.asarray(rng.standard_normal(l.shape) * 0.02, l.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,201 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the brief: callers provide precomputed
+frame embeddings ``enc_embeds`` (B, T_enc, d_model) via ``input_specs()``.
+Decoder layers: causal self-attention (cached) + cross-attention over the
+encoder output (cross-KV computed once at prefill = an ideal AQUA cold page)
++ MLP. Adaptation (DESIGN.md): RMSNorm + RoPE replace LayerNorm + learned
+positions to share the substrate.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import attention as attn
+from repro.layers.core import (embed, init_embedding, init_linear, init_mlp,
+                               init_rmsnorm, linear, mlp, rms_norm, unembed)
+
+
+def _init_cross(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.dtype()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, dt),
+    }
+
+
+def _init_enc_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.dtype()
+    return {"n1": init_rmsnorm(cfg.d_model, dt),
+            "attn": attn.init_attention(k1, cfg),
+            "n2": init_rmsnorm(cfg.d_model, dt),
+            "ffn": init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.dtype()
+    return {"n1": init_rmsnorm(cfg.d_model, dt),
+            "self": attn.init_attention(k1, cfg),
+            "n2": init_rmsnorm(cfg.d_model, dt),
+            "cross": _init_cross(k2, cfg),
+            "n3": init_rmsnorm(cfg.d_model, dt),
+            "ffn": init_mlp(k3, cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, k1, k2 = jax.random.split(key, 3)
+    E = cfg.encdec.n_encoder_layers
+    L = cfg.n_layers
+    return {
+        "embed": init_embedding(ke, cfg),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg))(jax.random.split(k1, E)),
+        "enc_norm": init_rmsnorm(cfg.d_model, cfg.dtype()),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg))(jax.random.split(k2, L)),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.dtype()),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _bidir_attention(p, cfg: ModelConfig, x):
+    B, T, _ = x.shape
+    positions = jnp.arange(T)[None, :]
+    q, k, v = attn._project_qkv(p, cfg, x, positions)
+    mask = jnp.ones((1, 1, 1, T, T), bool)
+    ctx = attn._sdpa(cfg, q, k, v, mask)
+    return linear(p["wo"], ctx.reshape(B, T, -1))
+
+
+def encode(params, cfg: ModelConfig, enc_embeds):
+    def body(x, lp):
+        h = _bidir_attention(lp["attn"], cfg, rms_norm(lp["n1"], x, cfg.rmsnorm_eps))
+        x = x + h
+        x = x + mlp(lp["ffn"], cfg, rms_norm(lp["n2"], x, cfg.rmsnorm_eps))
+        return x, None
+    x, _ = jax.lax.scan(body, enc_embeds.astype(cfg.compute_dtype),
+                        params["enc_blocks"])
+    return rms_norm(params["enc_norm"], x, cfg.rmsnorm_eps)
+
+
+def _cross_kv(p, cfg: ModelConfig, enc_out):
+    B, Te, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = linear(p["wk"], enc_out).reshape(B, Te, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], enc_out).reshape(B, Te, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _cross_attend(p, cfg: ModelConfig, x, ck, cv):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(B, T, cfg.n_heads, hd)
+    mask = jnp.ones((1, 1, 1, T, ck.shape[1]), bool)
+    ctx = attn._sdpa(cfg, q, ck, cv, mask)
+    return linear(p["wo"], ctx.reshape(B, T, -1))
+
+
+def _dec_layer(lp, cfg: ModelConfig, x, ck, cv, *, cache=None, pos=None,
+               return_kv=False):
+    h_in = rms_norm(lp["n1"], x, cfg.rmsnorm_eps)
+    if cache is not None:
+        h, new_cache = attn.attention_decode(lp["self"], cfg, h_in,
+                                             attn.KVCache(*cache), pos)
+    elif return_kv:
+        h, kv = attn.attention_full(lp["self"], cfg, h_in, return_kv=True)
+        new_cache = kv
+    else:
+        h = attn.attention_full(lp["self"], cfg, h_in)
+        new_cache = None
+    x = x + h
+    x = x + _cross_attend(lp["cross"], cfg, rms_norm(lp["n2"], x, cfg.rmsnorm_eps), ck, cv)
+    x = x + mlp(lp["ffn"], cfg, rms_norm(lp["n3"], x, cfg.rmsnorm_eps))
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, tokens, enc_embeds, *, remat=False,
+            shard_axes=None):
+    """Training: (dec tokens (B,T), enc_embeds (B,Te,d)) -> logits (B,T,V)."""
+    enc_out = encode(params, cfg, enc_embeds)
+    x = embed(params["embed"], cfg, tokens)
+
+    def body(x, lp):
+        ck, cv = _cross_kv(lp["cross"], cfg, enc_out)
+        x, _ = _dec_layer(lp, cfg, x, ck, cv)
+        return x, None
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    return unembed(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat=False,
+            shard_axes=None):
+    from repro.models.losses import shifted_xent
+    logits, _ = forward(params, cfg, batch["tokens"], batch["enc_embeds"],
+                        remat=remat, shard_axes=shard_axes)
+    return shifted_xent(logits, batch["tokens"], shard_axes)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    Te = cfg.encdec.encoder_seq_len
+    self_kv = attn.make_kv_cache(cfg, batch, seq, 0, dt)
+    cross = attn.KVCache(jnp.zeros((batch, Te, cfg.n_kv_heads, hd), dt),
+                         jnp.zeros((batch, Te, cfg.n_kv_heads, hd), dt))
+    one = {"self": self_kv, "cross": cross}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), one)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    return jax.eval_shape(functools.partial(init_decode_state, cfg, batch, seq, dtype))
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, enc_embeds,
+            shard_axes=None):
+    enc_out = encode(params, cfg, enc_embeds)
+    x = embed(params["embed"], cfg, tokens)
+
+    def body(x, xs):
+        lp, c = xs
+        ck, cv = _cross_kv(lp["cross"], cfg, enc_out)
+        x, kv = _dec_layer(lp, cfg, x, ck, cv, return_kv=True)
+        self_c = attn.fill_kv_cache(attn.KVCache(*c["self"]), kv[0], kv[1])
+        return x, {"self": self_c, "cross": attn.KVCache(ck.astype(c["cross"][0].dtype),
+                                                         cv.astype(c["cross"][1].dtype))}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    return unembed(params["embed"], cfg, x[:, -1:])[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, shard_axes=None):
+    x = embed(params["embed"], cfg, tokens[:, None])
+
+    def body(x, xs):
+        lp, c = xs
+        ck, cv = c["cross"]
+        x, self_c = _dec_layer(lp, cfg, x, ck.astype(x.dtype), cv.astype(x.dtype),
+                               cache=c["self"], pos=pos)
+        return x, {"self": self_c, "cross": attn.KVCache(ck, cv)}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    return unembed(params["embed"], cfg, x)[:, 0], new_cache

@@ -1,0 +1,349 @@
+"""Generic decoder LM covering dense / moe / ssm (RWKV-6) / hybrid (Jamba) / vlm.
+
+The layer stack is executed as a ``lax.scan`` over *layer groups* so HLO size is
+O(1) in depth (critical for the 80 dry-run compiles on one CPU core):
+  * homogeneous archs: group_size = 1
+  * gemma3: group_size = 6 (5 local + 1 global)
+  * jamba:  group_size = 8 (attention at index 4, Mamba elsewhere, MoE on odd)
+Sub-layer kind depends only on the position *within* the group, so one traced
+group body serves every group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DENSE, HYBRID, MOE, SSM, VLM, ModelConfig)
+from repro.layers import attention as attn
+from repro.layers import mamba as mamba_mod
+from repro.layers import mla as mla_mod
+from repro.layers import rwkv6 as rwkv_mod
+from repro.layers.core import (embed, init_embedding, init_mlp, init_rmsnorm,
+                               mlp, rms_norm, unembed)
+from repro.layers.moe import init_moe, moe_apply
+
+
+# ---------------------------------------------------------------------------
+# Group structure
+# ---------------------------------------------------------------------------
+def group_size(cfg: ModelConfig) -> int:
+    if cfg.family == HYBRID:
+        return cfg.hybrid.period
+    if cfg.global_layer_every > 0:
+        return cfg.global_layer_every
+    return 1
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    gs = group_size(cfg)
+    assert cfg.n_layers % gs == 0, (cfg.name, cfg.n_layers, gs)
+    return cfg.n_layers // gs
+
+
+def mixer_kind(cfg: ModelConfig, i: int) -> str:
+    """Sequence mixer of sub-layer i (position within group)."""
+    if cfg.family == SSM:
+        return "rwkv"
+    if cfg.family == HYBRID:
+        return "attn" if i == cfg.hybrid.attn_index else "mamba"
+    if cfg.mla is not None:
+        return "mla"
+    if cfg.global_layer_every > 0:
+        return "attn" if (i + 1) % cfg.global_layer_every == 0 else "attn_local"
+    if cfg.sliding_window > 0:
+        return "attn_local"
+    return "attn"
+
+
+def ffn_kind(cfg: ModelConfig, i: int) -> Optional[str]:
+    if cfg.family == SSM:
+        return None                       # channel-mix lives inside the rwkv block
+    if cfg.moe is not None and (i % cfg.moe.moe_every) == (cfg.moe.moe_every - 1):
+        return "moe"
+    return "mlp"
+
+
+def layer_window(cfg: ModelConfig, i: int) -> int:
+    return cfg.sliding_window if mixer_kind(cfg, i) == "attn_local" else 0
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def _init_sublayer(key, cfg: ModelConfig, i: int) -> dict:
+    kind = mixer_kind(cfg, i)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.dtype()
+    p: dict = {"n1": init_rmsnorm(cfg.d_model, dt)}
+    if kind == "rwkv":
+        p["mix"] = rwkv_mod.init_rwkv_layer(k1, cfg)
+        p["n2"] = init_rmsnorm(cfg.d_model, dt)
+        return p
+    if kind == "mamba":
+        p["mix"] = mamba_mod.init_mamba_layer(k1, cfg)
+    elif kind == "mla":
+        p["mix"] = mla_mod.init_mla(k1, cfg)
+    else:
+        p["mix"] = attn.init_attention(k1, cfg)
+    fk = ffn_kind(cfg, i)
+    if fk:
+        p["n2"] = init_rmsnorm(cfg.d_model, dt)
+        p["ffn"] = init_moe(k2, cfg) if fk == "moe" else init_mlp(k2, cfg)
+    return p
+
+
+def init_group(key, cfg: ModelConfig) -> dict:
+    gs = group_size(cfg)
+    keys = jax.random.split(key, gs)
+    return {f"sub{i}": _init_sublayer(keys[i], cfg, i) for i in range(gs)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, kb, kf = jax.random.split(key, 3)
+    G = n_groups(cfg)
+    blocks = jax.vmap(lambda k: init_group(k, cfg))(jax.random.split(kb, G))
+    return {
+        "embed": init_embedding(ke, cfg),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.dtype()),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """Abstract param shapes (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+def _sublayer_cache(cfg: ModelConfig, i: int, batch: int, seq: int, dtype):
+    kind = mixer_kind(cfg, i)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+    if kind == "mamba":
+        return mamba_mod.init_mamba_state(cfg, batch, dtype)
+    if kind == "mla":
+        return mla_mod.make_mla_cache(cfg, batch, seq, dtype)
+    return attn.make_kv_cache(cfg, batch, seq, layer_window(cfg, i), dtype)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    """Stacked (over groups) cache pytree."""
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    gs = group_size(cfg)
+    one = {f"sub{i}": _sublayer_cache(cfg, i, batch, seq, dt) for i in range(gs)}
+    G = n_groups(cfg)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), one)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    return jax.eval_shape(
+        functools.partial(init_decode_state, cfg, batch, seq, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training): full sequence, no cache
+# ---------------------------------------------------------------------------
+def _sp_constrain(x, shard_axes):
+    """Sequence parallelism (Megatron SP): the residual stream carried across
+    layer groups is sequence-sharded over the 'model' axis, so the per-layer
+    stack saved for the scan backward is 1/TP of the naive size (the dominant
+    train-memory term — see EXPERIMENTS.md §Perf). XLA inserts the
+    all-gather/reduce-scatter transitions around attention/MLP."""
+    if not shard_axes or not shard_axes.get("sp"):
+        return x
+    from repro.models.losses import constrain
+    mesh = shard_axes["mesh"]
+    tp_n = dict(zip(mesh.axis_names, mesh.devices.shape))[shard_axes["tp"]]
+    if x.ndim >= 3 and x.shape[1] % tp_n == 0 and x.shape[1] >= tp_n:
+        return constrain(x, (shard_axes["dp"], shard_axes["tp"], None))
+    return x
+
+
+def _group_train(gp, cfg: ModelConfig, x, shard_axes=None):
+    aux = jnp.zeros((), jnp.float32)
+    x = _sp_constrain(x, shard_axes)
+    for i in range(group_size(cfg)):
+        p = gp[f"sub{i}"]
+        kind = mixer_kind(cfg, i)
+        if kind == "rwkv":
+            st = rwkv_mod.init_rwkv_state(cfg, x.shape[0], x.dtype)
+            x, _ = rwkv_mod.rwkv_block(p["mix"], cfg, x, st,
+                                       {"n1": p["n1"], "n2": p["n2"]})
+            continue
+        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
+        if kind == "mamba":
+            st = mamba_mod.init_mamba_state(cfg, x.shape[0], x.dtype)
+            h, _ = mamba_mod.mamba_forward(p["mix"], cfg, h, st,
+                                           shard_axes=shard_axes)
+        elif kind == "mla":
+            h = mla_mod.mla_full(p["mix"], cfg, h)
+        else:
+            h = attn.attention_full(p["mix"], cfg, h, window=layer_window(cfg, i))
+        x = x + h
+        fk = ffn_kind(cfg, i)
+        if fk:
+            h = rms_norm(p["n2"], x, cfg.rmsnorm_eps)
+            if fk == "moe":
+                h, a = moe_apply(p["ffn"], cfg, h, shard_axes=shard_axes)
+                aux = aux + a
+            else:
+                h = mlp(p["ffn"], cfg, h)
+            x = x + h
+    return _sp_constrain(x, shard_axes), aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+            remat: bool = False, shard_axes=None):
+    """tokens: (B,T) -> logits (B, T(+P), V); returns (logits, aux_loss)."""
+    from repro.models.losses import constrain
+    x = embed(params["embed"], cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if shard_axes:
+        x = constrain(x, (shard_axes["dp"], None, None))
+
+    def body_fn(gp, cfg, x):
+        return _group_train(gp, cfg, x, shard_axes)
+    body = body_fn
+    if remat:
+        # full remat: at d_ff up to 8*d_model, saving projection outputs
+        # (dots_*_saveable policies) costs ~5.6 GB/layer-stack at this scale;
+        # recomputing the whole group body in the backward is the right
+        # trade (see EXPERIMENTS.md §Perf iteration log)
+        body = jax.checkpoint(body, static_argnums=(1,))
+
+    def scan_body(carry, gp):
+        x, aux = carry
+        x, a = body(gp, cfg, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat: bool = False,
+            shard_axes=None):
+    """Next-token cross-entropy (+ MoE aux). batch: tokens (B,T), prefix_embeds?"""
+    from repro.models.losses import shifted_xent
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, tokens,
+                          prefix_embeds=batch.get("prefix_embeds"),
+                          remat=remat, shard_axes=shard_axes)
+    P = logits.shape[1] - tokens.shape[1]
+    loss = shifted_xent(logits[:, P:], tokens, shard_axes)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_coef * aux / max(cfg.n_layers // cfg.moe.moe_every, 1)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+def _group_prefill(gp, cfg: ModelConfig, x, cache, pos_offset=0, shard_axes=None):
+    """Run a full-sequence pass, producing filled caches."""
+    new_cache = {}
+    for i in range(group_size(cfg)):
+        p = gp[f"sub{i}"]
+        kind = mixer_kind(cfg, i)
+        c = cache[f"sub{i}"]
+        if kind == "rwkv":
+            x, nc = rwkv_mod.rwkv_block(p["mix"], cfg, x,
+                                        rwkv_mod.RWKVState(*c),
+                                        {"n1": p["n1"], "n2": p["n2"]})
+            new_cache[f"sub{i}"] = nc
+            continue
+        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
+        if kind == "mamba":
+            h, nc = mamba_mod.mamba_forward(p["mix"], cfg, h,
+                                            mamba_mod.MambaState(*c),
+                                            shard_axes=shard_axes)
+        elif kind == "mla":
+            h, (c_kv, k_rope) = mla_mod.mla_full(p["mix"], cfg, h, return_cache=True)
+            nc = mla_mod.fill_mla_cache(mla_mod.MLACache(*c), c_kv, k_rope)
+        else:
+            w = layer_window(cfg, i)
+            h, (k, v) = attn.attention_full(p["mix"], cfg, h, window=w,
+                                            return_kv=True)
+            nc = attn.fill_kv_cache(attn.KVCache(*c), k, v, w)
+        x = x + h
+        fk = ffn_kind(cfg, i)
+        if fk:
+            h = rms_norm(p["n2"], x, cfg.rmsnorm_eps)
+            h = (moe_apply(p["ffn"], cfg, h, shard_axes=shard_axes)[0]
+                 if fk == "moe" else mlp(p["ffn"], cfg, h))
+            x = x + h
+        new_cache[f"sub{i}"] = nc
+    return x, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, prefix_embeds=None,
+            shard_axes=None):
+    """tokens (B,T) + empty cache -> (last-token logits (B,V), filled cache)."""
+    x = embed(params["embed"], cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    def scan_body(x, xs):
+        gp, c = xs
+        x, nc = _group_prefill(gp, cfg, x, c, shard_axes=shard_axes)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = unembed(params["embed"], cfg, x[:, -1:])[:, 0]
+    return logits, new_cache
+
+
+def _group_decode(gp, cfg: ModelConfig, x, cache, pos, shard_axes=None):
+    new_cache = {}
+    for i in range(group_size(cfg)):
+        p = gp[f"sub{i}"]
+        kind = mixer_kind(cfg, i)
+        c = cache[f"sub{i}"]
+        if kind == "rwkv":
+            x, nc = rwkv_mod.rwkv_block(p["mix"], cfg, x, rwkv_mod.RWKVState(*c),
+                                        {"n1": p["n1"], "n2": p["n2"]})
+            new_cache[f"sub{i}"] = nc
+            continue
+        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
+        if kind == "mamba":
+            h, nc = mamba_mod.mamba_decode(p["mix"], cfg, h, mamba_mod.MambaState(*c))
+        elif kind == "mla":
+            h, nc = mla_mod.mla_decode(p["mix"], cfg, h, mla_mod.MLACache(*c), pos)
+        else:
+            h, nc = attn.attention_decode(p["mix"], cfg, h, attn.KVCache(*c), pos,
+                                          window=layer_window(cfg, i))
+        x = x + h
+        fk = ffn_kind(cfg, i)
+        if fk:
+            h = rms_norm(p["n2"], x, cfg.rmsnorm_eps)
+            h = (moe_apply(p["ffn"], cfg, h, dropless=True,
+                           shard_axes=shard_axes)[0] if fk == "moe"
+                 else mlp(p["ffn"], cfg, h))
+            x = x + h
+        new_cache[f"sub{i}"] = nc
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, shard_axes=None):
+    """One token for every sequence. tokens (B,), pos (B,) -> (logits (B,V), cache)."""
+    x = embed(params["embed"], cfg, tokens[:, None])
+
+    def scan_body(x, xs):
+        gp, c = xs
+        x, nc = _group_decode(gp, cfg, x, c, pos, shard_axes=shard_axes)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = unembed(params["embed"], cfg, x)[:, 0]
+    return logits, new_cache

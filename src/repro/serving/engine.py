@@ -1,0 +1,200 @@
+"""The serving engine: continuous batching over a slotted decode cache, with
+pluggable schedulers (FCFS / CFS) and AQUA-paged context switching.
+
+This engine runs REAL model numerics (any decoder-only family in the zoo) on
+tiny configs in CI; its per-step wall-times are additionally priced by
+core/perfmodel.py so end-to-end TTFT/RCT in *simulated seconds* are reported
+for the benchmark harness. The scheduler and paging logic are shared with the
+discrete-event simulator — one implementation, two clocks.
+
+Coordinator integration (consumer side): at engine construction, AQUA-LIB
+requests offloaded memory (/allocate); every ``respond_every`` iterations the
+engine polls pending reclaims (the paper's ``aqua.respond()``) and evacuates
+donor pools at the iteration boundary.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.aqua_tensor import HOST, REMOTE, TransferMeter
+from repro.core.coordinator import Coordinator
+from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E)
+from repro.models import api
+from repro.serving.kv_cache import ContextStore, extract_slot, insert_slot
+from repro.serving.scheduler import (CFSScheduler, Decision, FCFSScheduler,
+                                     ReqState, fairness_spread)
+
+
+@dataclass
+class EngineMetrics:
+    sim_time: float = 0.0
+    steps: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    restores: int = 0
+    ttft: Dict[int, float] = field(default_factory=dict)
+    rct: Dict[int, float] = field(default_factory=dict)
+    fairness_trace: List[int] = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_running: int = 4,
+                 max_seq: int = 128, scheduler: str = "cfs",
+                 slice_tokens: int = 4, offload_tier: int = REMOTE,
+                 store: Optional[ContextStore] = None,
+                 coordinator: Optional[Coordinator] = None,
+                 name: str = "llm0", hw: HardwareProfile = TPU_V5E,
+                 want_remote_bytes: float = 0.0, respond_every: int = 4):
+        self.cfg = cfg
+        self.params = params
+        self.max_running = max_running
+        self.max_seq = max_seq
+        self.name = name
+        self.hw = hw
+        self.cost = ModelCost.from_config(cfg)
+        self.weight_bytes = cfg.param_count() * cfg.dtype().itemsize
+        self.offload_tier = offload_tier
+        self.store = store or ContextStore(page_elems=4096, local_pages=16,
+                                           host_pages=1024)
+        self.coord = coordinator
+        self.respond_every = respond_every
+        if coordinator is not None and want_remote_bytes > 0:
+            for donor, nbytes in coordinator.allocate(name, want_remote_bytes):
+                self.store.add_remote_lease(donor, nbytes)
+                self._grants = getattr(self, "_grants", []) + [(donor, nbytes)]
+
+        self.cache = api.init_decode_state(cfg, max_running, max_seq)
+        self._free_slots = list(range(max_running))[::-1]
+        self.sched = (CFSScheduler(max_running, slice_tokens)
+                      if scheduler == "cfs" else FCFSScheduler(max_running))
+        self.waiting: List[ReqState] = []
+        self.running: List[ReqState] = []
+        self.finished: List[ReqState] = []
+        self.metrics = EngineMetrics()
+        self._rid = itertools.count()
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt_tokens: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0, lora_id: Optional[int] = None) -> ReqState:
+        r = ReqState(next(self._rid), arrival, list(map(int, prompt_tokens)),
+                     max_new_tokens, lora_id=lora_id)
+        self.waiting.append(r)
+        return r
+
+    # ------------------------------------------------------------------
+    def _respond(self):
+        """The paper's aqua.respond(): honor donor reclaims at an iteration
+        boundary — evacuate their pools and release the grants."""
+        for donor in self.coord.pending_reclaims(self.name):
+            self.store.evict_remote(donor)
+            for d, nbytes in list(getattr(self, "_grants", [])):
+                if d == donor:
+                    self.coord.free(self.name, donor, nbytes)
+                    self._grants.remove((d, nbytes))
+
+    def step(self):
+        m = self.metrics
+        step_time = 0.0
+        if self.coord is not None and m.steps % self.respond_every == 0:
+            self._respond()
+
+        decision = self.sched.plan(m.steps, self.waiting, self.running)
+
+        # page out preempted requests (coalesced blob -> AQUA tensor)
+        t_before = self.store.aqua.meter.sim_time
+        for r in decision.preempt:
+            ctx = extract_slot(self.cache, r.slot, r.ctx_len, self.max_seq)
+            r.parked = self.store.park(ctx, r.ctx_len, prefer=self.offload_tier)
+            self._free_slots.append(r.slot)
+            r.slot = None
+            m.preemptions += 1
+
+        # restore / prefill the scheduled set
+        for r in decision.run:
+            if r.slot is not None:
+                continue
+            if not self._free_slots:
+                continue                     # shouldn't happen: plan respects cap
+            r.slot = self._free_slots.pop()
+            if r.parked is not None:
+                ctx = self.store.restore(r.parked)
+                self.cache = insert_slot(self.cache, ctx, r.slot, r.ctx_len,
+                                         self.max_seq)
+                r.parked = None
+                m.restores += 1
+            elif not r.prefilled:
+                step_time += self._prefill_into_slot(r)
+                m.prefills += 1
+        step_time += self.store.aqua.meter.sim_time - t_before
+
+        self.running = [r for r in decision.run if r.slot is not None]
+        self.waiting = [r for r in self.waiting + decision.preempt
+                        if r.slot is None and not r.done]
+
+        # one decode step for every resident request
+        live = [r for r in self.running if not r.done]
+        if live:
+            tokens = np.zeros((self.max_running,), np.int32)
+            pos = np.zeros((self.max_running,), np.int32)
+            for r in live:
+                tokens[r.slot] = (r.generated[-1] if r.generated
+                                  else r.prompt_tokens[-1])
+                pos[r.slot] = r.ctx_len - 1
+            logits, self.cache = api.decode_step(
+                self.params, self.cfg, self.cache,
+                jnp.asarray(tokens), jnp.asarray(pos))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            ctx_mean = float(np.mean([r.ctx_len for r in live]))
+            step_time += self.cost.decode_step_time(
+                self.hw, len(live), ctx_mean, self.weight_bytes)
+            for r in live:
+                r.generated.append(int(nxt[r.slot]))
+                if r.ttft_step is None:
+                    r.ttft_step = m.steps
+                    m.ttft[r.rid] = m.sim_time + step_time - r.arrival
+
+        # retire
+        for r in list(self.running):
+            if r.done:
+                r.finish_step = m.steps
+                m.rct[r.rid] = m.sim_time + step_time - r.arrival
+                self._free_slots.append(r.slot)
+                r.slot = None
+                self.running.remove(r)
+                self.finished.append(r)
+
+        m.sim_time += step_time
+        m.steps += 1
+        m.fairness_trace.append(
+            fairness_spread(self.waiting + self.running))
+
+    def _prefill_into_slot(self, r: ReqState) -> float:
+        cache1 = api.init_decode_state(self.cfg, 1, self.max_seq)
+        toks = jnp.asarray(r.prompt_tokens, jnp.int32)[None]
+        logits, cache1 = api.prefill(self.params, self.cfg, toks, cache1)
+        self.cache = jax.tree.map(
+            lambda big, one: big.at[:, r.slot].set(one[:, 0].astype(big.dtype)),
+            self.cache, cache1)
+        r.prefilled = True
+        r.generated.append(int(jnp.argmax(logits[0])))
+        if r.ttft_step is None:
+            r.ttft_step = self.metrics.steps
+            self.metrics.ttft[r.rid] = self.metrics.sim_time - r.arrival
+        return self.cost.prefill_time(self.hw, len(r.prompt_tokens))
+
+    # ------------------------------------------------------------------
+    def run(self, max_steps: int = 1000):
+        for _ in range(max_steps):
+            if not (self.waiting or self.running):
+                break
+            self.step()
+        if self.coord is not None:
+            self._respond()        # don't leave leases dangling after drain
+        return self.metrics

@@ -1,0 +1,115 @@
+"""ContextStore: per-request dynamic context blobs on AQUA TENSORS.
+
+The engine's batched decode cache holds the *running* requests. When the CFS
+scheduler preempts a request, its whole-stack context (every cache leaf's
+slice for that batch slot, truncated to the request's length) is packed into
+one contiguous blob, chunked into fixed-size pages, and handed to an
+AquaTensor — which places the pages LOCAL / REMOTE(fabric) / HOST and meters
+the movement. Packing across all layers at once is exactly the paper's
+coalescing fix ("gathering smaller tensors into a temporary tensor ... and
+copying that to the offloaded tensor", §5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aqua_tensor import AquaTensor, REMOTE, TransferMeter
+
+
+def _is_seq_leaf(leaf, max_seq: int) -> bool:
+    return leaf.ndim >= 3 and leaf.shape[2] == max_seq
+
+
+def extract_slot(cache, slot: int, ctx_len: int, max_seq: int):
+    """Slice one request's context out of the batched cache pytree."""
+    def f(leaf):
+        if _is_seq_leaf(leaf, max_seq):
+            return leaf[:, slot, :ctx_len]
+        return leaf[:, slot]
+    return jax.tree.map(f, cache)
+
+
+def insert_slot(cache, ctx, slot: int, ctx_len: int, max_seq: int):
+    """Write a request's context back into the batched cache at `slot`."""
+    def f(leaf, part):
+        if _is_seq_leaf(leaf, max_seq):
+            return leaf.at[:, slot, :ctx_len].set(part.astype(leaf.dtype))
+        return leaf.at[:, slot].set(part.astype(leaf.dtype))
+    return jax.tree.map(f, cache, ctx)
+
+
+def pack_context(ctx) -> Tuple[jnp.ndarray, List[Tuple[tuple, Any]]]:
+    """Flatten a context pytree into one f32 vector + restore metadata."""
+    leaves = jax.tree.leaves(ctx)
+    meta = [(l.shape, l.dtype) for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    return flat, meta
+
+
+def unpack_context(flat: jnp.ndarray, meta, treedef):
+    parts = []
+    off = 0
+    for shape, dtype in meta:
+        n = int(np.prod(shape))
+        parts.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, parts)
+
+
+@dataclass
+class ParkedContext:
+    page_ids: np.ndarray
+    n_elems: int
+    meta: list
+    treedef: Any
+    ctx_len: int
+
+
+class ContextStore:
+    """Pages parked request contexts into an AquaTensor."""
+
+    def __init__(self, *, page_elems: int = 32768, local_pages: int = 64,
+                 host_pages: int = 4096, n_logical: int = 8192,
+                 meter: Optional[TransferMeter] = None):
+        self.page_elems = page_elems
+        self.aqua = AquaTensor(n_logical=n_logical, page_shape=(page_elems,),
+                               local_slots=local_pages, host_slots=host_pages,
+                               dtype=jnp.float32, meter=meter, name="ctx")
+
+    # -- coordinator-driven lease plumbing --------------------------------
+    def add_remote_lease(self, donor: str, nbytes: float):
+        slots = max(1, int(nbytes // (self.page_elems * 4)))
+        self.aqua.add_remote_lease(donor, slots)
+
+    def evict_remote(self, donor: str) -> int:
+        return self.aqua.evict_remote(donor)
+
+    # -- park / restore ----------------------------------------------------
+    def park(self, ctx, ctx_len: int, *, prefer: int = REMOTE) -> ParkedContext:
+        flat, meta = pack_context(ctx)       # the coalescing gather
+        treedef = jax.tree.structure(ctx)
+        n_pages = math.ceil(flat.size / self.page_elems)
+        pad = n_pages * self.page_elems - flat.size
+        flat = jnp.pad(flat, (0, pad))
+        lps = self.aqua.allocate(n_pages, prefer=prefer)
+        self.aqua.write(lps, flat.reshape(n_pages, self.page_elems))
+        return ParkedContext(lps, flat.size - pad, meta, treedef, ctx_len)
+
+    def restore(self, parked: ParkedContext):
+        pages = self.aqua.read(parked.page_ids, meter=True)
+        flat = pages.reshape(-1)[: parked.n_elems]
+        ctx = unpack_context(flat, parked.meta, parked.treedef)
+        self.aqua.free(parked.page_ids)
+        return ctx
+
+    def stats(self) -> Dict:
+        return {"tiers": self.aqua.tier_counts(),
+                "meter": {"bytes_fabric": self.aqua.meter.bytes_fabric,
+                          "bytes_host": self.aqua.meter.bytes_host,
+                          "sim_time": self.aqua.meter.sim_time}}

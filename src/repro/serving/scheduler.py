@@ -1,0 +1,98 @@
+"""Prompt schedulers: FCFS continuous batching (vLLM-style) and the
+completely fair scheduler (paper §5) — shared by the real engine and the
+discrete-event simulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+
+@dataclass
+class ReqState:
+    rid: int
+    arrival: float
+    prompt_tokens: List[int]
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None            # batch slot when running
+    parked: object = None                 # ParkedContext when preempted
+    prefilled: bool = False
+    ttft_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    lora_id: Optional[int] = None
+
+    @property
+    def vruntime(self) -> int:            # CFS: service received = tokens out
+        return len(self.generated)
+
+    @property
+    def ctx_len(self) -> int:
+        return len(self.prompt_tokens) + len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class Decision:
+    run: List[ReqState]                   # the set that should be resident
+    admit: List[ReqState]                 # subset of run needing prefill
+    preempt: List[ReqState]               # currently-resident to page out
+
+
+class FCFSScheduler:
+    """vLLM-like: admit in arrival order while slots allow; never preempt.
+    Under memory pressure, later arrivals starve (paper Fig. 1a)."""
+
+    def __init__(self, max_running: int):
+        self.max_running = max_running
+
+    def plan(self, step: int, waiting: Sequence[ReqState],
+             running: Sequence[ReqState]) -> Decision:
+        run = list(running)
+        admit = []
+        for r in sorted(waiting, key=lambda r: (r.arrival, r.rid)):
+            if len(run) >= self.max_running:
+                break
+            run.append(r)
+            admit.append(r)
+        return Decision(run, admit, [])
+
+
+class CFSScheduler:
+    """Completely fair scheduler: every `slice_tokens` generated tokens, the
+    `max_running` requests with the LEAST service run next (paper §5)."""
+
+    def __init__(self, max_running: int, slice_tokens: int = 5):
+        self.max_running = max_running
+        self.slice_tokens = slice_tokens
+        self._since_switch = 0
+
+    def plan(self, step: int, waiting: Sequence[ReqState],
+             running: Sequence[ReqState]) -> Decision:
+        self._since_switch += 1
+        boundary = (self._since_switch >= self.slice_tokens) or not running
+        if not boundary:
+            return Decision(list(running), [], [])
+        self._since_switch = 0
+        everyone = list(waiting) + list(running)
+        everyone.sort(key=lambda r: (r.vruntime, r.arrival, r.rid))
+        run = everyone[: self.max_running]
+        run_ids = {r.rid for r in run}
+        preempt = [r for r in running if r.rid not in run_ids]
+        admit = [r for r in run if r.slot is None and not r.prefilled]
+        return Decision(run, admit, preempt)
+
+
+def fairness_spread(requests: Sequence[ReqState]) -> int:
+    """Max-min service spread across unfinished requests — including the
+    never-admitted (a starved request sits at vruntime 0, which is the
+    unfairness FCFS exhibits). CFS bounds this by ~slice_tokens x rotation;
+    FCFS lets it grow to the full generation length (paper Fig. 1a)."""
+    live = [r for r in requests if not r.done]
+    if len(live) < 2:
+        return 0
+    v = [r.vruntime for r in live]
+    return max(v) - min(v)

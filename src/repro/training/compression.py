@@ -1,0 +1,68 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+``compress``/``decompress`` quantize per-tensor with a shared absmax scale;
+the residual is carried in an error-feedback buffer so the *accumulated*
+quantization error stays bounded (the EF-SGD guarantee) — quantized training
+then converges to the same neighborhood as exact training.
+
+``compressed_psum`` is the distributed hook: inside a shard_map'd train step
+the gradient all-reduce runs on int8 payloads (4x less ICI traffic than f32,
+8x less than... well, bf16 is 2x) and dequantizes after the sum. Used by the
+collective-bound hillclimb experiments in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrad(NamedTuple):
+    q: jnp.ndarray       # int8 payload
+    scale: jnp.ndarray   # f32 per-tensor scale
+
+
+def compress(g: jnp.ndarray, err: jnp.ndarray) -> Tuple[CompressedGrad, jnp.ndarray]:
+    """Quantize (g + err) to int8; return payload and the new error buffer."""
+    x = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale
+    return CompressedGrad(q, scale), new_err
+
+
+def decompress(c: CompressedGrad) -> jnp.ndarray:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def init_error_buffers(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, err_tree):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_tree)
+    comps, errs = zip(*(compress(g, e) for g, e in zip(flat_g, flat_e)))
+    return (jax.tree.unflatten(treedef, comps),
+            jax.tree.unflatten(treedef, errs))
+
+
+def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis_name: str
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 all-reduce mean with error feedback (call inside shard_map).
+
+    Integer payloads from different workers can only be summed if they share
+    one scale, so the workers first agree on the max scale (a scalar pmax —
+    negligible traffic), quantize against it, then psum the int8 payload in
+    int32 (no overflow for <= 2^23 workers). Error feedback absorbs the
+    coarser shared-scale quantization on workers with small gradients.
+    """
+    x = g.astype(jnp.float32) + err
+    local_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scale = jax.lax.pmax(local_scale, axis_name)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return qsum.astype(jnp.float32) * scale / n, new_err

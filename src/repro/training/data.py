@@ -1,0 +1,68 @@
+"""Deterministic synthetic data pipeline.
+
+Seeded, shardable, restart-reproducible: batch `i` is a pure function of
+(seed, step, shard), so checkpoint-restart resumes the exact stream with no
+stored iterator state — the property the fault-tolerance driver relies on.
+The token stream is a Zipfian-ish mixture with local n-gram structure so
+losses decrease meaningfully during the example runs (pure-uniform tokens
+would pin the loss at log V).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ENCDEC, ModelConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    batch: int = 8
+    seq_len: int = 128
+    n_shards: int = 1
+    shard: int = 0
+
+
+def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, cfg.shard]))
+
+
+def synthetic_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    """Zipf-weighted markov-ish stream: next token correlates with previous."""
+    v_eff = min(vocab, 4096)
+    base = rng.zipf(1.3, size=shape) % v_eff
+    prev = np.roll(base, 1, axis=-1)
+    mix = rng.random(shape) < 0.35
+    out = np.where(mix, (prev * 31 + 7) % v_eff, base)
+    return out.astype(np.int32)
+
+
+def make_batch(cfg: DataConfig, mcfg: ModelConfig, step: int) -> Dict:
+    rng = _batch_rng(cfg, step)
+    b = cfg.batch // cfg.n_shards
+    t_text = cfg.seq_len - mcfg.n_prefix_embeds
+    batch = {"tokens": jnp.asarray(
+        synthetic_tokens(rng, (b, t_text), mcfg.vocab_size))}
+    if mcfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((b, mcfg.n_prefix_embeds, mcfg.d_model)) * 0.02,
+            mcfg.compute_dtype)
+    if mcfg.family == ENCDEC:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((b, mcfg.encdec.encoder_seq_len, mcfg.d_model)) * 0.02,
+            mcfg.compute_dtype)
+    return batch
+
+
+def data_stream(cfg: DataConfig, mcfg: ModelConfig,
+                start_step: int = 0) -> Iterator[Dict]:
+    step = start_step
+    while True:
+        yield make_batch(cfg, mcfg, step)
+        step += 1

@@ -1,0 +1,65 @@
+"""Elastic scaling + straggler mitigation policies.
+
+Checkpoints store *logical* (unsharded) arrays, so elastic re-scaling is
+re-sharding at load: ``reshard_for_mesh`` places a restored tree onto any
+mesh under the framework's sharding rules — a 512-chip checkpoint restarts on
+256 chips (or 1024) with no format conversion. The deterministic data stream
+(training/data.py) is keyed by (seed, step, shard), so a changed shard count
+re-partitions the stream consistently.
+
+Straggler mitigation: ``RebalancePolicy`` consumes per-shard step times and
+emits data-parallel bucket weights — slow hosts get proportionally smaller
+microbatch shares (gradient contributions are re-weighted by actual token
+counts, so the estimator stays unbiased).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def reshard_for_mesh(tree, mesh, rules_fn):
+    """Place a (host-resident) pytree onto `mesh` using per-leaf specs from
+    rules_fn(path, leaf) -> PartitionSpec."""
+    from jax.sharding import NamedSharding
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = rules_fn(path, leaf)
+        out.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclass
+class RebalancePolicy:
+    """Weighted DP bucket assignment from observed shard step-times."""
+    n_shards: int
+    smoothing: float = 0.5
+    min_share: float = 0.25
+    _ema: Optional[np.ndarray] = None
+
+    def update(self, shard_times: List[float]) -> np.ndarray:
+        t = np.asarray(shard_times, np.float64)
+        self._ema = t if self._ema is None else \
+            self.smoothing * self._ema + (1 - self.smoothing) * t
+        speed = 1.0 / np.maximum(self._ema, 1e-9)
+        share = speed / speed.sum() * self.n_shards
+        share = np.maximum(share, self.min_share)
+        return share / share.sum()
+
+    def bucket_sizes(self, global_batch: int, shard_times: List[float]
+                     ) -> List[int]:
+        share = self.update(shard_times)
+        sizes = np.floor(share * global_batch).astype(int)
+        sizes = np.maximum(sizes, 1)
+        # distribute the remainder to the fastest shards
+        rem = global_batch - sizes.sum()
+        order = np.argsort(-share)
+        for i in range(abs(int(rem))):
+            sizes[order[i % self.n_shards]] += int(np.sign(rem))
+        return sizes.tolist()

@@ -1,0 +1,115 @@
+"""Optimizers and LR schedules, from scratch (no optax in this container).
+
+AdamW with decoupled weight decay, global-norm clipping, and mixed precision:
+bf16 params + f32 master copies / moments (the standard large-scale recipe).
+Schedules: linear warmup -> cosine, and WSD (warmup-stable-decay) — the
+MiniCPM schedule its assigned config calls for.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Any          # f32 master params (None when params already f32)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    f32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(jnp.zeros_like, f32)
+    needs_master = any(p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.zeros_like, f32),
+                      f32 if needs_master else None)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig
+                 ) -> Tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+
+    master = state.master if state.master is not None else params
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** step)
+        vhat = v / (1 - cfg.b2 ** step)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return m, v, p32
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    p32 = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    if state.master is not None:
+        new_params = jax.tree.map(lambda p32, p: p32.astype(p.dtype), p32, params)
+        new_state = AdamWState(step, mu, nu, p32)
+    else:
+        new_params = p32
+        new_state = AdamWState(step, mu, nu, None)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): flat plateau, sharp final decay."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        dec = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+        flat = jnp.where(step >= decay_start, dec, peak_lr)
+        return jnp.where(step < warmup, warm, flat)
+    return lr

@@ -1,0 +1,133 @@
+"""Jit'd train step with microbatch gradient accumulation, remat, and the
+fault-tolerant outer loop (checkpoint/restart, failure injection hooks,
+straggler monitor).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, make_batch
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    micro_batches: int = 1
+    remat: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    # sharding constraint axes for the sharded loss ({"dp": (...), "tp": "model"});
+    # None on unsharded CPU runs
+    shard_axes: Optional[dict] = None
+
+
+def make_train_step(mcfg: ModelConfig, ocfg: AdamWConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, stats).
+    With micro_batches > 1 the batch's leading dim is split and gradients are
+    accumulated in a lax.scan (constant memory in the number of microbatches).
+    """
+
+    def loss_fn(p, mb):
+        return api.loss_fn(p, mcfg, mb, remat=tcfg.remat,
+                           shard_axes=tcfg.shard_axes)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if tcfg.micro_batches > 1:
+            n = tcfg.micro_batches
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = lsum / n
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, stats = adamw_update(grads, opt_state, params, ocfg)
+        stats = dict(stats, loss=loss)
+        return params, opt_state, stats
+
+    return train_step
+
+
+@dataclass
+class StragglerMonitor:
+    """Tracks per-step times; flags steps slower than k x the running median.
+    At scale the same policy consumes per-host collective timings; the
+    mitigation hook re-balances data-parallel buckets away from the slow host
+    (see training/elastic.py)."""
+    factor: float = 3.0
+    window: int = 32
+    times: list = field(default_factory=list)
+    flags: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = sorted(hist)[len(hist) // 2]
+        slow = len(hist) >= 8 and dt > self.factor * med
+        self.flags += int(slow)
+        return slow
+
+
+def train(mcfg: ModelConfig, dcfg: DataConfig, ocfg: AdamWConfig,
+          tcfg: TrainConfig, *, seed: int = 0,
+          fail_at: Optional[int] = None,
+          hooks: Optional[Dict[str, Callable]] = None) -> Dict[str, Any]:
+    """Fault-tolerant training driver.
+
+    Restart semantics: on entry, if ckpt_dir holds a COMMITTED checkpoint we
+    resume from it (params+opt+step); the deterministic data pipeline replays
+    from the restored step. ``fail_at`` injects a crash for the restart tests.
+    """
+    hooks = hooks or {}
+    params = api.init_params(jax.random.PRNGKey(seed), mcfg)
+    opt_state = adamw_init(params, ocfg)
+    start = 0
+    saver = ckpt.AsyncCheckpointer(tcfg.ckpt_dir, tcfg.keep) if tcfg.ckpt_dir else None
+
+    if tcfg.ckpt_dir and (last := ckpt.latest_step(tcfg.ckpt_dir)) is not None:
+        state = ckpt.restore({"params": params, "opt": opt_state},
+                             tcfg.ckpt_dir, last)
+        params, opt_state = state["params"], state["opt"]
+        start = last
+
+    step_fn = jax.jit(make_train_step(mcfg, ocfg, tcfg))
+    monitor = StragglerMonitor()
+    losses = []
+    for step in range(start, tcfg.steps):
+        if fail_at is not None and step == fail_at:
+            if saver:
+                saver.wait()
+            raise RuntimeError(f"injected node failure at step {step}")
+        batch = make_batch(dcfg, mcfg, step)
+        t0 = time.monotonic()
+        params, opt_state, stats = step_fn(params, opt_state, batch)
+        loss = float(stats["loss"])
+        monitor.observe(time.monotonic() - t0)
+        losses.append(loss)
+        if "on_step" in hooks:
+            hooks["on_step"](step, stats)
+        if saver and (step + 1) % tcfg.ckpt_every == 0:
+            saver.save({"params": params, "opt": opt_state}, step + 1)
+    if saver:
+        saver.wait()
+    return {"params": params, "opt": opt_state, "losses": losses,
+            "straggler_flags": monitor.flags}

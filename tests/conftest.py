@@ -1,0 +1,19 @@
+"""Pytest config: cap memory on the 1-core CI box.
+
+The suite jit-compiles hundreds of distinct programs (per-arch engines,
+kernels in interpret mode, sharded train steps); XLA's in-process executable
+cache grows unboundedly and late modules die with LLVM 'Cannot allocate
+memory'. Clearing jax caches between modules keeps the peak bounded without
+affecting test semantics.
+"""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,266 @@
+"""AQUA core behaviour tests: tiered tensors, coordinator protocol, placer
+optimality, control loops, and the paper's headline claims in the simulator.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.aqua_tensor import HOST, LOCAL, REMOTE, AquaTensor, TransferMeter
+from repro.core.control_loop import BatchInformer, LLMInformer
+from repro.core.coordinator import Coordinator
+from repro.core.perfmodel import A100_NVLINK, TPU_V5E, ModelCost
+from repro.core.placer import ModelSpec, place
+from repro.core.simulator import (Request, ServingSimulator,
+                                  long_prompt_tokens_per_s)
+
+
+# ---------------------------------------------------------------------------
+# AquaTensor
+# ---------------------------------------------------------------------------
+def _mk_tensor(**kw):
+    args = dict(n_logical=32, page_shape=(4, 8), local_slots=8, host_slots=32,
+                dtype=jnp.float32)
+    args.update(kw)
+    return AquaTensor(**args)
+
+
+def test_aqua_tensor_offload_fetch_roundtrip():
+    t = _mk_tensor()
+    t.add_remote_lease("donor0", 16)
+    lps = t.allocate(6)
+    data = jnp.arange(6 * 4 * 8, dtype=jnp.float32).reshape(6, 4, 8)
+    t.write_local(lps, data)
+    t.offload(lps[:4], prefer=REMOTE)
+    assert t.tier_counts() == {"local": 2, "remote": 4, "host": 0}
+    np.testing.assert_array_equal(np.asarray(t.read(lps)), np.asarray(data))
+    t.ensure_local(lps)
+    assert t.tier_counts()["local"] == 6
+    np.testing.assert_array_equal(np.asarray(t.read(lps)), np.asarray(data))
+
+
+def test_aqua_tensor_spills_to_host_when_no_lease():
+    t = _mk_tensor(local_slots=4)
+    lps = t.allocate(4)
+    data = jnp.ones((4, 4, 8), jnp.float32)
+    t.write_local(lps, data)
+    t.offload(lps, prefer=REMOTE)             # no donor -> host fallback
+    assert t.tier_counts()["host"] == 4
+    np.testing.assert_array_equal(np.asarray(t.read(lps)), np.asarray(data))
+
+
+def test_aqua_tensor_elastic_reclaim_preserves_data():
+    t = _mk_tensor()
+    t.add_remote_lease("donor0", 8)
+    lps = t.allocate(8)
+    data = jnp.asarray(np.random.default_rng(0).standard_normal((8, 4, 8)),
+                       jnp.float32)
+    t.write_local(lps, data)
+    t.offload(lps, prefer=REMOTE)
+    moved = t.evict_remote("donor0")          # donor reclaims its HBM
+    assert moved == 8
+    assert t.tier_counts() == {"local": 0, "remote": 0, "host": 8}
+    np.testing.assert_array_equal(np.asarray(t.read(lps)), np.asarray(data))
+
+
+def _offload_time(page_shape, tier):
+    meter = TransferMeter(hw=A100_NVLINK)
+    t = _mk_tensor(meter=meter, local_slots=16, page_shape=page_shape,
+                   host_slots=16)
+    t.add_remote_lease("d", 16)
+    lps = t.allocate(16)
+    t.write_local(lps, jnp.ones((16,) + page_shape, jnp.float32))
+    t.offload(lps, prefer=tier)
+    return meter.sim_time
+
+
+def test_meter_reproduces_fig3a_coalescing_economics():
+    """Small transfers don't benefit from the fabric (paper Fig. 3a: NVLink is
+    latency-bound below ~MB); large coalesced transfers win by ~bandwidth
+    ratio. This asymmetry is the reason AQUA TENSORS coalesce."""
+    small_f = _offload_time((4, 8), REMOTE)           # 2 KB total
+    small_h = _offload_time((4, 8), HOST)
+    assert small_f > 0.5 * small_h                    # no meaningful win
+    big_f = _offload_time((256, 1024), REMOTE)        # 16 MB total
+    big_h = _offload_time((256, 1024), HOST)
+    assert big_f < big_h / 4.0                        # fabric wins big
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 2), st.data())
+def test_aqua_tensor_property_read_invariant(n, moves, data):
+    """Property: page payloads survive any sequence of tier migrations."""
+    t = _mk_tensor(local_slots=16, host_slots=32)
+    t.add_remote_lease("d0", 8)
+    lps = t.allocate(n)
+    rng = np.random.default_rng(n * 7 + moves)
+    payload = jnp.asarray(rng.standard_normal((n, 4, 8)), jnp.float32)
+    t.write_local(lps, payload)
+    for _ in range(moves):
+        sel = lps[: data.draw(st.integers(1, n))]
+        tier = data.draw(st.sampled_from([REMOTE, HOST]))
+        t.offload(sel, prefer=tier)
+        t.ensure_local(sel)
+    t.ensure_local(lps)
+    np.testing.assert_array_equal(np.asarray(t.read(lps)), np.asarray(payload))
+
+
+# ---------------------------------------------------------------------------
+# Coordinator protocol
+# ---------------------------------------------------------------------------
+def test_coordinator_lease_allocate_reclaim_cycle():
+    c = Coordinator(strict_pairing=False)
+    c.offer("gpu0", 30e9)
+    grants = c.allocate("gpu1", 10e9)
+    assert grants == [("gpu0", 10e9)]
+    c.request_reclaim("gpu0")
+    assert c.pending_reclaims("gpu1") == ["gpu0"]
+    assert not c.reclaim_status("gpu0")       # consumer hasn't released yet
+    c.free("gpu1", "gpu0", 10e9)
+    assert c.reclaim_status("gpu0")
+
+
+def test_coordinator_strict_pairing_routes_to_matched_producer():
+    c = Coordinator(strict_pairing=True)
+    c.set_pairing({"llm0": "sd0"})
+    c.offer("sd0", 20e9)
+    c.offer("sd1", 40e9)                      # bigger, but not the match
+    assert c.allocate("llm0", 5e9) == [("sd0", 5e9)]
+
+
+def test_coordinator_falls_back_to_empty_when_no_producers():
+    c = Coordinator()
+    assert c.allocate("llm0", 5e9) == []      # engine then uses host DRAM
+
+
+# ---------------------------------------------------------------------------
+# Placer
+# ---------------------------------------------------------------------------
+def test_placer_matches_paper_fig4():
+    models = [ModelSpec("sd-0", 30, "producer"), ModelSpec("sd-1", 30, "producer"),
+              ModelSpec("llm-0", -25, "consumer"), ModelSpec("llm-1", -25, "consumer")]
+    p = place(models, 2, 2, 80.0, solver="bnb")
+    for s, ms in p.servers().items():
+        kinds = sorted(m.split("-")[0] for m in ms)
+        assert kinds == ["llm", "sd"]
+    assert len(p.pairs) == 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 3), st.data())
+def test_placer_bnb_is_optimal_vs_bruteforce(S, G, data):
+    import itertools
+    M = data.draw(st.integers(2, min(6, S * G)))
+    models = []
+    for i in range(M):
+        kind = data.draw(st.sampled_from(["producer", "consumer"]))
+        mem = data.draw(st.sampled_from([10.0, 25.0, 40.0]))
+        models.append(ModelSpec(f"m{i}", mem if kind == "producer" else -mem, kind))
+    p = place(models, S, G, 80.0, solver="bnb")
+    # brute force
+    from repro.core.placer import _objective
+    best = min(
+        (_objective(models, a, S, 80.0)
+         for a in itertools.product(range(S), repeat=M)
+         if max(np.bincount(a, minlength=S)) <= G),
+    )
+    assert p.objective <= best + 1e-9
+
+
+def test_placer_scales_to_128_gpus_quickly():
+    # paper appendix A.1: 128 GPUs, mixed modalities, < 45 s
+    models = []
+    for i in range(42):
+        models.append(ModelSpec(f"img{i}", 30.0, "producer"))
+        models.append(ModelSpec(f"aud{i}", 40.0, "producer"))
+        models.append(ModelSpec(f"llm{i}", -35.0, "consumer"))
+    p = place(models, 16, 8, 80.0, solver="greedy")
+    assert p.solve_time < 45.0
+    assert len(p.assignment) == 126
+
+
+# ---------------------------------------------------------------------------
+# Control loops
+# ---------------------------------------------------------------------------
+def test_llm_informer_donates_then_reclaims():
+    c = Coordinator(strict_pairing=False)
+    inf = LLMInformer("llm0", c, total_bytes=40e9, reserve_bytes=5e9,
+                      low_rate=2.0, high_rate=4.0, window=2)
+    d = inf.inform_stats(pending_requests=1, kv_utilization=0.1)
+    assert d.donate and d.delta_bytes == -(35e9)
+    assert c.allocate("peer", 1e9) == [("llm0", 1e9)]
+    # traffic spike -> reclaim requested; completes once peer frees
+    d = inf.inform_stats(pending_requests=50, kv_utilization=0.9)
+    assert d.reclaim and d.delta_bytes == 0.0
+    c.free("peer", "llm0", 1e9)
+    d = inf.inform_stats(pending_requests=50, kv_utilization=0.9)
+    assert d.reclaim and d.delta_bytes == 35e9
+
+
+def test_batch_informer_donates_non_working_set():
+    c = Coordinator(strict_pairing=False)
+    inf = BatchInformer("sd0", c, total_bytes=80e9, working_set_bytes=50e9)
+    d = inf.inform_stats()
+    assert d.donate and d.delta_bytes == -30e9
+
+
+# ---------------------------------------------------------------------------
+# Paper headline claims (simulator, A100 profile)
+# ---------------------------------------------------------------------------
+def _codellama_sim(scheduler, tier, reqs):
+    cfg = get_config("aqua-codellama-34b")
+    mc = ModelCost.from_config(cfg)
+    wb = cfg.param_count() * 2
+    sim = ServingSimulator(A100_NVLINK, mc, weight_bytes=wb,
+                           kv_capacity_bytes=80e9 - wb - 2e9,
+                           scheduler=scheduler, offload_tier=tier,
+                           max_running=20)
+    return sim.run(reqs)
+
+
+def _mkreqs(rate, n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(i, float(arr[i]), int(rng.integers(400, 1600)),
+                    int(rng.integers(150, 500))) for i in range(n)]
+
+
+def test_cfs_improves_ttft_multiple_x():
+    """Paper Fig. 9: CFS cuts TTFT multiple-x under bursty load (the paper's
+    4x shows up in the queued tail: vLLM starves late arrivals)."""
+    r_v = _codellama_sim("vllm", "host", _mkreqs(5.0))
+    r_a = _codellama_sim("cfs", "fabric", _mkreqs(5.0))
+    def p90(xs):
+        xs = sorted(xs)
+        return xs[int(0.9 * len(xs))]
+    assert p90(r_a.ttfts()) < p90(r_v.ttfts()) / 2.0
+    assert r_a.p50(r_a.ttfts()) < r_v.p50(r_v.ttfts()) / 1.8
+
+
+def test_aqua_recovers_cfs_rct_penalty():
+    """Paper Fig. 1b/9: CFS over PCIe inflates RCT; AQUA recovers most of it."""
+    r_h = _codellama_sim("cfs", "host", _mkreqs(5.0, seed=1))
+    r_f = _codellama_sim("cfs", "fabric", _mkreqs(5.0, seed=1))
+    assert r_f.p50(r_f.rcts()) < r_h.p50(r_h.rcts())
+
+
+def test_long_prompt_6x_on_paper_hardware():
+    """Paper Fig. 7: ~6x tokens in the same wall time vs FlexGen."""
+    cfg = get_config("aqua-opt-30b")
+    mc = ModelCost.from_config(cfg)
+    wb = cfg.param_count() * 2
+    free = 80e9 - wb - 12e9
+    th_h = long_prompt_tokens_per_s(A100_NVLINK, mc, ctx_tokens=8000,
+                                    free_hbm_bytes=free, weight_bytes=wb, tier="host")
+    th_f = long_prompt_tokens_per_s(A100_NVLINK, mc, ctx_tokens=8000,
+                                    free_hbm_bytes=free, weight_bytes=wb, tier="fabric")
+    assert 4.0 < th_f / th_h < 8.0            # paper: 6x
+
+
+def test_fabric_bandwidth_curve_matches_fig3a():
+    # ~100 GB/s at 2 MB, >= 230 GB/s for large buffers, tiny for small ones
+    bw2mb = A100_NVLINK.fabric.effective_bw(2e6)
+    assert 80e9 < bw2mb < 120e9
+    assert A100_NVLINK.fabric.effective_bw(1e9) > 230e9
+    assert A100_NVLINK.fabric.effective_bw(64e3) < 10e9

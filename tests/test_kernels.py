@@ -1,0 +1,181 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU), plus hypothesis property tests on the invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.kv_gather.kernel import gather_pages, scatter_pages
+from repro.kernels.kv_gather.ref import gather_pages_ref, scatter_pages_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.rwkv6_wkv.kernel import wkv6
+from repro.layers.rwkv6 import wkv6_ref
+
+
+def _rand(rng, shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,K,hd,causal,window", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 4, 4, 32, True, 64),      # sliding window
+    (2, 64, 192, 6, 2, 64, True, 0),        # right-aligned chunk (Sq < Sk)
+    (1, 128, 128, 2, 2, 128, False, 0),     # bidirectional
+    (1, 64, 64, 8, 1, 256, True, 0),        # MQA, gemma head_dim
+])
+def test_flash_attention_sweep(B, Sq, Sk, H, K, hd, causal, window, dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (B, Sq, H, hd), dtype)
+    k = _rand(rng, (B, Sk, K, hd), dtype)
+    v = _rand(rng, (B, Sk, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=TOL[dtype])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([64, 128]), st.sampled_from([1, 2, 4]),
+       st.sampled_from([32, 64]))
+def test_flash_attention_property(B, S, G, hd):
+    """Property: softmax rows are convex combinations -> output within V hull."""
+    rng = np.random.default_rng(B * S + G)
+    K = 2
+    q = _rand(rng, (B, S, K * G, hd), jnp.float32)
+    k = _rand(rng, (B, S, K, hd), jnp.float32)
+    v = _rand(rng, (B, S, K, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    assert float(out.max()) <= float(v.max()) + 1e-4
+    assert float(out.min()) >= float(v.min()) - 1e-4
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,hd,P,page,pps", [
+    (2, 4, 2, 64, 16, 8, 4),
+    (3, 6, 2, 32, 32, 16, 6),
+    (1, 8, 8, 128, 8, 8, 8),                # MHA
+    (4, 8, 1, 64, 64, 32, 4),               # MQA
+])
+def test_paged_attention_sweep(B, H, K, hd, P, page, pps, dtype):
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (B, H, hd), dtype)
+    kp = _rand(rng, (K, P, page, hd), dtype)
+    vp = _rand(rng, (K, P, page, hd), dtype)
+    bt = jnp.asarray(rng.integers(0, P, (B, pps)), jnp.int32)
+    ln = jnp.asarray(rng.integers(1, pps * page + 1, (B,)), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, ln, interpret=True)
+    ref = paged_attention_ref(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=TOL[dtype])
+
+
+def test_paged_attention_matches_contiguous():
+    """Paged result == contiguous attention when pages are laid out in order."""
+    rng = np.random.default_rng(2)
+    B, H, K, hd, page, pps = 2, 4, 2, 64, 8, 4
+    S = page * pps
+    kc = _rand(rng, (B, S, K, hd), jnp.float32)
+    vc = _rand(rng, (B, S, K, hd), jnp.float32)
+    q = _rand(rng, (B, 1, H, hd), jnp.float32)
+    ref = flash_attention_ref(q, kc, vc, causal=True)[:, 0]
+    # lay pages contiguously: page p of seq b -> pool id b*pps+p
+    kp = kc.reshape(B, pps, page, K, hd).transpose(3, 0, 1, 2, 4).reshape(K, B * pps, page, hd)
+    vp = vc.reshape(B, pps, page, K, hd).transpose(3, 0, 1, 2, 4).reshape(K, B * pps, page, hd)
+    bt = jnp.asarray([[b * pps + p for p in range(pps)] for b in range(B)], jnp.int32)
+    ln = jnp.full((B,), S, jnp.int32)
+    out = paged_attention(q[:, 0], kp, vp, bt, ln, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# kv gather / scatter (AQUA coalescing)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("P,page,d,n", [(16, 8, 32, 5), (64, 16, 128, 64), (8, 4, 8, 1)])
+def test_kv_gather_sweep(P, page, d, n, dtype):
+    rng = np.random.default_rng(3)
+    if dtype == jnp.int8:
+        pool = jnp.asarray(rng.integers(-100, 100, (P, page, d)), dtype)
+    else:
+        pool = _rand(rng, (P, page, d), dtype)
+    ids = jnp.asarray(rng.choice(P, n, replace=False), jnp.int32)
+    g = gather_pages(pool, ids, interpret=True)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(gather_pages_ref(pool, ids)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 32), st.integers(1, 16), st.data())
+def test_gather_scatter_roundtrip(P, n, data):
+    """Property: scatter(gather(pool, ids), ids) == pool (page permutation id)."""
+    n = min(n, P)
+    rng = np.random.default_rng(P * 31 + n)
+    pool = jnp.asarray(rng.standard_normal((P, 8, 16)), jnp.float32)
+    ids = jnp.asarray(rng.choice(P, n, replace=False), jnp.int32)
+    staging = gather_pages(pool, ids, interpret=True)
+    back = scatter_pages(pool, staging, ids, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(pool))
+    # and scattering new data touches exactly the listed pages
+    new = jnp.ones_like(staging) * 7.0
+    out = scatter_pages(pool, new, ids, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[ids]), np.asarray(new))
+    untouched = np.setdiff1d(np.arange(P), np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(out[untouched]), np.asarray(pool[untouched]))
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,hd,wmax", [
+    (2, 64, 3, 32, 0.1),
+    (1, 128, 2, 64, 1.0),
+    (2, 96, 4, 32, 5.0),                    # strong decay stress
+])
+def test_wkv6_sweep(B, T, H, hd, wmax, dtype):
+    rng = np.random.default_rng(4)
+    r = _rand(rng, (B, T, H, hd), dtype)
+    k = _rand(rng, (B, T, H, hd), dtype)
+    v = _rand(rng, (B, T, H, hd), dtype)
+    w = -jnp.asarray(rng.uniform(1e-3, wmax, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, hd, hd)), jnp.float32) * 0.1
+    y, sT = wkv6(r, k, v, w, u, s0, chunk=32, interpret=True)
+    yr, sTr = wkv6_ref(r, k, v, w, u, s0)
+    # with weak decay the state accumulates to |y| ~ 1e2: bf16 output rounding
+    # is ~0.4% relative, so compare with rtol + atol
+    tol = dict(rtol=1e-3, atol=5e-4) if dtype == jnp.float32 else dict(rtol=2e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sTr), **tol)
+
+
+def test_wkv6_chunk_invariance():
+    """Property: output independent of chunk size (exactness of chunking)."""
+    rng = np.random.default_rng(5)
+    B, T, H, hd = 1, 128, 2, 32
+    r, k, v = (jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32) for _ in range(3))
+    w = -jnp.asarray(rng.uniform(1e-3, 2.0, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, hd)), jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    outs = [wkv6(r, k, v, w, u, s0, chunk=c, interpret=True)[0] for c in (16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=5e-4)

@@ -1,0 +1,158 @@
+"""Serving engine tests: transparent AQUA paging is bit-exact, CFS fairness
+invariants hold, coordinator-driven elasticity works mid-serve, and the LoRA
+adapter cache meters coalesced fetches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core.aqua_tensor import HOST, REMOTE
+from repro.core.coordinator import Coordinator
+from repro.models import api
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import ContextStore
+from repro.serving.lora import (AdapterCache, adapter_bytes, apply_lora,
+                                init_adapter)
+from repro.serving.scheduler import CFSScheduler, FCFSScheduler, ReqState
+
+FAMILIES = ["qwen1.5-0.5b", "rwkv6-3b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"]
+
+
+def _greedy(cfg, params, prompt, n, max_seq=96):
+    cache = api.init_decode_state(cfg, 1, max_seq)
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = api.prefill(params, cfg, toks, cache)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        pos = jnp.asarray([len(prompt) + len(out) - 1], jnp.int32)
+        logits, cache = api.decode_step(params, cfg, cache,
+                                        jnp.asarray([out[-1]], jnp.int32), pos)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _mk_engine(cfg, params, **kw):
+    store = ContextStore(page_elems=2048, local_pages=8, host_pages=2048,
+                         n_logical=4096)
+    store.add_remote_lease("donor0", 256 * 2048 * 4)
+    args = dict(max_running=2, max_seq=96, scheduler="cfs", slice_tokens=3,
+                store=store, offload_tier=REMOTE)
+    args.update(kw)
+    return ServingEngine(cfg, params, **args), store
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_cfs_paging_is_transparent(arch):
+    """Tokens under CFS + AQUA paging == direct per-request greedy decode."""
+    cfg = smoke_config(get_config(arch))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(4, 12)))))
+               for _ in range(5)]
+    truth = [_greedy(cfg, params, p, 6) for p in prompts]
+    eng, store = _mk_engine(cfg, params)
+    for p in prompts:
+        eng.submit(p, 6)
+    m = eng.run(400)
+    got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
+    assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
+    assert m.preemptions > 0 and m.restores > 0
+    assert store.stats()["meter"]["bytes_fabric"] > 0
+
+
+def test_host_tier_paging_also_transparent():
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8))) for _ in range(4)]
+    truth = [_greedy(cfg, params, p, 5) for p in prompts]
+    eng, store = _mk_engine(cfg, params, offload_tier=HOST)
+    for p in prompts:
+        eng.submit(p, 5)
+    eng.run(300)
+    got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
+    assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
+    assert store.stats()["meter"]["bytes_host"] > 0
+
+
+def test_cfs_fairness_bounded_fcfs_not():
+    """CFS bounds the max-min service spread; FCFS starves late arrivals."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 6))) for _ in range(6)]
+
+    eng_c, _ = _mk_engine(cfg, params, slice_tokens=2)
+    eng_f, _ = _mk_engine(cfg, params, scheduler="fcfs")
+    for p in prompts:
+        eng_c.submit(p, 12)
+        eng_f.submit(p, 12)
+    mc = eng_c.run(600)
+    mf = eng_f.run(600)
+    # CFS: spread bounded by ~slice; FCFS: first admitted finish before others start
+    assert max(mc.fairness_trace) <= 2 * 2 + 1
+    assert max(mf.fairness_trace) >= 11
+
+
+def test_elastic_reclaim_mid_serve_preserves_correctness():
+    """Donor reclaims its lease while requests are parked on it: pages fall
+    back to host, decoding continues bit-exactly (paper §6.2)."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8))) for _ in range(5)]
+    truth = [_greedy(cfg, params, p, 8) for p in prompts]
+
+    coord = Coordinator(strict_pairing=False)
+    coord.offer("producer0", 256 * 2048 * 4)
+    store = ContextStore(page_elems=2048, local_pages=8, host_pages=2048,
+                         n_logical=4096)
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=96, scheduler="cfs",
+                        slice_tokens=3, store=store, offload_tier=REMOTE,
+                        coordinator=coord, name="llm0",
+                        want_remote_bytes=256 * 2048 * 4, respond_every=1)
+    for p in prompts:
+        eng.submit(p, 8)
+    for _ in range(10):
+        eng.step()
+    coord.request_reclaim("producer0")        # traffic spike on the producer
+    eng.run(500)
+    assert coord.reclaim_status("producer0")
+    got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
+    assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
+    assert store.stats()["tiers"]["remote"] == 0
+
+
+def test_lora_adapter_cache_meters_cold_fetches():
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    ad0 = init_adapter(jax.random.PRNGKey(1), cfg, rank=4)
+    ad1 = init_adapter(jax.random.PRNGKey(2), cfg, rank=4)
+    cache = AdapterCache(capacity_local=1, page_elems=4096)
+    cache.put(0, ad0)
+    cache.put(1, ad1)
+    cache.fetch(0)
+    t1 = cache.aqua.meter.sim_time
+    cache.fetch(0)                            # hit: free
+    assert cache.aqua.meter.sim_time == t1
+    cache.fetch(1)                            # cold: metered
+    assert cache.aqua.meter.sim_time > t1
+
+
+def test_apply_lora_changes_only_qv_outputs():
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ad = init_adapter(jax.random.PRNGKey(1), cfg, rank=4)
+    # B zero-init => identity at init (standard LoRA property)
+    p2 = apply_lora(params, cfg, ad)
+    toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    l0, _ = api.model_module(cfg).forward(params, cfg, toks)
+    l1, _ = api.model_module(cfg).forward(p2, cfg, toks)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-6)
+    # non-zero B changes outputs
+    ad2 = dict(ad, q_b=jnp.ones_like(ad["q_b"]) * 0.02)
+    p3 = apply_lora(params, cfg, ad2)
+    l2, _ = api.model_module(cfg).forward(p3, cfg, toks)
+    assert float(jnp.abs(l2 - l0).max()) > 1e-4
