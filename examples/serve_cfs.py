@@ -14,7 +14,6 @@ from repro.core.coordinator import Coordinator
 from repro.core.placer import ModelSpec, place
 from repro.models import api
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import ContextStore
 
 
 def main():
@@ -35,15 +34,16 @@ def main():
                   working_set_bytes=50e9).inform_stats()
     print("offers:", coord.stats())
 
-    # 3. consumer engine leases it and serves with CFS
+    # 3. consumer engine leases it and serves with CFS; the page-native
+    #    runtime puts the leased HBM directly behind the decode KV pages
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    store = ContextStore(page_elems=2048, local_pages=8, host_pages=1024)
     eng = ServingEngine(cfg, params, max_running=2, max_seq=96,
-                        scheduler="cfs", slice_tokens=3, store=store,
+                        scheduler="cfs", slice_tokens=3,
                         offload_tier=REMOTE, coordinator=coord,
                         name="llm-qwen", want_remote_bytes=1e9,
                         respond_every=2)
+    print("runtime:", eng.runtime)
     rng = np.random.default_rng(2)
     for i in range(6):
         eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, 10))), 8)
@@ -55,8 +55,9 @@ def main():
     eng.run(500)
     print(f"served {len(eng.finished)}/6; reclaim complete: "
           f"{coord.reclaim_status('img-sd')}")
-    print("store tiers after reclaim:", store.stats()["tiers"])
+    print("KV tiers after reclaim:", eng.pager.stats()["tiers"])
     assert coord.reclaim_status("img-sd")
+    assert eng.pager.stats()["tiers"]["remote"] == 0
     print("serve_cfs OK")
 
 

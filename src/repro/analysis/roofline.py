@@ -129,14 +129,25 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
     return comps
 
 
+def _arg_names(argstr: str) -> List[str]:
+    """Operand names from an HLO operand list. Newer XLA prints typed
+    operands (``dot(f32[64,256]{1,0} %Arg_0.1, ...)``) whose dims contain
+    commas, so prefer the %-prefixed tokens; fall back to comma splitting
+    for the older bare-name dialect."""
+    names = re.findall(r"%([\w.\-]+)", argstr)
+    if names:
+        return names
+    return [a.strip().split()[-1] for a in argstr.split(",") if a.strip()]
+
+
 def _dot_flops(instr: Instr, comp: Computation) -> float:
     """2 * batch * M * N * K from output shape + contracting dims."""
     out_dt, out_dims = _shape_dims(instr.type_str)
     m = re.search(r"dot\(([^)]*)\)", instr.line)
     if not m:
         return 0.0
-    lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
-    lhs = comp.by_name.get(lhs_name)
+    args = _arg_names(m.group(1))
+    lhs = comp.by_name.get(args[0]) if args else None
     k = 1
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
     if lhs is not None and cd:
@@ -155,8 +166,8 @@ def _conv_flops(instr: Instr, comp: Computation) -> float:
     m = re.search(r"convolution\(([^)]*)\)", instr.line)
     if not m:
         return 0.0
-    rhs_name = m.group(1).split(",")[1].strip().lstrip("%")
-    rhs = comp.by_name.get(rhs_name)
+    args = _arg_names(m.group(1))
+    rhs = comp.by_name.get(args[1]) if len(args) > 1 else None
     kn = 1
     if rhs is not None:
         _, rdims = _shape_dims(rhs.type_str)
@@ -195,7 +206,7 @@ def _update_bytes(instr: Instr, comp: Computation) -> int:
     """Traffic of an in-place dynamic-update-slice/scatter = 2x update size."""
     m = re.search(rf"{instr.op}\(([^)]*)\)", instr.line)
     if m:
-        args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+        args = _arg_names(m.group(1))
         if len(args) >= 2 and args[1] in comp.by_name:
             return 2 * _parse_shape_bytes(comp.by_name[args[1]].type_str)
     return _parse_shape_bytes(instr.type_str) // 8
@@ -221,8 +232,8 @@ def _fusion_out_bytes(ins: Instr, called: Computation) -> int:
         m = re.search(r"tuple\(([^)]*)\)", root.line)
         tot = 0
         if m:
-            for a in m.group(1).split(","):
-                el = called.by_name.get(a.strip().lstrip("%"))
+            for a in _arg_names(m.group(1)):
+                el = called.by_name.get(a)
                 if el is None:
                     continue
                 if el.op in ("dynamic-update-slice", "scatter"):

@@ -17,6 +17,12 @@ the serving engine only sees logical page ids; ``ensure_local`` is invoked at
 inference-iteration boundaries (the paper's ``aqua.respond()`` insight — pages
 are only read/written between iterations, so migration is race-free).
 
+Serving-runtime hooks (docs/paged_runtime.md): the LOCAL pool is directly the
+operand of the paged_attention kernels, ``block_tables`` answers batched
+logical->physical LOCAL slot queries for whole request sets, and
+``set_page_fill`` declares partial tails so a half-filled page is moved and
+metered at its valid fraction only.
+
 Elasticity: the remote tier is backed by *leases* from the coordinator; a
 donor can reclaim its memory at any iteration boundary via ``evict_remote``.
 
@@ -83,6 +89,10 @@ class AquaTensor:
         self._remote_free: Dict[str, List[int]] = {}
         # page_table[lp] = (tier, slot, donor_idx) ; -1 = unallocated
         self.page_table = np.full((n_logical, 3), -1, np.int64)
+        # fraction of the page payload that holds live data (partial tails):
+        # transfers are metered on valid bytes only, so a request's last,
+        # half-filled KV page does not inflate its migration cost.
+        self.page_fill = np.ones((n_logical,), np.float64)
         self._free_local = list(range(local_slots))[::-1]
         self._free_host = list(range(host_slots))[::-1]
         self._donors: List[str] = []
@@ -123,6 +133,7 @@ class AquaTensor:
         for lp in lps:
             tier, slot, donor = self._take_slot(prefer)
             self.page_table[lp] = (tier, slot, donor)
+        self.page_fill[lps] = 1.0
         return lps
 
     def free(self, lps: Sequence[int]):
@@ -135,6 +146,11 @@ class AquaTensor:
             elif tier == REMOTE:
                 self._remote_free[self._donors[donor]].append(int(slot))
             self.page_table[lp] = (-1, -1, -1)
+            self.page_fill[lp] = 1.0
+
+    def set_page_fill(self, lps: Sequence[int], frac):
+        """Declare the valid fraction of each page payload (partial tails)."""
+        self.page_fill[np.asarray(lps, np.int64)] = np.clip(frac, 0.0, 1.0)
 
     def _take_slot(self, prefer: int = LOCAL) -> Tuple[int, int, int]:
         order = {LOCAL: [LOCAL, REMOTE, HOST], REMOTE: [REMOTE, HOST, LOCAL],
@@ -204,14 +220,38 @@ class AquaTensor:
             else:
                 out.append(jnp.asarray(self.host_pool[slot]))
         if meter:
+            fills = self.page_fill[np.asarray(lps, np.int64)]
             for tier in (REMOTE, HOST):
                 idx = np.nonzero(rows[:, 0] == tier)[0]
                 if len(idx):
-                    self.meter.record(len(idx) * self.page_bytes, tier, len(idx))
+                    self.meter.record(float(fills[idx].sum()) * self.page_bytes,
+                                      tier, len(idx))
         return jnp.stack(out)
 
     def local_slots_of(self, lps: Sequence[int]) -> np.ndarray:
         return self._slots_of(lps, LOCAL)
+
+    def block_tables(self, lps_rows: Sequence[Sequence[int]], pad_to: int,
+                     *, pad_slot: int = 0) -> np.ndarray:
+        """Batched block-table query: physical LOCAL slots of each row's
+        logical pages as one padded (B, pad_to) int32 table — the operand the
+        paged_attention kernel consumes. Every listed page must be LOCAL
+        (call ``ensure_local`` first); padding entries point at ``pad_slot``
+        (a resident dummy) so masked DMAs stay in-bounds."""
+        out = np.full((len(lps_rows), pad_to), pad_slot, np.int32)
+        for b, lps in enumerate(lps_rows):
+            if len(lps) == 0:
+                continue
+            if len(lps) > pad_to:
+                raise ValueError(f"{self.name}: row {b} has {len(lps)} pages"
+                                 f" > pad_to={pad_to}")
+            rows = self.page_table[np.asarray(lps, np.int64)]
+            if not (rows[:, 0] == LOCAL).all():
+                bad = [int(l) for l, r in zip(lps, rows) if r[0] != LOCAL]
+                raise ValueError(f"{self.name}: pages {bad} not LOCAL; "
+                                 "ensure_local before building block tables")
+            out[b, :len(lps)] = rows[:, 1]
+        return out
 
     def _slots_of(self, lps, tier) -> np.ndarray:
         rows = self.page_table[np.asarray(lps, np.int64)]
@@ -264,7 +304,9 @@ class AquaTensor:
                 staging = jnp.asarray(self.host_pool[slots])
                 for s in slots:
                     self._free_host.append(int(s))
-            nbytes = staging.nbytes
+            # valid payload only: a partial tail page moves (and is priced as)
+            # its live rows, not the whole page buffer
+            nbytes = float(self.page_fill[group].sum()) * self.page_bytes
             # 2) one large message over the appropriate link (metered)
             transfer_tier = REMOTE if (src_tier == REMOTE or dst_tier == REMOTE) else HOST
             if dst_tier != src_tier:
@@ -272,7 +314,8 @@ class AquaTensor:
             # 3) scatter into destination slots
             new_rows = []
             if dst_tier == LOCAL:
-                dst_slots = [self._free_local.pop() for _ in group]
+                dst_slots = [self._pop_free(self._free_local, LOCAL, len(group))
+                             for _ in group]
                 self.local_pool = kv_ops.scatter_pages(
                     self.local_pool, staging, jnp.asarray(dst_slots, jnp.int32))
                 new_rows = [(LOCAL, s, -1) for s in dst_slots]
@@ -291,15 +334,28 @@ class AquaTensor:
                     placed += take
                 if placed < len(group):          # remote full -> host fallback
                     rest = staging[placed:]
-                    dst_slots = [self._free_host.pop() for _ in range(len(group) - placed)]
+                    need = len(group) - placed
+                    dst_slots = [self._pop_free(self._free_host, HOST, need)
+                                 for _ in range(need)]
                     self.host_pool[np.asarray(dst_slots)] = np.asarray(rest)
                     new_rows += [(HOST, s, -1) for s in dst_slots]
             else:
-                dst_slots = [self._free_host.pop() for _ in group]
+                dst_slots = [self._pop_free(self._free_host, HOST, len(group))
+                             for _ in group]
                 self.host_pool[np.asarray(dst_slots)] = np.asarray(staging)
                 new_rows = [(HOST, s, -1) for s in dst_slots]
             for lp, row in zip(group, new_rows):
                 self.page_table[lp] = row
+
+    def _pop_free(self, free_list: List[int], tier: int, need: int) -> int:
+        """Take one destination slot, or fail loudly: a bare IndexError from
+        ``list.pop`` told the operator nothing about which tensor/tier ran dry
+        (e.g. ``evict_remote`` onto an already-full host pool)."""
+        if not free_list:
+            raise MemoryError(
+                f"{self.name}: {TIER_NAMES[tier]} tier exhausted while "
+                f"migrating pages (needed {need} free slot(s))")
+        return free_list.pop()
 
     # ------------------------------------------------------------------
     def tier_counts(self) -> Dict[str, int]:

@@ -133,14 +133,30 @@ class ModelCost:
 def context_switch_time(hw: HardwareProfile, kv_bytes: float, *,
                         tier: str, coalesced: bool = True,
                         n_fragments: int = 1) -> float:
-    """Time to page a prompt's context in or out.
+    """Time to page a prompt's context in or out via the BLOB path.
 
     tier: 'fabric' (AQUA: neighbor HBM over NVLink/ICI) or 'host' (DRAM/PCIe).
     coalesced=False models the naive path the paper measured first: one message
     per KV fragment (layer x page), which collapses to latency-bound transfers
-    (Fig. 3a) — the motivation for the kv_gather kernel.
+    (Fig. 3a) — the motivation for the kv_gather kernel. coalesced=True still
+    pays a full HBM pass to gather every cache leaf into the staging blob;
+    ``page_flip_time`` below is the page-native runtime that doesn't.
     """
     link = hw.fabric if tier == "fabric" else hw.host_link
     msgs = max(1, n_fragments) if not coalesced else 1
     gather_overhead = kv_bytes / (hw.hbm_bw * hw.membw_util) if coalesced else 0.0
     return gather_overhead + link.time(kv_bytes, n_messages=msgs)
+
+
+def page_flip_time(hw: HardwareProfile, payload_bytes: float, *,
+                   tier: str, n_groups: int = 1) -> float:
+    """Time to preempt/restore a request on the PAGE-NATIVE runtime.
+
+    The decode cache already lives on pages, so a context switch is a
+    page-table tier migration: no per-leaf gather, no float32 repack — just
+    the native-dtype page payload moving as one coalesced message per
+    (tier, donor) group (``n_groups``). This is what the paged ServingEngine
+    meters, and what the simulator prices by default.
+    """
+    link = hw.fabric if tier == "fabric" else hw.host_link
+    return link.time(payload_bytes, n_messages=max(1, n_groups))

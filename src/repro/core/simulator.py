@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.perfmodel import (HardwareProfile, ModelCost,
-                                  context_switch_time)
+                                  context_switch_time, page_flip_time)
 
 
 @dataclass
@@ -62,7 +62,8 @@ class ServingSimulator:
                  weight_bytes: float, kv_capacity_bytes: float,
                  scheduler: str = "vllm", offload_tier: str = "host",
                  slice_tokens: int = 5, max_running: int = 16,
-                 coalesced: bool = True, lora_cache_bytes: float = 0.0,
+                 coalesced: bool = True, paging: str = "paged",
+                 lora_cache_bytes: float = 0.0,
                  lora_num_adapters: int = 200):
         self.hw = hw
         self.model = model
@@ -73,6 +74,10 @@ class ServingSimulator:
         self.slice_tokens = slice_tokens
         self.max_running = max_running
         self.coalesced = coalesced
+        # 'paged': decode KV lives on pages; a context switch is a page-table
+        # tier flip (no repack gather — matches the paged ServingEngine).
+        # 'blob': the seed path — gather every leaf into a staging blob first.
+        self.paging = paging
         self.lora_cache = lora_cache_bytes
         self.lora_num_adapters = lora_num_adapters
 
@@ -190,6 +195,10 @@ class ServingSimulator:
     # ------------------------------------------------------------------
     def _switch_time(self, r: Request, direction: str) -> float:
         kv = self.model.kv_bytes(r.prompt_len + r.generated)
+        if self.paging == "paged" and self.coalesced:
+            # page-native runtime: tier flip of the page payload, one message
+            # per (tier, donor) group — no repack gather
+            return page_flip_time(self.hw, kv, tier=self.tier)
         # uncoalesced: one message per layer-page fragment (paper Fig. 3a pain)
         n_frag = 1 if self.coalesced else max(1, int(kv // (2 * 16 * 128 * 64)))
         return context_switch_time(self.hw, kv, tier=self.tier,

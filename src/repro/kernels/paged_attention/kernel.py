@@ -1,4 +1,12 @@
-"""Paged decode attention Pallas TPU kernel (serving hot spot).
+"""Paged decode attention Pallas TPU kernels (serving hot spot).
+
+Three entry points:
+  * ``paged_attention``       — split K/V pools ``(K, P, page, hd)``
+  * ``paged_attention_pool``  — fused page-major pool ``(P, 2, K, page, hd)``:
+    the AquaTensor LOCAL pool IS the operand (batched block tables; the
+    serving runtime's layout — tier migration moves whole slots, no repack)
+  * ``append_kv``             — page-append writer: one decode token's K/V
+    into each sequence's current page, in place via input-output aliasing
 
 The block table is passed as a *scalar-prefetch* operand
 (``pltpu.PrefetchScalarGridSpec``) so the K/V BlockSpec index maps can resolve
@@ -60,6 +68,131 @@ def _paged_kernel(block_tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
     def _finalize():
         l = l_ref[...]
         o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def _paged_pool_kernel(block_tables_ref, lengths_ref, q_ref, kv_ref, o_ref,
+                       acc_ref, m_ref, l_ref, *, page: int, scale: float):
+    """Fused-pool variant: one (1, 2, 1, page, hd) block carries the K and V
+    halves of a page, so each grid step issues a single DMA per page."""
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+    k = kv_ref[0, 0, 0].astype(jnp.float32)                # (page, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = kv_ref[0, 1, 0].astype(jnp.float32)                # (page, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == npages - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_attention_pool(q, kv_pool, block_tables, lengths, *,
+                         scale: float | None = None, interpret: bool = False):
+    """Batched block-table decode attention over a fused page-major pool.
+
+    This is the serving-runtime layout: ``kv_pool`` IS the AquaTensor LOCAL
+    pool, page-major so tier migration moves whole slots without repacking.
+
+    q:            (B, H, hd)                   one query token per sequence
+    kv_pool:      (P, 2, K, page, hd)          [:,0]=K, [:,1]=V
+    block_tables: (B, pps) int32               physical page slots per sequence
+    lengths:      (B,) int32                   tokens present per sequence
+    -> (B, H, hd)
+    """
+    B, H, hd = q.shape
+    P, _, K, page, _ = kv_pool.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, K, G, hd)
+    kernel = functools.partial(_paged_pool_kernel, page=page, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block_tables, lengths
+        grid=(B, K, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 2, 1, page, hd),
+                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, kv_pool)
+    return out.reshape(B, H, hd)
+
+
+def _append_kernel(slots_ref, offs_ref, k_ref, v_ref, pool_ref, out_ref, *,
+                   page: int):
+    """Copy the target page block, then overwrite one token row of K and V."""
+    b = pl.program_id(0)
+    off = offs_ref[b]
+    out_ref[...] = pool_ref[...]
+    out_ref[0, 0, :, pl.ds(off, 1), :] = k_ref[0][:, None, :]
+    out_ref[0, 1, :, pl.ds(off, 1), :] = v_ref[0][:, None, :]
+
+
+def append_kv(kv_pool, k_new, v_new, slots, offsets, *, interpret: bool = False):
+    """Page-append writer: one decode token's K/V into its page, per sequence.
+
+    kv_pool: (P, 2, K, page, hd); k_new/v_new: (B, K, hd);
+    slots: (B,) int32 physical page slot holding the token's position;
+    offsets: (B,) int32 row within the page (= pos % page).
+    Returns the updated pool (in place on TPU via input-output aliasing).
+    """
+    P, _, K, page, hd = kv_pool.shape
+    B = k_new.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # slots, offsets
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K, hd), lambda b, s, o: (b, 0, 0)),       # k_new
+            pl.BlockSpec((1, K, hd), lambda b, s, o: (b, 0, 0)),       # v_new
+            pl.BlockSpec((1, 2, K, page, hd),
+                         lambda b, s, o: (s[b], 0, 0, 0, 0)),          # pool
+        ],
+        out_specs=pl.BlockSpec((1, 2, K, page, hd),
+                               lambda b, s, o: (s[b], 0, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_append_kernel, page=page),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(kv_pool.shape, kv_pool.dtype),
+        input_output_aliases={4: 0},           # pool (incl. scalar args) -> out
+        interpret=interpret,
+    )(slots, offsets, k_new, v_new, kv_pool)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,

@@ -1,11 +1,19 @@
-"""Jit'd public wrapper for paged decode attention."""
+"""Jit'd public wrappers for paged decode attention + page writers.
+
+These are the ops the serving hot path calls: on CPU the Pallas kernels run
+in interpret mode (bit-exact vs the TPU lowering for these access patterns);
+``impl='xla'`` callers can use the jnp oracles in ``ref.py`` instead.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.kernels.paged_attention.kernel import append_kv as _append_kv
 from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.kernel import \
+    paged_attention_pool as _kernel_pool
 
 
 def _on_cpu() -> bool:
@@ -16,3 +24,17 @@ def _on_cpu() -> bool:
 def paged_attention(q, k_pages, v_pages, block_tables, lengths):
     return _kernel(q, k_pages, v_pages, block_tables, lengths,
                    interpret=_on_cpu())
+
+
+@jax.jit
+def paged_attention_pool(q, kv_pool, block_tables, lengths):
+    """Decode attention reading the fused page-major AquaTensor pool."""
+    return _kernel_pool(q, kv_pool, block_tables, lengths,
+                        interpret=_on_cpu())
+
+
+@jax.jit
+def append_kv(kv_pool, k_new, v_new, slots, offsets):
+    """Append one decode token's K/V into each sequence's current page."""
+    return _append_kv(kv_pool, k_new, v_new, slots, offsets,
+                      interpret=_on_cpu())

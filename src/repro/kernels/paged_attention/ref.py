@@ -37,3 +37,29 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgs,bksd->bkgd", probs, vg)
     return out.reshape(B, H, hd)
+
+
+def paged_attention_pool_ref(q, kv_pool, block_tables, lengths,
+                             scale: float | None = None):
+    """Oracle for the fused page-major pool layout.
+
+    q: (B,H,hd); kv_pool: (P,2,K,page,hd); block_tables: (B,pps); lengths (B,).
+    """
+    k_pages = jnp.moveaxis(kv_pool[:, 0], 1, 0)       # (K, P, page, hd)
+    v_pages = jnp.moveaxis(kv_pool[:, 1], 1, 0)
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               scale=scale)
+
+
+def append_kv_ref(kv_pool, k_new, v_new, slots, offsets):
+    """Oracle for the page-append writer.
+
+    kv_pool: (P,2,K,page,hd); k_new/v_new: (B,K,hd); slots/offsets: (B,).
+    """
+    B, K, hd = k_new.shape
+    heads = jnp.arange(K)[None, :]                    # broadcast to (B, K)
+    kv_pool = kv_pool.at[slots[:, None], 0, heads,
+                         offsets[:, None]].set(k_new.astype(kv_pool.dtype))
+    kv_pool = kv_pool.at[slots[:, None], 1, heads,
+                         offsets[:, None]].set(v_new.astype(kv_pool.dtype))
+    return kv_pool

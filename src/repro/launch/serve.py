@@ -27,18 +27,19 @@ def main():
     from repro.core.aqua_tensor import HOST, REMOTE
     from repro.models import api
     from repro.serving.engine import ServingEngine
-    from repro.serving.kv_cache import ContextStore
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_config(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    store = ContextStore(page_elems=2048, local_pages=16, host_pages=4096)
-    store.add_remote_lease("donor0", 512 * 2048 * 4)
     eng = ServingEngine(cfg, params, max_running=args.max_running, max_seq=96,
                         scheduler=args.scheduler,
-                        slice_tokens=args.slice_tokens, store=store,
+                        slice_tokens=args.slice_tokens,
                         offload_tier=REMOTE if args.offload == "fabric" else HOST)
+    # donor lease for the fabric tier (page pool or blob store, runtime-agnostic)
+    eng.pager.add_remote_lease("donor0", 512 * 2048 * 4)
+    print(f"runtime: {eng.runtime} (page-native KV)" if eng.runtime == "paged"
+          else f"runtime: {eng.runtime} (blob shim)")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, 8))),
@@ -50,7 +51,7 @@ def main():
           f"restores={m.restores}")
     print(f"max fairness spread: {max(m.fairness_trace)} tokens "
           f"(CFS bounds this; FCFS does not)")
-    print("AQUA store:", store.stats())
+    print("AQUA pager:", eng.pager.stats())
 
 
 if __name__ == "__main__":

@@ -136,6 +136,55 @@ def _write_slot(buf, new, slot):
     return select_update(buf, new[:, 0], slot)
 
 
+def write_prefill_pages(kv_pool, k, v, block_table, *, page_tokens: int):
+    """Prefill writes pages directly: K/V (1,T,Hkv,hd) into the fused
+    page-major pool at the request's freshly-allocated physical slots.
+
+    kv_pool: (P, 2, K, page, hd); block_table: (pps,) int32 LOCAL slots.
+    The partial tail page is zero-padded past T (masked by `lengths` at read).
+    """
+    _, T, K, hd = k.shape
+    pps = block_table.shape[0]
+    pad = pps * page_tokens - T
+
+    def pages(z):
+        z = jnp.pad(z[0], ((0, pad), (0, 0), (0, 0)))       # (pps*page, K, hd)
+        return z.reshape(pps, page_tokens, K, hd).transpose(0, 2, 1, 3)
+
+    kv = jnp.stack([pages(k), pages(v)], axis=1)            # (pps,2,K,page,hd)
+    return kv_pool.at[block_table].set(kv.astype(kv_pool.dtype))
+
+
+def attention_decode_paged(params, cfg: ModelConfig, x, kv_pool, block_table,
+                           pos, *, impl: str = "pallas"):
+    """One-token decode reading/writing the paged KV pool (full attention).
+
+    x: (B,1,d); kv_pool: (P,2,K,page,hd) — the AquaTensor LOCAL pool;
+    block_table: (B,pps) int32 physical page slots; pos: (B,) positions.
+    The new token's K/V is appended in place via the page-append writer op
+    and attention runs through kernels/paged_attention (interpret on CPU);
+    ``impl='xla'`` selects the jnp oracles (dry-run / debugging).
+    """
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention.ref import (append_kv_ref,
+                                                   paged_attention_pool_ref)
+    B = x.shape[0]
+    page = kv_pool.shape[3]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    positions = pos[:, None]                                # (B,1)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    slot = jnp.take_along_axis(block_table, (pos // page)[:, None], axis=1)[:, 0]
+    off = pos % page
+    if impl == "pallas":
+        kv_pool = pa_ops.append_kv(kv_pool, k_new[:, 0], v_new[:, 0], slot, off)
+        ctx = pa_ops.paged_attention_pool(q[:, 0], kv_pool, block_table, pos + 1)
+    else:
+        kv_pool = append_kv_ref(kv_pool, k_new[:, 0], v_new[:, 0], slot, off)
+        ctx = paged_attention_pool_ref(q[:, 0], kv_pool, block_table, pos + 1)
+    out = linear(params["wo"], ctx.reshape(B, 1, -1))
+    return out, kv_pool
+
+
 def attention_decode(params, cfg: ModelConfig, x, cache: KVCache, pos,
                      *, window: int = 0) -> Tuple[jnp.ndarray, KVCache]:
     """One-token decode. x: (B,1,d); pos: scalar or (B,) current position."""

@@ -52,6 +52,23 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, shard_axes=None):
                                          shard_axes=shard_axes)
 
 
+# --- paged-KV serving runtime (decode KV on AquaTensor pages) --------------
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    return cfg.family != ENCDEC and lm.supports_paged_kv(cfg)
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, kv_pool, block_tables,
+                  **extras):
+    return lm.prefill_paged(params, cfg, tokens, kv_pool, block_tables,
+                            **extras)
+
+
+def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
+                      tokens, pos, *, impl: str = "pallas"):
+    return lm.decode_step_paged(params, cfg, kv_pool, block_tables, tokens,
+                                pos, impl=impl)
+
+
 # ---------------------------------------------------------------------------
 # Inputs per (arch, shape)
 # ---------------------------------------------------------------------------

@@ -146,6 +146,19 @@ def decode_state_specs(cfg: ModelConfig, batch: int, seq: int, dtype=None):
         functools.partial(init_decode_state, cfg, batch, seq, dtype))
 
 
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """True when decode KV can live entirely on AquaTensor pages: every
+    sub-layer is full (unwindowed) GQA/MQA attention with no logit softcap.
+    SSM/Mamba/MLA state and ring-buffer caches stay on the dense path."""
+    if cfg.family not in (DENSE, MOE, VLM):
+        return False
+    if cfg.mla is not None or cfg.attn_logit_softcap > 0:
+        return False
+    gs = group_size(cfg)
+    return all(mixer_kind(cfg, i) == "attn" and layer_window(cfg, i) == 0
+               for i in range(gs))
+
+
 # ---------------------------------------------------------------------------
 # Forward (training): full sequence, no cache
 # ---------------------------------------------------------------------------
@@ -301,6 +314,104 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, prefix_embeds=None,
     x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
     logits = unembed(params["embed"], cfg, x[:, -1:])[:, 0]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged prefill / decode: KV lives on AquaTensor pages (serving runtime)
+# ---------------------------------------------------------------------------
+def _ffn_apply(p, cfg: ModelConfig, x, i: int, *, dropless: bool = False,
+               shard_axes=None):
+    fk = ffn_kind(cfg, i)
+    if not fk:
+        return x
+    h = rms_norm(p["n2"], x, cfg.rmsnorm_eps)
+    if fk == "moe":
+        h = moe_apply(p["ffn"], cfg, h, dropless=dropless,
+                      shard_axes=shard_axes)[0]
+    else:
+        h = mlp(p["ffn"], cfg, h)
+    return x + h
+
+
+def _group_prefill_paged(gp, cfg: ModelConfig, x, kv_pool, bt_g, *,
+                         page_tokens: int):
+    """Full-sequence pass for one request (B=1) writing K/V pages directly."""
+    for i in range(group_size(cfg)):
+        p = gp[f"sub{i}"]
+        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
+        h, (k, v) = attn.attention_full(p["mix"], cfg, h, window=0,
+                                        return_kv=True)
+        kv_pool = attn.write_prefill_pages(kv_pool, k, v, bt_g[i],
+                                           page_tokens=page_tokens)
+        x = x + h
+        x = _ffn_apply(p, cfg, x, i)
+    return x, kv_pool
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, kv_pool, block_tables, *,
+                  prefix_embeds=None):
+    """Prefill ONE request, writing its KV straight into the paged pool.
+
+    tokens: (1,T); kv_pool: (P,2,K,page,hd); block_tables: (G,gs,pps) int32
+    physical LOCAL slots (one row of pages per layer).
+    -> (last-token logits (1,V), updated kv_pool)
+    """
+    assert supports_paged_kv(cfg), f"{cfg.name}: paged KV unsupported"
+    assert tokens.shape[0] == 1, "paged prefill is per-request"
+    page_tokens = kv_pool.shape[3]
+    x = embed(params["embed"], cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    def scan_body(carry, xs):
+        x, pool = carry
+        gp, bt_g = xs
+        x, pool = _group_prefill_paged(gp, cfg, x, pool, bt_g,
+                                       page_tokens=page_tokens)
+        return (x, pool), None
+
+    (x, kv_pool), _ = jax.lax.scan(scan_body, (x, kv_pool),
+                                   (params["blocks"], block_tables))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = unembed(params["embed"], cfg, x[:, -1:])[:, 0]
+    return logits, kv_pool
+
+
+def _group_decode_paged(gp, cfg: ModelConfig, x, kv_pool, bt_g, pos, *,
+                        impl: str):
+    for i in range(group_size(cfg)):
+        p = gp[f"sub{i}"]
+        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
+        h, kv_pool = attn.attention_decode_paged(p["mix"], cfg, h, kv_pool,
+                                                 bt_g[i], pos, impl=impl)
+        x = x + h
+        x = _ffn_apply(p, cfg, x, i, dropless=True)
+    return x, kv_pool
+
+
+def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
+                      tokens, pos, *, impl: str = "pallas"):
+    """One token for every sequence against the paged KV pool.
+
+    tokens/pos: (B,); kv_pool: (P,2,K,page,hd); block_tables: (G,gs,B,pps)
+    int32 physical LOCAL slots. -> (logits (B,V), updated kv_pool).
+    Decode attention goes through kernels/paged_attention (interpret on CPU)
+    when ``impl='pallas'``; ``impl='xla'`` uses the jnp oracle.
+    """
+    assert supports_paged_kv(cfg), f"{cfg.name}: paged KV unsupported"
+    x = embed(params["embed"], cfg, tokens[:, None])
+
+    def scan_body(carry, xs):
+        x, pool = carry
+        gp, bt_g = xs
+        x, pool = _group_decode_paged(gp, cfg, x, pool, bt_g, pos, impl=impl)
+        return (x, pool), None
+
+    (x, kv_pool), _ = jax.lax.scan(scan_body, (x, kv_pool),
+                                   (params["blocks"], block_tables))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    logits = unembed(params["embed"], cfg, x)[:, 0]
+    return logits, kv_pool
 
 
 def _group_decode(gp, cfg: ModelConfig, x, cache, pos, shard_axes=None):

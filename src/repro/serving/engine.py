@@ -1,7 +1,17 @@
-"""The serving engine: continuous batching over a slotted decode cache, with
-pluggable schedulers (FCFS / CFS) and AQUA-paged context switching.
+"""The serving engine: continuous batching with pluggable schedulers
+(FCFS / CFS) on a page-native KV runtime.
 
-This engine runs REAL model numerics (any decoder-only family in the zoo) on
+By default decode KV lives on AquaTensor pages (``PagedKVRuntime``): each
+request owns per-layer block tables, decode attention reads the LOCAL page
+pool through the ``kernels/paged_attention`` block-table kernel (interpret
+mode on CPU), prefill writes pages directly, and a CFS preemption is a
+page-table tier flip — ``offload(pages)`` out, ``ensure_local(pages)`` back,
+one coalesced message per (tier, donor) group, zero repacking (paper §3+§5).
+Families whose decode state is not plain paged KV (RWKV/Mamba state, MLA
+latent caches, windowed ring buffers) fall back to the seed dense-slot
+runtime, which parks whole contexts as blobs via the ``ContextStore`` shim.
+
+The engine runs REAL model numerics (any decoder-only family in the zoo) on
 tiny configs in CI; its per-step wall-times are additionally priced by
 core/perfmodel.py so end-to-end TTFT/RCT in *simulated seconds* are reported
 for the benchmark harness. The scheduler and paging logic are shared with the
@@ -27,7 +37,8 @@ from repro.core.aqua_tensor import HOST, REMOTE, TransferMeter
 from repro.core.coordinator import Coordinator
 from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E)
 from repro.models import api
-from repro.serving.kv_cache import ContextStore, extract_slot, insert_slot
+from repro.serving.kv_cache import (ContextStore, PagedKVRuntime,
+                                    extract_slot, insert_slot)
 from repro.serving.scheduler import (CFSScheduler, Decision, FCFSScheduler,
                                      ReqState, fairness_spread)
 
@@ -48,6 +59,12 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_running: int = 4,
                  max_seq: int = 128, scheduler: str = "cfs",
                  slice_tokens: int = 4, offload_tier: int = REMOTE,
+                 runtime: str = "auto",
+                 kv: Optional[PagedKVRuntime] = None,
+                 kv_page_tokens: int = 8,
+                 kv_local_pages: Optional[int] = None,
+                 kv_host_pages: int = 8192,
+                 paged_impl: str = "pallas",
                  store: Optional[ContextStore] = None,
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
@@ -61,24 +78,70 @@ class ServingEngine:
         self.cost = ModelCost.from_config(cfg)
         self.weight_bytes = cfg.param_count() * cfg.dtype().itemsize
         self.offload_tier = offload_tier
-        self.store = store or ContextStore(page_elems=4096, local_pages=16,
-                                           host_pages=1024)
+        self.paged_impl = paged_impl
+
+        if runtime == "auto":
+            runtime = "paged" if api.supports_paged_kv(cfg) else "dense"
+        if runtime == "paged" and not api.supports_paged_kv(cfg):
+            raise ValueError(f"{cfg.name}: paged runtime unsupported")
+        self.runtime = runtime
+
+        page_cost = None
+        page_budget = None
+        if runtime == "paged":
+            self.kv = kv or PagedKVRuntime(
+                cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
+                local_pages=kv_local_pages, host_pages=kv_host_pages,
+                max_running=max_running)
+            self.pager = self.kv
+            self.cache = None
+            # the scheduler plans in PAGES. CFS revisits the run set every
+            # slice, so it budgets one slice of growth; FCFS never preempts,
+            # so an admitted request must fit the LOCAL pool to COMPLETION.
+            page_cost = (self._page_cost_cfs if scheduler == "cfs"
+                         else self._page_cost_fcfs)
+            page_budget = self.kv.page_budget
+        else:
+            self.kv = None
+            self.store = store or ContextStore(page_elems=4096,
+                                               local_pages=16,
+                                               host_pages=1024)
+            self.pager = self.store
+            self.cache = api.init_decode_state(cfg, max_running, max_seq)
+
         self.coord = coordinator
         self.respond_every = respond_every
         if coordinator is not None and want_remote_bytes > 0:
             for donor, nbytes in coordinator.allocate(name, want_remote_bytes):
-                self.store.add_remote_lease(donor, nbytes)
+                self.pager.add_remote_lease(donor, nbytes)
                 self._grants = getattr(self, "_grants", []) + [(donor, nbytes)]
 
-        self.cache = api.init_decode_state(cfg, max_running, max_seq)
+        self.slice_tokens = slice_tokens
         self._free_slots = list(range(max_running))[::-1]
-        self.sched = (CFSScheduler(max_running, slice_tokens)
-                      if scheduler == "cfs" else FCFSScheduler(max_running))
+        self.sched = (CFSScheduler(max_running, slice_tokens,
+                                   page_cost=page_cost,
+                                   page_budget=page_budget)
+                      if scheduler == "cfs"
+                      else FCFSScheduler(max_running, page_cost=page_cost,
+                                         page_budget=page_budget))
         self.waiting: List[ReqState] = []
         self.running: List[ReqState] = []
         self.finished: List[ReqState] = []
         self.metrics = EngineMetrics()
         self._rid = itertools.count()
+
+    def _page_cost_cfs(self, r: ReqState) -> int:
+        """Pages the request needs LOCAL through the next slice boundary:
+        context now plus one slice of growth (CFS re-plans every slice)."""
+        return self.kv.pages_per_request(
+            min(r.ctx_len + self.slice_tokens, self.max_seq))
+
+    def _page_cost_fcfs(self, r: ReqState) -> int:
+        """FCFS never preempts: an admitted request holds LOCAL pages until
+        it completes, so budget its full remaining generation."""
+        remaining = r.max_new_tokens - len(r.generated)
+        return self.kv.pages_per_request(
+            min(r.ctx_len + max(remaining, 0), self.max_seq))
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens: Sequence[int], max_new_tokens: int,
@@ -93,46 +156,22 @@ class ServingEngine:
         """The paper's aqua.respond(): honor donor reclaims at an iteration
         boundary — evacuate their pools and release the grants."""
         for donor in self.coord.pending_reclaims(self.name):
-            self.store.evict_remote(donor)
+            self.pager.evict_remote(donor)
             for d, nbytes in list(getattr(self, "_grants", [])):
                 if d == donor:
                     self.coord.free(self.name, donor, nbytes)
                     self._grants.remove((d, nbytes))
 
+    # ------------------------------------------------------------------
     def step(self):
         m = self.metrics
-        step_time = 0.0
         if self.coord is not None and m.steps % self.respond_every == 0:
             self._respond()
 
         decision = self.sched.plan(m.steps, self.waiting, self.running)
 
-        # page out preempted requests (coalesced blob -> AQUA tensor)
-        t_before = self.store.aqua.meter.sim_time
-        for r in decision.preempt:
-            ctx = extract_slot(self.cache, r.slot, r.ctx_len, self.max_seq)
-            r.parked = self.store.park(ctx, r.ctx_len, prefer=self.offload_tier)
-            self._free_slots.append(r.slot)
-            r.slot = None
-            m.preemptions += 1
-
-        # restore / prefill the scheduled set
-        for r in decision.run:
-            if r.slot is not None:
-                continue
-            if not self._free_slots:
-                continue                     # shouldn't happen: plan respects cap
-            r.slot = self._free_slots.pop()
-            if r.parked is not None:
-                ctx = self.store.restore(r.parked)
-                self.cache = insert_slot(self.cache, ctx, r.slot, r.ctx_len,
-                                         self.max_seq)
-                r.parked = None
-                m.restores += 1
-            elif not r.prefilled:
-                step_time += self._prefill_into_slot(r)
-                m.prefills += 1
-        step_time += self.store.aqua.meter.sim_time - t_before
+        step_time = (self._place_paged(decision) if self.runtime == "paged"
+                     else self._place_dense(decision))
 
         self.running = [r for r in decision.run if r.slot is not None]
         self.waiting = [r for r in self.waiting + decision.preempt
@@ -141,24 +180,15 @@ class ServingEngine:
         # one decode step for every resident request
         live = [r for r in self.running if not r.done]
         if live:
-            tokens = np.zeros((self.max_running,), np.int32)
-            pos = np.zeros((self.max_running,), np.int32)
-            for r in live:
-                tokens[r.slot] = (r.generated[-1] if r.generated
-                                  else r.prompt_tokens[-1])
-                pos[r.slot] = r.ctx_len - 1
-            logits, self.cache = api.decode_step(
-                self.params, self.cfg, self.cache,
-                jnp.asarray(tokens), jnp.asarray(pos))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            ctx_mean = float(np.mean([r.ctx_len for r in live]))
-            step_time += self.cost.decode_step_time(
-                self.hw, len(live), ctx_mean, self.weight_bytes)
-            for r in live:
-                r.generated.append(int(nxt[r.slot]))
-                if r.ttft_step is None:
-                    r.ttft_step = m.steps
-                    m.ttft[r.rid] = m.sim_time + step_time - r.arrival
+            step_time += (self._decode_paged(live) if self.runtime == "paged"
+                          else self._decode_dense(live))
+
+        # TTFT: one accounting for prefill- and decode-produced first tokens —
+        # the time the step COMPLETES, including everything accrued in it
+        for r in self.running:
+            if r.generated and r.rid not in m.ttft:
+                r.ttft_step = m.steps
+                m.ttft[r.rid] = m.sim_time + step_time - r.arrival
 
         # retire
         for r in list(self.running):
@@ -167,6 +197,8 @@ class ServingEngine:
                 m.rct[r.rid] = m.sim_time + step_time - r.arrival
                 self._free_slots.append(r.slot)
                 r.slot = None
+                if self.runtime == "paged":
+                    self.kv.release(r.rid)
                 self.running.remove(r)
                 self.finished.append(r)
 
@@ -174,6 +206,105 @@ class ServingEngine:
         m.steps += 1
         m.fairness_trace.append(
             fairness_spread(self.waiting + self.running))
+
+    # ------------------------------------------------------------------
+    # paged runtime: preempt/restore are page-table tier flips
+    # ------------------------------------------------------------------
+    def _place_paged(self, decision: Decision) -> float:
+        m = self.metrics
+        step_time = 0.0
+        t_before = self.pager.meter.sim_time
+        for r in decision.preempt:
+            # KV for ctx_len-1 tokens is resident: the newest token's K/V is
+            # appended at its next decode step
+            self.kv.park(r.rid, max(r.ctx_len - 1, 0),
+                         prefer=self.offload_tier)
+            self._free_slots.append(r.slot)
+            r.slot = None
+            r.parked = True
+            m.preemptions += 1
+        for r in decision.run:
+            if r.slot is not None:
+                continue
+            if not self._free_slots:
+                continue                     # shouldn't happen: plan respects cap
+            r.slot = self._free_slots.pop()
+            if r.parked:
+                self.kv.restore(r.rid)       # ensure_local: coalesced page-in
+                r.parked = False
+                m.restores += 1
+            elif not r.prefilled:
+                step_time += self._prefill_paged(r)
+                m.prefills += 1
+        return step_time + (self.pager.meter.sim_time - t_before)
+
+    def _prefill_paged(self, r: ReqState) -> float:
+        T = len(r.prompt_tokens)
+        self.kv.ensure_capacity(r.rid, T)    # LOCAL pages, or a loud error
+        bt = self.kv.block_tables_prefill(r.rid)
+        toks = jnp.asarray(r.prompt_tokens, jnp.int32)[None]
+        logits, self.kv.pool = api.prefill_paged(
+            self.params, self.cfg, toks, self.kv.pool, bt)
+        r.prefilled = True
+        r.generated.append(int(jnp.argmax(logits[0])))
+        return self.cost.prefill_time(self.hw, T)
+
+    def _decode_paged(self, live: List[ReqState]) -> float:
+        tokens = np.zeros((self.max_running,), np.int32)
+        pos = np.zeros((self.max_running,), np.int32)
+        lanes: List[Optional[int]] = [None] * self.max_running
+        for r in live:
+            # the new token's position may cross into a fresh page: grow the
+            # block table (allocation guarantees LOCAL; parked requests were
+            # already restored in _place_paged)
+            self.kv.ensure_capacity(r.rid, r.ctx_len)
+            lanes[r.slot] = r.rid
+            tokens[r.slot] = (r.generated[-1] if r.generated
+                              else r.prompt_tokens[-1])
+            pos[r.slot] = r.ctx_len - 1
+        bts = self.kv.block_tables(lanes)
+        logits, self.kv.pool = api.decode_step_paged(
+            self.params, self.cfg, self.kv.pool, bts,
+            jnp.asarray(tokens), jnp.asarray(pos), impl=self.paged_impl)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        ctx_mean = float(np.mean([r.ctx_len for r in live]))
+        for r in live:
+            r.generated.append(int(nxt[r.slot]))
+        return self.cost.decode_step_time(self.hw, len(live), ctx_mean,
+                                          self.weight_bytes)
+
+    # ------------------------------------------------------------------
+    # dense runtime (shim): slotted cache + blob context switching
+    # ------------------------------------------------------------------
+    def _place_dense(self, decision: Decision) -> float:
+        m = self.metrics
+        step_time = 0.0
+        t_before = self.pager.meter.sim_time
+        # page out preempted requests (coalesced blob -> AQUA tensor)
+        for r in decision.preempt:
+            ctx = extract_slot(self.cache, r.slot, r.ctx_len, self.max_seq)
+            r.parked = self.store.park(ctx, r.ctx_len,
+                                       prefer=self.offload_tier)
+            self._free_slots.append(r.slot)
+            r.slot = None
+            m.preemptions += 1
+        # restore / prefill the scheduled set
+        for r in decision.run:
+            if r.slot is not None:
+                continue
+            if not self._free_slots:
+                continue
+            r.slot = self._free_slots.pop()
+            if r.parked is not None and r.parked is not False:
+                ctx = self.store.restore(r.parked)
+                self.cache = insert_slot(self.cache, ctx, r.slot, r.ctx_len,
+                                         self.max_seq)
+                r.parked = None
+                m.restores += 1
+            elif not r.prefilled:
+                step_time += self._prefill_into_slot(r)
+                m.prefills += 1
+        return step_time + (self.pager.meter.sim_time - t_before)
 
     def _prefill_into_slot(self, r: ReqState) -> float:
         cache1 = api.init_decode_state(self.cfg, 1, self.max_seq)
@@ -184,10 +315,24 @@ class ServingEngine:
             self.cache, cache1)
         r.prefilled = True
         r.generated.append(int(jnp.argmax(logits[0])))
-        if r.ttft_step is None:
-            r.ttft_step = self.metrics.steps
-            self.metrics.ttft[r.rid] = self.metrics.sim_time - r.arrival
         return self.cost.prefill_time(self.hw, len(r.prompt_tokens))
+
+    def _decode_dense(self, live: List[ReqState]) -> float:
+        tokens = np.zeros((self.max_running,), np.int32)
+        pos = np.zeros((self.max_running,), np.int32)
+        for r in live:
+            tokens[r.slot] = (r.generated[-1] if r.generated
+                              else r.prompt_tokens[-1])
+            pos[r.slot] = r.ctx_len - 1
+        logits, self.cache = api.decode_step(
+            self.params, self.cfg, self.cache,
+            jnp.asarray(tokens), jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        ctx_mean = float(np.mean([r.ctx_len for r in live]))
+        for r in live:
+            r.generated.append(int(nxt[r.slot]))
+        return self.cost.decode_step_time(self.hw, len(live), ctx_mean,
+                                          self.weight_bytes)
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 1000):
@@ -198,3 +343,5 @@ class ServingEngine:
         if self.coord is not None:
             self._respond()        # don't leave leases dangling after drain
         return self.metrics
+    # NOTE: pack_context/extract_slot/insert_slot are OFF the hot path for
+    # every paged-capable family; only the dense shim above still uses them.

@@ -1,33 +1,207 @@
-"""ContextStore: per-request dynamic context blobs on AQUA TENSORS.
+"""Page-native decode KV: block tables over AquaTensor page pools.
 
-The engine's batched decode cache holds the *running* requests. When the CFS
-scheduler preempts a request, its whole-stack context (every cache leaf's
-slice for that batch slot, truncated to the request's length) is packed into
-one contiguous blob, chunked into fixed-size pages, and handed to an
-AquaTensor — which places the pages LOCAL / REMOTE(fabric) / HOST and meters
-the movement. Packing across all layers at once is exactly the paper's
-coalescing fix ("gathering smaller tensors into a temporary tensor ... and
-copying that to the offloaded tensor", §5).
+``PagedKVRuntime`` is the serving engine's KV manager (paper §3 + §5 made
+structural): per-layer K/V pages for every request live in ONE fused
+page-major AquaTensor pool — payload ``(2, n_kv, page, hd)`` in the model's
+native dtype — and each request owns a per-layer block table of logical page
+ids. Decode attention reads the LOCAL pool through the
+``kernels/paged_attention`` block-table kernel; prefill writes pages
+directly; a decode step appends the new token's K/V into the request's tail
+page via the page-append writer op.
+
+Preemption is therefore a *page-table tier flip*:
+
+    park    = AquaTensor.offload(pages)      one coalesced message per
+    restore = AquaTensor.ensure_local(pages) (tier, donor) group
+
+— no gather of cache leaves, no float32 blob, no repacking. The partial tail
+page is metered at its valid fraction, so a parked request moves exactly its
+native-dtype KV footprint.
+
+``ContextStore`` (below) is the seed blob path, kept as the compatibility
+shim for families whose decode state is not plain paged KV (RWKV/Mamba
+state, MLA latent caches, ring-buffer windowed layers) and as the
+"what AQUA replaces" baseline in benchmarks/context_switch.py.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aqua_tensor import AquaTensor, REMOTE, TransferMeter
+from repro.configs.base import ModelConfig
+from repro.core.aqua_tensor import (AquaTensor, LOCAL, REMOTE, TransferMeter)
 
 
+class PagedKVRuntime:
+    """Block-table KV manager on a tiered AquaTensor page pool."""
+
+    def __init__(self, cfg: ModelConfig, *, max_seq: int,
+                 page_tokens: int = 8, local_pages: Optional[int] = None,
+                 host_pages: int = 8192, n_logical: int = 16384,
+                 max_running: int = 4, meter: Optional[TransferMeter] = None):
+        from repro.models import lm
+        if not lm.supports_paged_kv(cfg):
+            raise ValueError(f"{cfg.name}: not a pure paged-KV architecture "
+                             "(use the dense runtime)")
+        self.cfg = cfg
+        self.G = lm.n_groups(cfg)
+        self.gs = lm.group_size(cfg)
+        self.n_layers = self.G * self.gs
+        self.page_tokens = page_tokens
+        self.max_seq = max_seq
+        self.pps = math.ceil(max_seq / page_tokens)
+        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        dtype = jnp.dtype(cfg.compute_dtype)
+        self.token_bytes = 2 * K * hd * dtype.itemsize          # per layer
+        if local_pages is None:
+            # fit `max_running` full-length requests plus the scratch page
+            local_pages = max_running * self.n_layers * self.pps + 1
+        self.aqua = AquaTensor(n_logical=n_logical,
+                               page_shape=(2, K, page_tokens, hd),
+                               local_slots=local_pages,
+                               host_slots=host_pages, dtype=dtype,
+                               meter=meter, name=f"{cfg.name}/kv")
+        # pinned LOCAL dummy page: idle batch lanes and block-table padding
+        # point here so masked DMAs (and idle-lane appends) stay in-bounds
+        self._scratch_lp = int(self.aqua.allocate(1, prefer=LOCAL)[0])
+        # rid -> (n_layers, pages) logical page ids, grown as ctx grows
+        self._pages: Dict[int, List[List[int]]] = {}
+
+    # -- geometry ---------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages per layer covering n_tokens."""
+        return max(1, math.ceil(n_tokens / self.page_tokens))
+
+    def pages_per_request(self, n_tokens: int) -> int:
+        return self.n_layers * self.pages_for(n_tokens)
+
+    def kv_footprint_bytes(self, n_tokens: int) -> float:
+        """Native-dtype whole-stack KV bytes of a request (no page slack)."""
+        return float(self.n_layers * n_tokens * self.token_bytes)
+
+    @property
+    def page_budget(self) -> int:
+        """LOCAL pages available to requests (scratch page excluded)."""
+        return self.aqua.local_pool.shape[0] - 1
+
+    @property
+    def scratch_slot(self) -> int:
+        return int(self.aqua.page_table[self._scratch_lp, 1])
+
+    @property
+    def pool(self) -> jnp.ndarray:
+        return self.aqua.local_pool
+
+    @pool.setter
+    def pool(self, value: jnp.ndarray):
+        self.aqua.local_pool = value
+
+    @property
+    def meter(self) -> TransferMeter:
+        return self.aqua.meter
+
+    # -- allocation -------------------------------------------------------
+    def ensure_capacity(self, rid: int, n_tokens: int):
+        """Grow the request's per-layer block tables to cover n_tokens.
+
+        New pages must be LOCAL (the kernels read the LOCAL pool): if the
+        allocator had to spill a fresh page to another tier the LOCAL pool is
+        full and no later step could pull it back either, so fail loudly here
+        with the tensor/tier MemoryError. The page-budget-aware schedulers
+        are designed to keep planned run sets below this point.
+        """
+        rows = self._pages.setdefault(rid, [[] for _ in range(self.n_layers)])
+        need = self.pages_for(n_tokens)
+        for row in rows:
+            while len(row) < need:
+                lp = int(self.aqua.allocate(1, prefer=LOCAL)[0])
+                if self.aqua.page_table[lp, 0] != LOCAL:
+                    self.aqua.ensure_local([lp])    # raises: LOCAL exhausted
+                row.append(lp)
+
+    def _flat(self, rid: int) -> np.ndarray:
+        return np.asarray([lp for row in self._pages[rid] for lp in row],
+                          np.int64)
+
+    def release(self, rid: int):
+        if rid in self._pages:
+            self.aqua.free(self._flat(rid))
+            del self._pages[rid]
+
+    # -- block tables (the kernel operands) -------------------------------
+    def block_tables_prefill(self, rid: int) -> jnp.ndarray:
+        """(G, gs, pps_req) physical LOCAL slots for one request."""
+        rows = self._pages[rid]
+        bt = self.aqua.block_tables(rows, pad_to=len(rows[0]),
+                                    pad_slot=self.scratch_slot)
+        return jnp.asarray(bt.reshape(self.G, self.gs, -1))
+
+    def block_tables(self, lane_rids: Sequence[Optional[int]]) -> jnp.ndarray:
+        """Batched query: (G, gs, B, pps) physical LOCAL slots, one row per
+        batch lane; empty lanes and padding point at the scratch page."""
+        B = len(lane_rids)
+        rows: List[List[int]] = []
+        for l in range(self.n_layers):
+            for rid in lane_rids:
+                rows.append(self._pages[rid][l] if rid is not None else [])
+        bt = self.aqua.block_tables(rows, pad_to=self.pps,
+                                    pad_slot=self.scratch_slot)
+        return jnp.asarray(bt.reshape(self.G, self.gs, B, self.pps))
+
+    # -- tier migration (preempt / restore as page-table flips) ------------
+    def park(self, rid: int, n_tokens: int, *, prefer: int = REMOTE):
+        """Preempt: flip the request's pages out of LOCAL — one coalesced
+        message per (tier, donor) group, each page metered at its fill.
+
+        ``n_tokens`` is the KV actually RESIDENT in the pool (for an engine
+        request at ctx_len that is ctx_len-1: the newest token's K/V is
+        appended at its next decode step). A page allocated ahead of a
+        boundary but not yet written moves at fill 0.
+        """
+        for row in self._pages[rid]:
+            fills = np.clip(n_tokens - np.arange(len(row)) * self.page_tokens,
+                            0, self.page_tokens) / self.page_tokens
+            self.aqua.set_page_fill(row, fills)
+        self.aqua.offload(self._flat(rid), prefer=prefer)
+
+    def restore(self, rid: int):
+        """Make every page of the request LOCAL (no-op when already there)."""
+        self.aqua.ensure_local(self._flat(rid))
+        for row in self._pages[rid]:
+            self.aqua.set_page_fill(row, 1.0)
+
+    # -- coordinator-driven lease plumbing --------------------------------
+    def add_remote_lease(self, donor: str, nbytes: float):
+        slots = max(1, int(nbytes // self.aqua.page_bytes))
+        self.aqua.add_remote_lease(donor, slots)
+
+    def evict_remote(self, donor: str) -> int:
+        return self.aqua.evict_remote(donor)
+
+    def stats(self) -> Dict:
+        return {"tiers": self.aqua.tier_counts(),
+                "page_tokens": self.page_tokens,
+                "meter": {"bytes_fabric": self.aqua.meter.bytes_fabric,
+                          "bytes_host": self.aqua.meter.bytes_host,
+                          "messages_fabric": self.aqua.meter.messages_fabric,
+                          "messages_host": self.aqua.meter.messages_host,
+                          "sim_time": self.aqua.meter.sim_time}}
+
+
+# ===========================================================================
+# Legacy blob path — compatibility shim for non-paged families
+# ===========================================================================
 def _is_seq_leaf(leaf, max_seq: int) -> bool:
     return leaf.ndim >= 3 and leaf.shape[2] == max_seq
 
 
 def extract_slot(cache, slot: int, ctx_len: int, max_seq: int):
-    """Slice one request's context out of the batched cache pytree."""
+    """[shim] Slice one request's context out of the batched cache pytree."""
     def f(leaf):
         if _is_seq_leaf(leaf, max_seq):
             return leaf[:, slot, :ctx_len]
@@ -36,7 +210,7 @@ def extract_slot(cache, slot: int, ctx_len: int, max_seq: int):
 
 
 def insert_slot(cache, ctx, slot: int, ctx_len: int, max_seq: int):
-    """Write a request's context back into the batched cache at `slot`."""
+    """[shim] Write a request's context back into the batched cache."""
     def f(leaf, part):
         if _is_seq_leaf(leaf, max_seq):
             return leaf.at[:, slot, :ctx_len].set(part.astype(leaf.dtype))
@@ -45,7 +219,13 @@ def insert_slot(cache, ctx, slot: int, ctx_len: int, max_seq: int):
 
 
 def pack_context(ctx) -> Tuple[jnp.ndarray, List[Tuple[tuple, Any]]]:
-    """Flatten a context pytree into one f32 vector + restore metadata."""
+    """[shim] Flatten a context pytree into one f32 vector + restore metadata.
+
+    This is the seed blob path the paged runtime replaces: every cache leaf
+    is gathered and upcast to float32 on EVERY context switch (a ~2x byte
+    blowup for bf16 state) — kept only for families whose decode state is
+    not paged KV, and as the benchmark baseline.
+    """
     leaves = jax.tree.leaves(ctx)
     meta = [(l.shape, l.dtype) for l in leaves]
     flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
@@ -72,7 +252,7 @@ class ParkedContext:
 
 
 class ContextStore:
-    """Pages parked request contexts into an AquaTensor."""
+    """[shim] Pages parked request contexts into an AquaTensor as f32 blobs."""
 
     def __init__(self, *, page_elems: int = 32768, local_pages: int = 64,
                  host_pages: int = 4096, n_logical: int = 8192,
@@ -81,6 +261,10 @@ class ContextStore:
         self.aqua = AquaTensor(n_logical=n_logical, page_shape=(page_elems,),
                                local_slots=local_pages, host_slots=host_pages,
                                dtype=jnp.float32, meter=meter, name="ctx")
+
+    @property
+    def meter(self) -> TransferMeter:
+        return self.aqua.meter
 
     # -- coordinator-driven lease plumbing --------------------------------
     def add_remote_lease(self, donor: str, nbytes: float):
@@ -112,4 +296,6 @@ class ContextStore:
         return {"tiers": self.aqua.tier_counts(),
                 "meter": {"bytes_fabric": self.aqua.meter.bytes_fabric,
                           "bytes_host": self.aqua.meter.bytes_host,
+                          "messages_fabric": self.aqua.meter.messages_fabric,
+                          "messages_host": self.aqua.meter.messages_host,
                           "sim_time": self.aqua.meter.sim_time}}

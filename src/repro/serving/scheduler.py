@@ -1,11 +1,17 @@
 """Prompt schedulers: FCFS continuous batching (vLLM-style) and the
 completely fair scheduler (paper §5) — shared by the real engine and the
 discrete-event simulator.
+
+Capacity planning is in PAGES, not slots: when constructed with a
+``page_cost`` callback (pages a request needs LOCAL if scheduled) and a
+``page_budget`` (the LOCAL pool size), the run set is chosen so its pages
+fit the local tier — the block-table analogue of vLLM's KV-memory admission
+gate. Without them (the dense shim) the plan degrades to slot counting.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 
 @dataclass
@@ -43,19 +49,30 @@ class Decision:
 
 
 class FCFSScheduler:
-    """vLLM-like: admit in arrival order while slots allow; never preempt.
-    Under memory pressure, later arrivals starve (paper Fig. 1a)."""
+    """vLLM-like: admit in arrival order while slots (and, when page-aware,
+    the LOCAL page budget) allow; never preempt. Under memory pressure,
+    later arrivals starve (paper Fig. 1a)."""
 
-    def __init__(self, max_running: int):
+    def __init__(self, max_running: int, *,
+                 page_cost: Optional[Callable[[ReqState], int]] = None,
+                 page_budget: Optional[int] = None):
         self.max_running = max_running
+        self.page_cost = page_cost
+        self.page_budget = page_budget
 
     def plan(self, step: int, waiting: Sequence[ReqState],
              running: Sequence[ReqState]) -> Decision:
         run = list(running)
+        pages = sum(self.page_cost(r) for r in run) if self.page_cost else 0
         admit = []
         for r in sorted(waiting, key=lambda r: (r.arrival, r.rid)):
             if len(run) >= self.max_running:
                 break
+            if self.page_cost is not None and self.page_budget is not None:
+                c = self.page_cost(r)
+                if run and pages + c > self.page_budget:
+                    break                     # strict FCFS: no skip-ahead
+                pages += c
             run.append(r)
             admit.append(r)
         return Decision(run, admit, [])
@@ -63,11 +80,16 @@ class FCFSScheduler:
 
 class CFSScheduler:
     """Completely fair scheduler: every `slice_tokens` generated tokens, the
-    `max_running` requests with the LEAST service run next (paper §5)."""
+    requests with the LEAST service run next (paper §5) — as many as fit the
+    slot cap and, when page-aware, the LOCAL page budget."""
 
-    def __init__(self, max_running: int, slice_tokens: int = 5):
+    def __init__(self, max_running: int, slice_tokens: int = 5, *,
+                 page_cost: Optional[Callable[[ReqState], int]] = None,
+                 page_budget: Optional[int] = None):
         self.max_running = max_running
         self.slice_tokens = slice_tokens
+        self.page_cost = page_cost
+        self.page_budget = page_budget
         self._since_switch = 0
 
     def plan(self, step: int, waiting: Sequence[ReqState],
@@ -79,7 +101,18 @@ class CFSScheduler:
         self._since_switch = 0
         everyone = list(waiting) + list(running)
         everyone.sort(key=lambda r: (r.vruntime, r.arrival, r.rid))
-        run = everyone[: self.max_running]
+        if self.page_cost is None or self.page_budget is None:
+            run = everyone[: self.max_running]
+        else:
+            run, pages = [], 0
+            for r in everyone:
+                if len(run) >= self.max_running:
+                    break
+                c = self.page_cost(r)
+                if run and pages + c > self.page_budget:
+                    continue                  # fair-pick the next that fits
+                run.append(r)
+                pages += c
         run_ids = {r.rid for r in run}
         preempt = [r for r in running if r.rid not in run_ids]
         admit = [r for r in run if r.slot is None and not r.prefilled]

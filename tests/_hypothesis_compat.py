@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim.
+
+The property tests use ``hypothesis`` when it is installed (declared in
+``requirements-dev.txt``); on boxes without it the whole suite must still
+*collect* — a hard import here used to kill tier-1 at collection time. The
+shim keeps every non-property test running and turns each ``@given`` test
+into a single skip.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal CI images
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed "
+                                           "(pip install -r requirements-dev.txt)")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategy:
+        """Inert stand-in; only ever passed around, never executed."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()

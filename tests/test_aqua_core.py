@@ -4,7 +4,7 @@ optimality, control loops, and the paper's headline claims in the simulator.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.aqua_tensor import HOST, LOCAL, REMOTE, AquaTensor, TransferMeter

@@ -1,6 +1,8 @@
-"""Serving engine tests: transparent AQUA paging is bit-exact, CFS fairness
-invariants hold, coordinator-driven elasticity works mid-serve, and the LoRA
-adapter cache meters coalesced fetches.
+"""Serving engine tests: transparent AQUA paging is bit-exact on both
+runtimes (page-native KV for pure-attention families, the dense blob shim for
+SSM/MLA/hybrid state), CFS fairness invariants hold, coordinator-driven
+elasticity works mid-serve, and the LoRA adapter cache meters coalesced
+fetches.
 """
 import jax
 import jax.numpy as jnp
@@ -17,7 +19,10 @@ from repro.serving.lora import (AdapterCache, adapter_bytes, apply_lora,
                                 init_adapter)
 from repro.serving.scheduler import CFSScheduler, FCFSScheduler, ReqState
 
-FAMILIES = ["qwen1.5-0.5b", "rwkv6-3b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"]
+# families whose decode state is NOT plain paged KV: they exercise the dense
+# slotted cache + ContextStore blob shim (qwen, the pure-GQA family, runs the
+# page-native runtime — see test_paged_runtime.py for its deep coverage)
+DENSE_FAMILIES = ["rwkv6-3b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"]
 
 
 def _greedy(cfg, params, prompt, n, max_seq=96):
@@ -33,27 +38,28 @@ def _greedy(cfg, params, prompt, n, max_seq=96):
     return out
 
 
-def _mk_engine(cfg, params, **kw):
+def _mk_dense_engine(cfg, params, **kw):
     store = ContextStore(page_elems=2048, local_pages=8, host_pages=2048,
                          n_logical=4096)
     store.add_remote_lease("donor0", 256 * 2048 * 4)
     args = dict(max_running=2, max_seq=96, scheduler="cfs", slice_tokens=3,
-                store=store, offload_tier=REMOTE)
+                store=store, offload_tier=REMOTE, runtime="dense")
     args.update(kw)
     return ServingEngine(cfg, params, **args), store
 
 
-@pytest.mark.parametrize("arch", FAMILIES)
-def test_cfs_paging_is_transparent(arch):
-    """Tokens under CFS + AQUA paging == direct per-request greedy decode."""
+@pytest.mark.parametrize("arch", DENSE_FAMILIES)
+def test_cfs_paging_is_transparent_dense_shim(arch):
+    """Tokens under CFS + AQUA blob paging == direct per-request greedy."""
     cfg = smoke_config(get_config(arch))
+    assert not api.supports_paged_kv(cfg)     # these families need the shim
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
                                           int(rng.integers(4, 12)))))
                for _ in range(5)]
     truth = [_greedy(cfg, params, p, 6) for p in prompts]
-    eng, store = _mk_engine(cfg, params)
+    eng, store = _mk_dense_engine(cfg, params)
     for p in prompts:
         eng.submit(p, 6)
     m = eng.run(400)
@@ -63,19 +69,44 @@ def test_cfs_paging_is_transparent(arch):
     assert store.stats()["meter"]["bytes_fabric"] > 0
 
 
+def test_paged_runtime_is_default_for_pure_attention():
+    """The engine serves pure-GQA families page-natively by default: decode
+    attention reads the AquaTensor pool through kernels/paged_attention and
+    preemption flips page tiers over the fabric."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(4, 12)))))
+               for _ in range(5)]
+    truth = [_greedy(cfg, params, p, 6) for p in prompts]
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=96,
+                        scheduler="cfs", slice_tokens=3, offload_tier=REMOTE)
+    assert eng.runtime == "paged" and eng.paged_impl == "pallas"
+    eng.pager.add_remote_lease("donor0", 256 * eng.kv.aqua.page_bytes)
+    for p in prompts:
+        eng.submit(p, 6)
+    m = eng.run(400)
+    got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
+    assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
+    assert m.preemptions > 0 and m.restores > 0
+    assert eng.kv.stats()["meter"]["bytes_fabric"] > 0
+
+
 def test_host_tier_paging_also_transparent():
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(1)
     prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8))) for _ in range(4)]
     truth = [_greedy(cfg, params, p, 5) for p in prompts]
-    eng, store = _mk_engine(cfg, params, offload_tier=HOST)
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=96,
+                        scheduler="cfs", slice_tokens=3, offload_tier=HOST)
     for p in prompts:
         eng.submit(p, 5)
     eng.run(300)
     got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
     assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
-    assert store.stats()["meter"]["bytes_host"] > 0
+    assert eng.kv.stats()["meter"]["bytes_host"] > 0
 
 
 def test_cfs_fairness_bounded_fcfs_not():
@@ -85,8 +116,10 @@ def test_cfs_fairness_bounded_fcfs_not():
     rng = np.random.default_rng(2)
     prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 6))) for _ in range(6)]
 
-    eng_c, _ = _mk_engine(cfg, params, slice_tokens=2)
-    eng_f, _ = _mk_engine(cfg, params, scheduler="fcfs")
+    eng_c = ServingEngine(cfg, params, max_running=2, max_seq=96,
+                          scheduler="cfs", slice_tokens=2, offload_tier=HOST)
+    eng_f = ServingEngine(cfg, params, max_running=2, max_seq=96,
+                          scheduler="fcfs", offload_tier=HOST)
     for p in prompts:
         eng_c.submit(p, 12)
         eng_f.submit(p, 12)
@@ -98,8 +131,9 @@ def test_cfs_fairness_bounded_fcfs_not():
 
 
 def test_elastic_reclaim_mid_serve_preserves_correctness():
-    """Donor reclaims its lease while requests are parked on it: pages fall
-    back to host, decoding continues bit-exactly (paper §6.2)."""
+    """Donor reclaims its lease while requests' KV pages sit on it: pages
+    fall back to host, decoding continues bit-exactly (paper §6.2) — on the
+    page-native runtime the evacuation is a page-table retier, no repack."""
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(3)
@@ -107,13 +141,12 @@ def test_elastic_reclaim_mid_serve_preserves_correctness():
     truth = [_greedy(cfg, params, p, 8) for p in prompts]
 
     coord = Coordinator(strict_pairing=False)
-    coord.offer("producer0", 256 * 2048 * 4)
-    store = ContextStore(page_elems=2048, local_pages=8, host_pages=2048,
-                         n_logical=4096)
+    coord.offer("producer0", 1 << 22)
     eng = ServingEngine(cfg, params, max_running=2, max_seq=96, scheduler="cfs",
-                        slice_tokens=3, store=store, offload_tier=REMOTE,
+                        slice_tokens=3, offload_tier=REMOTE,
                         coordinator=coord, name="llm0",
-                        want_remote_bytes=256 * 2048 * 4, respond_every=1)
+                        want_remote_bytes=1 << 22, respond_every=1)
+    assert eng.runtime == "paged"
     for p in prompts:
         eng.submit(p, 8)
     for _ in range(10):
@@ -123,7 +156,7 @@ def test_elastic_reclaim_mid_serve_preserves_correctness():
     assert coord.reclaim_status("producer0")
     got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
     assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
-    assert store.stats()["tiers"]["remote"] == 0
+    assert eng.kv.stats()["tiers"]["remote"] == 0
 
 
 def test_lora_adapter_cache_meters_cold_fetches():
