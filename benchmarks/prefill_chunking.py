@@ -1,0 +1,193 @@
+"""Chunked continuous-batching prefill benchmark.
+
+Measures what the chunked pipeline buys on a mixed-length burst (one long
+prompt heading a pack of shorts), with and without chunking and restore
+prefetch, at two scales:
+
+  * engine     — REAL numerics (smoke model, page-native runtime): per-step
+                 prefill-token bound, step-time p99, short-prompt TTFT, jit
+                 trace counts across two waves of all-new prompt lengths
+                 (the retrace guard's "constant in distinct lengths" claim),
+                 and the prefetch overlap counters.
+  * simulator  — paper scale (CodeLlama-34B on A100): TTFT p50/p99 of the
+                 shorts and the max scheduler-round time, where a 6k-token
+                 prefill is ~0.7 s vs a ~45 ms decode step.
+
+Writes ``BENCH_prefill.json`` next to the repo root so the perf trajectory
+is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.prefill_chunking
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+STEP_TOKENS = 16
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return float(xs[min(int(q * len(xs)), len(xs) - 1)]) if xs else float("nan")
+
+
+def measure_engine(arch: str = "qwen1.5-0.5b", long_len: int = 64,
+                   n_short: int = 5, short_len: int = 6,
+                   max_seq: int = 96) -> Dict[str, Dict]:
+    import jax
+    from repro.configs import get_config, smoke_config
+    from repro.core.aqua_tensor import REMOTE
+    from repro.models import api, lm
+    from repro.serving.engine import ServingEngine
+
+    cfg = smoke_config(get_config(arch))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    def serve(step_tokens, prefetch, seed):
+        rng = np.random.default_rng(seed)
+        jax.clear_caches()            # count THIS variant's traces from zero
+        lm.reset_trace_counts()
+        eng = ServingEngine(cfg, params, max_running=2, max_seq=max_seq,
+                            scheduler="cfs", slice_tokens=3,
+                            offload_tier=REMOTE, step_tokens=step_tokens,
+                            prefetch=prefetch)
+        eng.pager.add_remote_lease("donor0", 2 ** 24)
+        eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, long_len))),
+                   6, arrival=0.0)
+        for _ in range(n_short):
+            eng.submit(list(map(int, rng.integers(0, cfg.vocab_size,
+                                                  short_len))), 6,
+                       arrival=0.0)
+        m = eng.run(600)
+        traces_w1 = dict(lm.trace_counts())
+        # wave 2: all-new distinct prompt lengths against the SAME engine
+        # config — chunked buckets must add zero traces
+        eng2 = ServingEngine(cfg, params, max_running=2, max_seq=max_seq,
+                             scheduler="cfs", slice_tokens=3,
+                             offload_tier=REMOTE, step_tokens=step_tokens,
+                             prefetch=prefetch)
+        eng2.pager.add_remote_lease("donor0", 2 ** 24)
+        for n in (11, 23, 37, 49):
+            eng2.submit(list(map(int, rng.integers(0, cfg.vocab_size, n))),
+                        2, arrival=0.0)
+        eng2.run(600)
+        traces_w2 = dict(lm.trace_counts())
+        short_ttfts = [m.ttft[r.rid] for r in eng.finished
+                       if len(r.prompt_tokens) == short_len]
+        return {
+            "max_prefill_tokens_per_step": int(max(m.prefill_tokens_trace)),
+            "step_time_p99_s": _pct(m.step_times, 0.99),
+            "step_time_max_s": float(max(m.step_times)),
+            "ttft_short_min_s": float(min(short_ttfts)),
+            "ttft_short_p50_s": _pct(short_ttfts, 0.50),
+            "ttft_short_p99_s": _pct(short_ttfts, 0.99),
+            "sim_time_s": float(m.sim_time),
+            "steps": m.steps,
+            "preemptions": m.preemptions,
+            "restores": m.restores,
+            "prefetched_restores": m.prefetched_restores,
+            "overlap_hidden_s": float(m.overlap_hidden_s),
+            "jit_traces_prefill_wave1": traces_w1.get("prefill_chunk", 0),
+            "jit_traces_prefill_wave2": traces_w2.get("prefill_chunk", 0),
+            "jit_traces_decode": traces_w2.get("decode_step", 0),
+        }
+
+    return {
+        "unchunked": serve(None, False, 7),
+        "chunked": serve(STEP_TOKENS, False, 7),
+        "chunked_prefetch": serve(STEP_TOKENS, True, 7),
+    }
+
+
+def measure_simulator(long_len: int = 6000, short_len: int = 120,
+                      n_short: int = 12) -> Dict[str, Dict]:
+    from repro.configs import get_config
+    from repro.core.perfmodel import A100_NVLINK, ModelCost
+    from repro.core.simulator import Request, ServingSimulator
+
+    cfg = get_config("aqua-codellama-34b")
+    mc = ModelCost.from_config(cfg)
+    wb = cfg.param_count() * 2
+
+    def run(step_tokens, overlap):
+        sim = ServingSimulator(A100_NVLINK, mc, weight_bytes=wb,
+                               kv_capacity_bytes=80e9 - wb - 2e9,
+                               scheduler="cfs", offload_tier="fabric",
+                               max_running=8, step_tokens=step_tokens,
+                               overlap_pagein=overlap)
+        reqs = [Request(0, 0.0, long_len, 30)]
+        reqs += [Request(i, 0.001 * i, short_len, 30)
+                 for i in range(1, n_short + 1)]
+        res = sim.run(reqs)
+        ttfts = sorted(r.ttft - r.arrival for r in res.requests
+                       if r.prompt_len == short_len)
+        steps = np.diff([0.0] + [e["t"] for e in res.timeline])
+        return {
+            "ttft_short_p50_s": _pct(ttfts, 0.50),
+            "ttft_short_p99_s": _pct(ttfts, 0.99),
+            "step_time_max_s": float(steps.max()),
+            "rct_p50_s": res.p50(res.rcts()),
+        }
+
+    return {
+        "unchunked": run(None, False),
+        "chunked": run(256, False),
+        "chunked_overlap": run(256, True),
+    }
+
+
+def measure() -> Dict:
+    eng = measure_engine()
+    sim = measure_simulator()
+    return {
+        "engine": {"step_tokens": STEP_TOKENS, **eng},
+        "simulator_34b": {"step_tokens": 256, **sim},
+        "derived": {
+            # the smoke model is decode-bound (weight read >> prefill FLOPs),
+            # so the engine's time-domain win shows on the FIRST token; the
+            # p50/p99 wins show at paper scale where prefill dominates a step
+            "engine/ttft_short_first_improvement_x":
+                eng["unchunked"]["ttft_short_min_s"]
+                / eng["chunked_prefetch"]["ttft_short_min_s"],
+            "sim/ttft_short_p99_improvement_x":
+                sim["unchunked"]["ttft_short_p99_s"]
+                / sim["chunked_overlap"]["ttft_short_p99_s"],
+            "sim/step_time_max_reduction_x":
+                sim["unchunked"]["step_time_max_s"]
+                / sim["chunked"]["step_time_max_s"],
+            "engine/jit_traces_flat_across_new_lengths":
+                eng["chunked"]["jit_traces_prefill_wave2"]
+                == eng["chunked"]["jit_traces_prefill_wave1"],
+        },
+    }
+
+
+def run(m: Dict | None = None):
+    m = m or measure()
+    rows = []
+    for variant, vals in m["simulator_34b"].items():
+        if not isinstance(vals, dict):
+            continue
+        for k, v in vals.items():
+            rows.append((f"prefill/{variant}/{k}", v, ""))
+    for k, v in m["derived"].items():
+        rows.append((f"prefill/{k}", float(v), "chunked vs whole-prompt"))
+    return rows
+
+
+def main():
+    m = measure()
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_prefill.json")
+    with open(out, "w") as f:
+        json.dump(m, f, indent=2, sort_keys=True)
+    print(f"# wrote {os.path.normpath(out)}")
+    print("name,value,derived")
+    for name, val, derived in run(m):
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -148,6 +148,18 @@ def context_switch_time(hw: HardwareProfile, kv_bytes: float, *,
     return gather_overhead + link.time(kv_bytes, n_messages=msgs)
 
 
+def overlapped_transfer_time(compute_s: float, transfer_s: float) -> float:
+    """VISIBLE wall-time of a page transfer overlapped with step compute.
+
+    The paper's offload/compute overlap: page migrations are issued while the
+    current iteration's kernels run, so the transfer is hidden up to the
+    step's compute time and only the excess extends the step. This prices the
+    engine's restore PREFETCH (``ensure_local`` for next-step scheduled
+    requests issued during the current step) and the simulator's page-in leg.
+    """
+    return max(0.0, transfer_s - compute_s)
+
+
 def page_flip_time(hw: HardwareProfile, payload_bytes: float, *,
                    tier: str, n_groups: int = 1) -> float:
     """Time to preempt/restore a request on the PAGE-NATIVE runtime.

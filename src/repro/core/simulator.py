@@ -23,7 +23,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.perfmodel import (HardwareProfile, ModelCost,
-                                  context_switch_time, page_flip_time)
+                                  context_switch_time,
+                                  overlapped_transfer_time, page_flip_time)
+from repro.serving.scheduler import split_step_budget
 
 
 @dataclass
@@ -35,6 +37,7 @@ class Request:
     lora_bytes: float = 0.0
     # progress
     generated: int = 0
+    prefill_pos: int = 0             # prompt tokens prefilled so far (chunked)
     prefilled: bool = False
     ttft: Optional[float] = None
     finish: Optional[float] = None
@@ -63,6 +66,8 @@ class ServingSimulator:
                  scheduler: str = "vllm", offload_tier: str = "host",
                  slice_tokens: int = 5, max_running: int = 16,
                  coalesced: bool = True, paging: str = "paged",
+                 step_tokens: Optional[int] = None,
+                 overlap_pagein: bool = False,
                  lora_cache_bytes: float = 0.0,
                  lora_num_adapters: int = 200):
         self.hw = hw
@@ -74,6 +79,14 @@ class ServingSimulator:
         self.slice_tokens = slice_tokens
         self.max_running = max_running
         self.coalesced = coalesced
+        # step_tokens: chunked continuous-batching prefill — each scheduler
+        # round spends at most this many tokens (+1 progress floor), split
+        # between the round's decode iterations (lanes x slice for CFS) and
+        # prompt chunks (None = whole-prompt prefill, the seed behavior).
+        self.step_tokens = step_tokens
+        # overlap_pagein: price CFS page-ins as prefetched transfers hidden
+        # up to the round's compute time (perfmodel.overlapped_transfer_time)
+        self.overlap_pagein = overlap_pagein
         # 'paged': decode KV lives on pages; a context switch is a page-table
         # tier flip (no repack gather — matches the paged ServingEngine).
         # 'blob': the seed path — gather every leaf into a staging blob first.
@@ -119,6 +132,7 @@ class ServingSimulator:
                 stall = 0
 
             step_time = 0.0
+            pagein_time = 0.0
             if self.scheduler == "vllm":
                 # FCFS admission while KV fits
                 for r in list(waiting):
@@ -127,9 +141,6 @@ class ServingSimulator:
                         waiting.remove(r)
                         r.resident = True
                         running.append(r)
-                        step_time += self.model.prefill_time(self.hw, r.prompt_len)
-                        step_time += self._lora_load_time(r)
-                        r.prefilled = True
                 ntok = 1
             else:  # cfs
                 # slice boundary: fair-pick the least-served prompts
@@ -149,35 +160,65 @@ class ServingSimulator:
                         step_time += self._switch_time(r, direction="out")
                         r.resident = False
                 for r in nxt:
-                    if not r.resident and r.prefilled:
-                        step_time += self._switch_time(r, direction="in")
+                    # anything with resident KV pays the page-in: a request
+                    # parked MID-prefill moves its prefill_pos-token prefix
+                    if not r.resident and (r.prefilled or r.prefill_pos > 0):
+                        pagein_time += self._switch_time(r, direction="in")
                     r.resident = True
                 waiting = [r for r in candidates if r not in nxt]
                 running = nxt
-                for r in running:
-                    if not r.prefilled:
-                        step_time += self.model.prefill_time(self.hw, r.prompt_len)
-                        step_time += self._lora_load_time(r)
-                        r.prefilled = True
                 ntok = self.slice_tokens
+            if not self.overlap_pagein:
+                # seed accounting: page-ins serialize before compute
+                step_time += pagein_time
+                pagein_time = 0.0
 
             if not running:
                 # nothing fits / nothing to do; advance to next arrival
                 t = pending[0].arrival if pending else t + 1e-3
                 continue
 
+            # prefill under the ROUND token budget: decode lanes reserve one
+            # token per decode iteration of this round (a CFS round decodes
+            # `slice_tokens` per lane), the rest is handed out as prompt
+            # chunks (None = whole prompts, the seed behavior)
+            compute_time = 0.0
+            lanes = [r for r in running
+                     if r.prefilled and r.generated < r.gen_len]
+            pend = [r for r in running if not r.prefilled]
+            chunks = split_step_budget(self.step_tokens, len(lanes) * ntok,
+                                       [r.prompt_len - r.prefill_pos
+                                        for r in pend])
+            for r, c in zip(pend, chunks):
+                if c <= 0:
+                    continue
+                dt = self.model.prefill_time(self.hw, c)
+                r.prefill_pos += c
+                if r.prefill_pos >= r.prompt_len:
+                    r.prefilled = True
+                    dt += self._lora_load_time(r)
+                compute_time += dt
+                step_time += dt
+
             # decode ntok tokens for the running batch
             for _ in range(ntok):
-                live = [r for r in running if r.generated < r.gen_len]
+                live = [r for r in running
+                        if r.prefilled and r.generated < r.gen_len]
                 if not live:
                     break
                 ctx = sum(r.prompt_len + r.generated for r in live) / len(live)
-                step_time += self.model.decode_step_time(
+                dt = self.model.decode_step_time(
                     self.hw, len(live), ctx, self.weight_bytes)
+                compute_time += dt
+                step_time += dt
                 for r in live:
                     r.generated += 1
                     if r.ttft is None:
                         r.ttft = t + step_time
+            if pagein_time:
+                # prefetched page-ins: transfer hidden up to the compute time
+                step_time += overlapped_transfer_time(compute_time,
+                                                      pagein_time)
             t += step_time
 
             # retire finished
@@ -194,7 +235,10 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------
     def _switch_time(self, r: Request, direction: str) -> float:
-        kv = self.model.kv_bytes(r.prompt_len + r.generated)
+        # resident KV only: a mid-prefill request moves just the chunked
+        # prefix it has written so far (prefill_pos == prompt_len once done)
+        kv = self.model.kv_bytes(
+            (r.prefill_pos if not r.prefilled else r.prompt_len) + r.generated)
         if self.paging == "paged" and self.coalesced:
             # page-native runtime: tier flip of the page payload, one message
             # per (tier, donor) group — no repack gather

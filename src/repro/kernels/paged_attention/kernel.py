@@ -1,10 +1,16 @@
-"""Paged decode attention Pallas TPU kernels (serving hot spot).
+"""Paged attention Pallas TPU kernels (serving hot spot).
 
-Three entry points:
+Four entry points:
   * ``paged_attention``       — split K/V pools ``(K, P, page, hd)``
   * ``paged_attention_pool``  — fused page-major pool ``(P, 2, K, page, hd)``:
     the AquaTensor LOCAL pool IS the operand (batched block tables; the
     serving runtime's layout — tier migration moves whole slots, no repack)
+  * ``paged_prefill_attention_pool`` — query-BLOCK variant of the fused-pool
+    kernel: a chunk of ``Tc`` query tokens per sequence attends causally to
+    every page written so far (chunked continuous-batching prefill). The
+    page-iteration axis and online-softmax accumulators are identical to the
+    decode variant, so a token's softmax reduction order is the same for any
+    chunk split — chunked prefill is bit-identical across chunk sizes.
   * ``append_kv``             — page-append writer: one decode token's K/V
     into each sequence's current page, in place via input-output aliasing
 
@@ -152,6 +158,103 @@ def paged_attention_pool(q, kv_pool, block_tables, lengths, *,
         interpret=interpret,
     )(block_tables, lengths, qg, kv_pool)
     return out.reshape(B, H, hd)
+
+
+def _chunk_pool_kernel(block_tables_ref, starts_ref, q_ref, kv_ref, o_ref,
+                       acc_ref, m_ref, l_ref, *, page: int, gsize: int,
+                       scale: float):
+    """Query-block fused-pool variant: rows are (token, q-head-in-group)
+    pairs, so row r is chunk token r // gsize. The causal mask compares each
+    page position against the row's absolute position ``q_start + t``; the
+    page loop and accumulators are otherwise the decode kernel's."""
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (Tc*G, hd)
+    k = kv_ref[0, 0, 0].astype(jnp.float32)                # (page, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    q_pos = starts_ref[b] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // gsize
+    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = kv_ref[0, 1, 0].astype(jnp.float32)                # (page, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == npages - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_pool(q, kv_pool, block_tables, q_starts, *,
+                                 scale: float | None = None,
+                                 interpret: bool = False):
+    """Chunked-prefill attention over the fused page-major pool.
+
+    Each sequence contributes a CHUNK of ``Tc`` query tokens at absolute
+    positions ``q_starts[b] + t`` that attend causally to every page the
+    sequence has written so far (including the chunk's own K/V, which the
+    caller writes into the pool first).
+
+    q:            (B, Tc, H, hd)       one chunk of query tokens per sequence
+    kv_pool:      (P, 2, K, page, hd)  [:,0]=K, [:,1]=V
+    block_tables: (B, pps) int32       physical page slots per sequence
+                                       (padding points at a resident dummy)
+    q_starts:     (B,) int32           absolute position of each chunk's
+                                       first token
+    -> (B, Tc, H, hd)
+    """
+    B, Tc, H, hd = q.shape
+    P, _, K, page, _ = kv_pool.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # rows = (token, head-in-group): row r is token r // G of the chunk
+    qg = (q.reshape(B, Tc, K, G, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(B, K, Tc * G, hd))
+    kernel = functools.partial(_chunk_pool_kernel, page=page, gsize=G,
+                               scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block_tables, q_starts
+        grid=(B, K, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, Tc * G, hd), lambda b, h, i, bt, st: (b, h, 0, 0)),
+            pl.BlockSpec((1, 2, 1, page, hd),
+                         lambda b, h, i, bt, st: (bt[b, i], 0, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Tc * G, hd),
+                               lambda b, h, i, bt, st: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Tc * G, hd), jnp.float32),
+            pltpu.VMEM((Tc * G, 1), jnp.float32),
+            pltpu.VMEM((Tc * G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Tc * G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_starts, qg, kv_pool)
+    return (out.reshape(B, K, Tc, G, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(B, Tc, H, hd))
 
 
 def _append_kernel(slots_ref, offs_ref, k_ref, v_ref, pool_ref, out_ref, *,

@@ -14,6 +14,8 @@ from repro.kernels.paged_attention.kernel import append_kv as _append_kv
 from repro.kernels.paged_attention.kernel import paged_attention as _kernel
 from repro.kernels.paged_attention.kernel import \
     paged_attention_pool as _kernel_pool
+from repro.kernels.paged_attention.kernel import \
+    paged_prefill_attention_pool as _kernel_chunk
 
 
 def _on_cpu() -> bool:
@@ -31,6 +33,14 @@ def paged_attention_pool(q, kv_pool, block_tables, lengths):
     """Decode attention reading the fused page-major AquaTensor pool."""
     return _kernel_pool(q, kv_pool, block_tables, lengths,
                         interpret=_on_cpu())
+
+
+@jax.jit
+def paged_prefill_attention_pool(q, kv_pool, block_tables, q_starts):
+    """Chunked-prefill attention: a query BLOCK per sequence attends causally
+    to every page written so far (the query-block fused-pool variant)."""
+    return _kernel_chunk(q, kv_pool, block_tables, q_starts,
+                         interpret=_on_cpu())
 
 
 @jax.jit

@@ -51,6 +51,34 @@ def paged_attention_pool_ref(q, kv_pool, block_tables, lengths,
                                scale=scale)
 
 
+def paged_prefill_attention_pool_ref(q, kv_pool, block_tables, q_starts,
+                                     scale: float | None = None):
+    """Oracle for the query-block (chunked prefill) fused-pool variant.
+
+    q: (B,Tc,H,hd); kv_pool: (P,2,K,page,hd); block_tables: (B,pps);
+    q_starts: (B,) absolute position of each chunk's first token.
+    """
+    B, Tc, H, hd = q.shape
+    _, _, K, page, _ = kv_pool.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    k_pages = jnp.moveaxis(kv_pool[:, 0], 1, 0)       # (K, P, page, hd)
+    v_pages = jnp.moveaxis(kv_pool[:, 1], 1, 0)
+    kg = jnp.moveaxis(k_pages[:, block_tables], 1, 0).reshape(B, K, pps * page, hd)
+    vg = jnp.moveaxis(v_pages[:, block_tables], 1, 0).reshape(B, K, pps * page, hd)
+
+    qg = q.reshape(B, Tc, K, G, hd)
+    scores = jnp.einsum("btkgd,bksd->bkgts", qg, kg).astype(jnp.float32) * scale
+    k_pos = jnp.arange(pps * page)[None, None, None, None, :]
+    q_pos = (q_starts[:, None] + jnp.arange(Tc)[None, :])[:, None, None, :, None]
+    scores = jnp.where(k_pos <= q_pos, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bksd->bkgtd", probs, vg)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tc, H, hd)
+
+
 def append_kv_ref(kv_pool, k_new, v_new, slots, offsets):
     """Oracle for the page-append writer.
 

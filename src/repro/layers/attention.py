@@ -136,23 +136,72 @@ def _write_slot(buf, new, slot):
     return select_update(buf, new[:, 0], slot)
 
 
-def write_prefill_pages(kv_pool, k, v, block_table, *, page_tokens: int):
-    """Prefill writes pages directly: K/V (1,T,Hkv,hd) into the fused
-    page-major pool at the request's freshly-allocated physical slots.
+def write_chunk_pages(kv_pool, k, v, block_table, offset, *, page_tokens: int):
+    """Chunked prefill writes pages in place: K/V (1,Tc,Hkv,hd) of one chunk
+    land at token row ``offset`` of the chunk's page WINDOW — the pages
+    covering ``[q_start, q_start + Tc)``, gathered, row-updated and scattered
+    back so rows written by earlier chunks survive a mid-page chunk boundary.
 
-    kv_pool: (P, 2, K, page, hd); block_table: (pps,) int32 LOCAL slots.
-    The partial tail page is zero-padded past T (masked by `lengths` at read).
+    kv_pool: (P, 2, K, page, hd); block_table: (W,) int32 LOCAL slots of the
+    window (padding entries point at a resident dummy page whose content is
+    never read unmasked); offset: () int32, ``q_start % page_tokens``.
     """
-    _, T, K, hd = k.shape
-    pps = block_table.shape[0]
-    pad = pps * page_tokens - T
+    _, Tc, K, hd = k.shape
+    W = block_table.shape[0]
+    pages = kv_pool[block_table]                            # (W,2,K,page,hd)
+    flat = (pages.transpose(0, 3, 1, 2, 4)                  # token-major
+            .reshape(W * page_tokens, 2, K, hd))
+    new = jnp.stack([k[0], v[0]], axis=1)                   # (Tc,2,K,hd)
+    flat = jax.lax.dynamic_update_slice_in_dim(
+        flat, new.astype(flat.dtype), offset, axis=0)
+    pages = (flat.reshape(W, page_tokens, 2, K, hd)
+             .transpose(0, 2, 3, 1, 4))
+    return kv_pool.at[block_table].set(pages)
 
-    def pages(z):
-        z = jnp.pad(z[0], ((0, pad), (0, 0), (0, 0)))       # (pps*page, K, hd)
-        return z.reshape(pps, page_tokens, K, hd).transpose(0, 2, 1, 3)
 
-    kv = jnp.stack([pages(k), pages(v)], axis=1)            # (pps,2,K,page,hd)
-    return kv_pool.at[block_table].set(kv.astype(kv_pool.dtype))
+def attention_prefill_chunk(params, cfg: ModelConfig, x, kv_pool, block_table,
+                            q_start, *, read_pps: Optional[int] = None,
+                            impl: str = "pallas"):
+    """Chunked prefill attention for ONE request (full attention only).
+
+    x: (1,Tc,d) — one chunk of the prompt at absolute positions
+    ``q_start + [0, Tc)``; kv_pool: (P,2,K,page,hd); block_table: (pps_pad,)
+    int32 physical slots of the request's pages from position 0, padded with
+    a resident dummy; q_start: () int32 (traced — no retrace per position).
+
+    The chunk's K/V is written into its page window first, then the chunk
+    attends to every page written so far (causal within the chunk) through
+    the query-block kernel; ``impl='xla'`` selects the jnp oracle.
+    ``read_pps`` bounds the attention sweep to the pages a request can
+    actually own: the table's extra tail entries exist only so the WRITE
+    window's dynamic slice stays in bounds, and are always the dummy page —
+    sweeping them would be pure masked waste in the serving hot spot.
+    """
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention.ref import \
+        paged_prefill_attention_pool_ref
+    B, Tc, _ = x.shape
+    assert B == 1, "chunked prefill is per-request"
+    page = kv_pool.shape[3]
+    q_start = jnp.asarray(q_start, jnp.int32).reshape(())
+    positions = q_start + jnp.arange(Tc, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    # the write window: ceil(Tc/page)+1 pages starting at the page holding
+    # q_start (a mid-page chunk boundary touches one extra page)
+    pps_win = Tc // page + (1 if Tc % page else 0) + 1
+    page_idx = q_start // page
+    win = jax.lax.dynamic_slice(block_table, (page_idx,), (pps_win,))
+    kv_pool = write_chunk_pages(kv_pool, k_new, v_new, win, q_start % page,
+                                page_tokens=page)
+    bt = block_table[None, :read_pps]                       # (1, read_pps)
+    if impl == "pallas":
+        ctx = pa_ops.paged_prefill_attention_pool(q, kv_pool, bt,
+                                                  q_start[None])
+    else:
+        ctx = paged_prefill_attention_pool_ref(q, kv_pool, bt, q_start[None])
+    out = linear(params["wo"], ctx.reshape(B, Tc, -1))
+    return out, kv_pool
 
 
 def attention_decode_paged(params, cfg: ModelConfig, x, kv_pool, block_table,

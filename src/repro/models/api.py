@@ -57,16 +57,20 @@ def supports_paged_kv(cfg: ModelConfig) -> bool:
     return cfg.family != ENCDEC and lm.supports_paged_kv(cfg)
 
 
-def prefill_paged(params, cfg: ModelConfig, tokens, kv_pool, block_tables,
-                  **extras):
-    return lm.prefill_paged(params, cfg, tokens, kv_pool, block_tables,
-                            **extras)
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, kv_pool,
+                        block_tables, q_start, last_index, *,
+                        read_pps=None, impl: str = "pallas"):
+    """One bucket-padded prompt chunk -> (logits (1,V) of ``last_index``,
+    kv_pool). Jit'd; trace count is bounded by the shape-bucket ladder."""
+    return lm.prefill_chunk_paged_jit(params, cfg, tokens, kv_pool,
+                                      block_tables, q_start, last_index,
+                                      read_pps=read_pps, impl=impl)
 
 
 def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
                       tokens, pos, *, impl: str = "pallas"):
-    return lm.decode_step_paged(params, cfg, kv_pool, block_tables, tokens,
-                                pos, impl=impl)
+    return lm.decode_step_paged_jit(params, cfg, kv_pool, block_tables,
+                                    tokens, pos, impl=impl)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,7 @@ group body serves every group.
 from __future__ import annotations
 
 import functools
+from collections import Counter
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -333,48 +334,100 @@ def _ffn_apply(p, cfg: ModelConfig, x, i: int, *, dropless: bool = False,
     return x + h
 
 
-def _group_prefill_paged(gp, cfg: ModelConfig, x, kv_pool, bt_g, *,
-                         page_tokens: int):
-    """Full-sequence pass for one request (B=1) writing K/V pages directly."""
+# Traces of the serving entry points, keyed by name. The counter bumps as a
+# Python side effect INSIDE the traced function body, so it advances once per
+# jit trace (shape bucket), not per call — the CI retrace guard asserts it
+# stays flat across a mixed-length workload.
+TRACE_COUNTS: Counter = Counter()
+
+
+def trace_counts() -> dict:
+    return dict(TRACE_COUNTS)
+
+
+def reset_trace_counts():
+    TRACE_COUNTS.clear()
+
+
+def _group_prefill_chunk(gp, cfg: ModelConfig, x, kv_pool, bt_g, q_start, *,
+                         read_pps: Optional[int], impl: str):
+    """One chunk of one request (B=1): write the chunk's K/V pages in place,
+    attend to everything written so far via the query-block kernel."""
     for i in range(group_size(cfg)):
         p = gp[f"sub{i}"]
         h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
-        h, (k, v) = attn.attention_full(p["mix"], cfg, h, window=0,
-                                        return_kv=True)
-        kv_pool = attn.write_prefill_pages(kv_pool, k, v, bt_g[i],
-                                           page_tokens=page_tokens)
+        h, kv_pool = attn.attention_prefill_chunk(p["mix"], cfg, h, kv_pool,
+                                                  bt_g[i], q_start,
+                                                  read_pps=read_pps,
+                                                  impl=impl)
         x = x + h
-        x = _ffn_apply(p, cfg, x, i)
+        x = _ffn_apply(p, cfg, x, i, dropless=True)
     return x, kv_pool
 
 
-def prefill_paged(params, cfg: ModelConfig, tokens, kv_pool, block_tables, *,
-                  prefix_embeds=None):
-    """Prefill ONE request, writing its KV straight into the paged pool.
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, kv_pool,
+                        block_tables, q_start, last_index, *,
+                        read_pps: Optional[int] = None,
+                        impl: str = "pallas"):
+    """Prefill ONE CHUNK of one request, writing KV straight into the pool.
 
-    tokens: (1,T); kv_pool: (P,2,K,page,hd); block_tables: (G,gs,pps) int32
-    physical LOCAL slots (one row of pages per layer).
-    -> (last-token logits (1,V), updated kv_pool)
+    tokens: (1,Tc) — the chunk, bucket-padded (garbage rows past the real
+    length are masked causally and overwritten by later chunks/decode);
+    kv_pool: (P,2,K,page,hd); block_tables: (G,gs,pps_pad) int32 physical
+    slots of the request's pages from position 0, dummy-padded; q_start /
+    last_index: () int32 (traced) — the chunk's absolute start position and
+    the row whose logits the caller wants (the last REAL token; only the
+    final chunk's are consumed, but the unembed of one row is cheap and
+    keeps the compiled program shape-stable).
+    -> (logits (1,V) of that row, updated kv_pool)
+
+    Whole-prompt prefill is the degenerate single-chunk call (q_start=0,
+    Tc >= prompt length); routing depends only on per-token state, so any
+    chunk split yields bit-identical logits. MoE FFNs therefore run
+    DROPLESS here (as the paged decode path always has): capacity-factor
+    dispatch would make a token's drop probability depend on its chunk's
+    batch occupancy, breaking split invariance.
     """
     assert supports_paged_kv(cfg), f"{cfg.name}: paged KV unsupported"
-    assert tokens.shape[0] == 1, "paged prefill is per-request"
-    page_tokens = kv_pool.shape[3]
+    assert tokens.shape[0] == 1, "chunked prefill is per-request"
+    TRACE_COUNTS["prefill_chunk"] += 1
     x = embed(params["embed"], cfg, tokens)
-    if prefix_embeds is not None:
-        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    q_start = jnp.asarray(q_start, jnp.int32).reshape(())
 
     def scan_body(carry, xs):
         x, pool = carry
         gp, bt_g = xs
-        x, pool = _group_prefill_paged(gp, cfg, x, pool, bt_g,
-                                       page_tokens=page_tokens)
+        x, pool = _group_prefill_chunk(gp, cfg, x, pool, bt_g, q_start,
+                                       read_pps=read_pps, impl=impl)
         return (x, pool), None
 
     (x, kv_pool), _ = jax.lax.scan(scan_body, (x, kv_pool),
                                    (params["blocks"], block_tables))
     x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
-    logits = unembed(params["embed"], cfg, x[:, -1:])[:, 0]
+    last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(last_index, jnp.int32),
+                                        1, axis=1)
+    logits = unembed(params["embed"], cfg, last)[:, 0]
     return logits, kv_pool
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_chunk_jit(cfg: ModelConfig, impl: str, read_pps: Optional[int]):
+    """One compiled program per (config, impl, shape bucket)."""
+    return jax.jit(lambda params, tokens, pool, bt, q_start, last:
+                   prefill_chunk_paged(params, cfg, tokens, pool, bt,
+                                       q_start, last, read_pps=read_pps,
+                                       impl=impl))
+
+
+def prefill_chunk_paged_jit(params, cfg: ModelConfig, tokens, kv_pool,
+                            block_tables, q_start, last_index, *,
+                            read_pps: Optional[int] = None,
+                            impl: str = "pallas"):
+    """Jit'd chunk prefill: callers pass bucket-padded shapes, so the trace
+    count is bounded by the bucket ladder, not the prompt-length set."""
+    return _prefill_chunk_jit(cfg, impl, read_pps)(params, tokens, kv_pool,
+                                                   block_tables, q_start,
+                                                   last_index)
 
 
 def _group_decode_paged(gp, cfg: ModelConfig, x, kv_pool, bt_g, pos, *,
@@ -399,6 +452,7 @@ def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
     when ``impl='pallas'``; ``impl='xla'`` uses the jnp oracle.
     """
     assert supports_paged_kv(cfg), f"{cfg.name}: paged KV unsupported"
+    TRACE_COUNTS["decode_step"] += 1
     x = embed(params["embed"], cfg, tokens[:, None])
 
     def scan_body(carry, xs):
@@ -412,6 +466,20 @@ def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
     x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
     logits = unembed(params["embed"], cfg, x)[:, 0]
     return logits, kv_pool
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_step_jit(cfg: ModelConfig, impl: str):
+    return jax.jit(lambda params, pool, bt, tokens, pos: decode_step_paged(
+        params, cfg, pool, bt, tokens, pos, impl=impl))
+
+
+def decode_step_paged_jit(params, cfg: ModelConfig, kv_pool, block_tables,
+                          tokens, pos, *, impl: str = "pallas"):
+    """Jit'd paged decode: batch lanes and block tables have fixed padded
+    shapes, so the whole step compiles exactly once per (config, impl)."""
+    return _decode_step_jit(cfg, impl)(params, kv_pool, block_tables, tokens,
+                                       pos)
 
 
 def _group_decode(gp, cfg: ModelConfig, x, cache, pos, shard_axes=None):

@@ -1,4 +1,4 @@
-"""The serving engine: continuous batching with pluggable schedulers
+"""The serving engine: chunked continuous batching with pluggable schedulers
 (FCFS / CFS) on a page-native KV runtime.
 
 By default decode KV lives on AquaTensor pages (``PagedKVRuntime``): each
@@ -10,6 +10,18 @@ one coalesced message per (tier, donor) group, zero repacking (paper §3+§5).
 Families whose decode state is not plain paged KV (RWKV/Mamba state, MLA
 latent caches, windowed ring buffers) fall back to the seed dense-slot
 runtime, which parks whole contexts as blobs via the ``ContextStore`` shim.
+
+Prefill is CHUNKED on the paged runtime: every step spends at most
+``step_tokens`` tokens, split between the decode lanes and prompt chunks of
+the run set's pending prefills (several requests' chunks may ride one step),
+so no step scales with the longest prompt. All paged entry points go through
+shape buckets — chunk lengths pad to a power-of-two ladder, block tables and
+decode lanes to fixed sizes — so the jit cache holds a constant number of
+traces regardless of the prompt-length mix. Page restores for the NEXT
+step's scheduled requests are prefetched during the current step and priced
+with the transfer hidden up to the step's compute time
+(``perfmodel.overlapped_transfer_time`` — the paper's offload/compute
+overlap).
 
 The engine runs REAL model numerics (any decoder-only family in the zoo) on
 tiny configs in CI; its per-step wall-times are additionally priced by
@@ -25,6 +37,7 @@ donor pools at the iteration boundary.
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -35,24 +48,36 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.aqua_tensor import HOST, REMOTE, TransferMeter
 from repro.core.coordinator import Coordinator
-from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E)
+from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E,
+                                  overlapped_transfer_time)
 from repro.models import api
 from repro.serving.kv_cache import (ContextStore, PagedKVRuntime,
                                     extract_slot, insert_slot)
 from repro.serving.scheduler import (CFSScheduler, Decision, FCFSScheduler,
-                                     ReqState, fairness_spread)
+                                     ReqState, bucket_tokens, fairness_spread,
+                                     split_step_budget)
+
+
+class SchedulingInvariantError(RuntimeError):
+    """The planned run set violated an engine invariant (e.g. more requests
+    than free batch slots) — a scheduler bug that must fail loudly instead of
+    silently skipping placement and serving the request never."""
 
 
 @dataclass
 class EngineMetrics:
     sim_time: float = 0.0
     steps: int = 0
-    prefills: int = 0
+    prefills: int = 0                     # prefill chunk executions
     preemptions: int = 0
     restores: int = 0
+    prefetched_restores: int = 0          # restores overlapped with compute
+    overlap_hidden_s: float = 0.0         # transfer time hidden by overlap
     ttft: Dict[int, float] = field(default_factory=dict)
     rct: Dict[int, float] = field(default_factory=dict)
     fairness_trace: List[int] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+    prefill_tokens_trace: List[int] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -65,6 +90,8 @@ class ServingEngine:
                  kv_local_pages: Optional[int] = None,
                  kv_host_pages: int = 8192,
                  paged_impl: str = "pallas",
+                 step_tokens: Optional[int] = None,
+                 prefetch: bool = True,
                  store: Optional[ContextStore] = None,
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
@@ -86,6 +113,16 @@ class ServingEngine:
             raise ValueError(f"{cfg.name}: paged runtime unsupported")
         self.runtime = runtime
 
+        if step_tokens is not None:
+            if runtime != "paged":
+                raise ValueError("step_tokens (chunked prefill) requires the "
+                                 "paged runtime; the dense shim prefills "
+                                 "whole prompts")
+            if step_tokens < 8:
+                raise ValueError("step_tokens must be >= 8 (one chunk bucket)")
+        self.step_tokens = step_tokens
+        self.prefetch = prefetch and runtime == "paged"
+
         page_cost = None
         page_budget = None
         if runtime == "paged":
@@ -101,6 +138,12 @@ class ServingEngine:
             page_cost = (self._page_cost_cfs if scheduler == "cfs"
                          else self._page_cost_fcfs)
             page_budget = self.kv.page_budget
+            # chunk block tables pad to the request's max pages PLUS the
+            # write window of the largest chunk bucket: ONE table shape for
+            # every (chunk, context-length) combination
+            hi = bucket_tokens(max_seq)
+            self._pps_pad = (self.kv.pps
+                             + math.ceil(hi / self.kv.page_tokens) + 1)
         else:
             self.kv = None
             self.store = store or ContextStore(page_elems=4096,
@@ -127,6 +170,7 @@ class ServingEngine:
         self.waiting: List[ReqState] = []
         self.running: List[ReqState] = []
         self.finished: List[ReqState] = []
+        self._prefetched: List[ReqState] = []
         self.metrics = EngineMetrics()
         self._rid = itertools.count()
 
@@ -170,84 +214,177 @@ class ServingEngine:
 
         decision = self.sched.plan(m.steps, self.waiting, self.running)
 
-        step_time = (self._place_paged(decision) if self.runtime == "paged"
-                     else self._place_dense(decision))
+        # the step's token budget: one token per decode lane, the remainder
+        # handed out as prompt chunks (several requests' chunks per step)
+        lanes = [r for r in decision.run if r.prefilled and not r.done]
+        pending = [r for r in decision.run if not r.prefilled]
+        chunks = split_step_budget(
+            self.step_tokens, len(lanes),
+            [len(r.prompt_tokens) - r.prefill_pos for r in pending])
+
+        compute_time, transfer_time = self._place(decision,
+                                                  list(zip(pending, chunks)))
 
         self.running = [r for r in decision.run if r.slot is not None]
         self.waiting = [r for r in self.waiting + decision.preempt
                         if r.slot is None and not r.done]
 
-        # one decode step for every resident request
-        live = [r for r in self.running if not r.done]
+        # one decode step for every resident request past its prefill
+        live = [r for r in self.running if not r.done and r.prefilled]
         if live:
-            step_time += (self._decode_paged(live) if self.runtime == "paged"
-                          else self._decode_dense(live))
+            compute_time += (self._decode_paged(live)
+                             if self.runtime == "paged"
+                             else self._decode_dense(live))
+        step_time = compute_time + transfer_time
 
-        # TTFT: one accounting for prefill- and decode-produced first tokens —
-        # the time the step COMPLETES, including everything accrued in it
-        for r in self.running:
-            if r.generated and r.rid not in m.ttft:
-                r.ttft_step = m.steps
-                m.ttft[r.rid] = m.sim_time + step_time - r.arrival
-
-        # retire
+        # retire bookkeeping first: freed slots/pages raise the odds the
+        # prefetch below fits (times are stamped after the prefetch)
+        retired = []
         for r in list(self.running):
             if r.done:
                 r.finish_step = m.steps
-                m.rct[r.rid] = m.sim_time + step_time - r.arrival
                 self._free_slots.append(r.slot)
                 r.slot = None
                 if self.runtime == "paged":
                     self.kv.release(r.rid)
                 self.running.remove(r)
                 self.finished.append(r)
+                retired.append(r)
+
+        step_time += self._prefetch_restores(compute_time)
+
+        # TTFT: one accounting for prefill- and decode-produced first tokens —
+        # the time the step COMPLETES, including everything accrued in it
+        # (the visible excess of a prefetched restore included)
+        for r in self.running + retired:
+            if r.generated and r.rid not in m.ttft:
+                r.ttft_step = m.steps
+                m.ttft[r.rid] = m.sim_time + step_time - r.arrival
+        for r in retired:
+            m.rct[r.rid] = m.sim_time + step_time - r.arrival
 
         m.sim_time += step_time
         m.steps += 1
+        m.step_times.append(step_time)
         m.fairness_trace.append(
             fairness_spread(self.waiting + self.running))
 
     # ------------------------------------------------------------------
-    # paged runtime: preempt/restore are page-table tier flips
+    # placement: shared by both runtimes (park / slot / restore / prefill);
+    # only the park, restore and prefill primitives differ
     # ------------------------------------------------------------------
-    def _place_paged(self, decision: Decision) -> float:
+    def _place(self, decision: Decision,
+               chunk_plan: List) -> tuple:
+        """Execute a plan: park preempted requests, slot + restore the
+        scheduled set, run this step's prefill chunks. Returns
+        ``(prefill_compute_time, metered_transfer_time)``."""
         m = self.metrics
-        step_time = 0.0
+        paged = self.runtime == "paged"
         t_before = self.pager.meter.sim_time
+        if paged and self._prefetched:
+            # prefetch misprediction (a submit() between steps changed the
+            # plan): re-park so LOCAL holds only the planned run set — the
+            # page-budget invariant ensure_capacity relies on
+            run_ids = {r.rid for r in decision.run}
+            for r in self._prefetched:
+                if (r.parked is None and r.slot is None and not r.done
+                        and r.rid not in run_ids):
+                    self.kv.park(r.rid, r.resident_tokens,
+                                 prefer=self.offload_tier)
+                    r.parked = True
+            self._prefetched = []
         for r in decision.preempt:
-            # KV for ctx_len-1 tokens is resident: the newest token's K/V is
-            # appended at its next decode step
-            self.kv.park(r.rid, max(r.ctx_len - 1, 0),
-                         prefer=self.offload_tier)
+            if paged:
+                # only r.resident_tokens of KV exist in the pool: the newest
+                # generated token's K/V is appended at its next decode step
+                self.kv.park(r.rid, r.resident_tokens,
+                             prefer=self.offload_tier)
+                r.parked = True
+            else:
+                ctx = extract_slot(self.cache, r.slot, r.ctx_len,
+                                   self.max_seq)
+                r.parked = self.store.park(ctx, r.ctx_len,
+                                           prefer=self.offload_tier)
             self._free_slots.append(r.slot)
             r.slot = None
-            r.parked = True
             m.preemptions += 1
         for r in decision.run:
             if r.slot is not None:
                 continue
             if not self._free_slots:
-                continue                     # shouldn't happen: plan respects cap
+                raise SchedulingInvariantError(
+                    f"{self.name}: planned run set needs a slot for request "
+                    f"{r.rid} but none are free (max_running="
+                    f"{self.max_running}) — scheduler exceeded the slot cap")
             r.slot = self._free_slots.pop()
             if r.parked:
-                self.kv.restore(r.rid)       # ensure_local: coalesced page-in
-                r.parked = False
+                if paged:
+                    self.kv.restore(r.rid)   # ensure_local: coalesced page-in
+                else:
+                    ctx = self.store.restore(r.parked)
+                    self.cache = insert_slot(self.cache, ctx, r.slot,
+                                             r.ctx_len, self.max_seq)
+                r.parked = None
                 m.restores += 1
-            elif not r.prefilled:
-                step_time += self._prefill_paged(r)
-                m.prefills += 1
-        return step_time + (self.pager.meter.sim_time - t_before)
+        prefill_time = 0.0
+        ptoks = 0
+        for r, n in chunk_plan:
+            if n <= 0 or r.slot is None:
+                continue
+            if paged:
+                prefill_time += self._prefill_chunk_paged(r, n)
+                ptoks += n
+            else:
+                ptoks += len(r.prompt_tokens)
+                prefill_time += self._prefill_into_slot(r)
+            m.prefills += 1
+        m.prefill_tokens_trace.append(ptoks)
+        return prefill_time, self.pager.meter.sim_time - t_before
 
-    def _prefill_paged(self, r: ReqState) -> float:
-        T = len(r.prompt_tokens)
-        self.kv.ensure_capacity(r.rid, T)    # LOCAL pages, or a loud error
-        bt = self.kv.block_tables_prefill(r.rid)
-        toks = jnp.asarray(r.prompt_tokens, jnp.int32)[None]
-        logits, self.kv.pool = api.prefill_paged(
-            self.params, self.cfg, toks, self.kv.pool, bt)
-        r.prefilled = True
-        r.generated.append(int(jnp.argmax(logits[0])))
-        return self.cost.prefill_time(self.hw, T)
+    # ------------------------------------------------------------------
+    # prefetch: restore next step's scheduled requests DURING this step,
+    # pricing the transfer as hidden up to the step's compute time
+    # ------------------------------------------------------------------
+    def _prefetch_restores(self, compute_time: float) -> float:
+        if not self.prefetch or not (self.waiting or self.running):
+            return 0.0
+        m = self.metrics
+        nxt = self.sched.peek(m.steps + 1, self.waiting, self.running)
+        t_before = self.pager.meter.sim_time
+        for r in nxt.run:
+            if r.parked and self.kv.can_restore(r.rid):
+                self.kv.restore(r.rid)
+                r.parked = None
+                m.restores += 1
+                m.prefetched_restores += 1
+                self._prefetched.append(r)
+        transfer = self.pager.meter.sim_time - t_before
+        if transfer <= 0.0:
+            return 0.0
+        visible = overlapped_transfer_time(compute_time, transfer)
+        m.overlap_hidden_s += transfer - visible
+        return visible
+
+    # ------------------------------------------------------------------
+    # paged runtime primitives
+    # ------------------------------------------------------------------
+    def _prefill_chunk_paged(self, r: ReqState, n_tokens: int) -> float:
+        """Run one prompt chunk: allocate its pages, write K/V in place,
+        produce the first token when the chunk completes the prompt."""
+        start = r.prefill_pos
+        self.kv.ensure_capacity(r.rid, start + n_tokens)
+        Tb = bucket_tokens(n_tokens)         # shape bucket, not exact length
+        toks = np.zeros((1, Tb), np.int32)
+        toks[0, :n_tokens] = r.prompt_tokens[start:start + n_tokens]
+        bt = self.kv.block_tables_prefill(r.rid, pad_to=self._pps_pad)
+        logits, self.kv.pool = api.prefill_chunk_paged(
+            self.params, self.cfg, jnp.asarray(toks), self.kv.pool, bt,
+            jnp.int32(start), jnp.int32(n_tokens - 1),
+            read_pps=self.kv.pps, impl=self.paged_impl)
+        r.prefill_pos = start + n_tokens
+        if r.prefilled:
+            r.generated.append(int(jnp.argmax(logits[0])))
+        return self.cost.prefill_time(self.hw, n_tokens)
 
     def _decode_paged(self, live: List[ReqState]) -> float:
         tokens = np.zeros((self.max_running,), np.int32)
@@ -274,38 +411,8 @@ class ServingEngine:
                                           self.weight_bytes)
 
     # ------------------------------------------------------------------
-    # dense runtime (shim): slotted cache + blob context switching
+    # dense runtime (shim) primitives: whole-prompt prefill into a slot
     # ------------------------------------------------------------------
-    def _place_dense(self, decision: Decision) -> float:
-        m = self.metrics
-        step_time = 0.0
-        t_before = self.pager.meter.sim_time
-        # page out preempted requests (coalesced blob -> AQUA tensor)
-        for r in decision.preempt:
-            ctx = extract_slot(self.cache, r.slot, r.ctx_len, self.max_seq)
-            r.parked = self.store.park(ctx, r.ctx_len,
-                                       prefer=self.offload_tier)
-            self._free_slots.append(r.slot)
-            r.slot = None
-            m.preemptions += 1
-        # restore / prefill the scheduled set
-        for r in decision.run:
-            if r.slot is not None:
-                continue
-            if not self._free_slots:
-                continue
-            r.slot = self._free_slots.pop()
-            if r.parked is not None and r.parked is not False:
-                ctx = self.store.restore(r.parked)
-                self.cache = insert_slot(self.cache, ctx, r.slot, r.ctx_len,
-                                         self.max_seq)
-                r.parked = None
-                m.restores += 1
-            elif not r.prefilled:
-                step_time += self._prefill_into_slot(r)
-                m.prefills += 1
-        return step_time + (self.pager.meter.sim_time - t_before)
-
     def _prefill_into_slot(self, r: ReqState) -> float:
         cache1 = api.init_decode_state(self.cfg, 1, self.max_seq)
         toks = jnp.asarray(r.prompt_tokens, jnp.int32)[None]
@@ -313,7 +420,7 @@ class ServingEngine:
         self.cache = jax.tree.map(
             lambda big, one: big.at[:, r.slot].set(one[:, 0].astype(big.dtype)),
             self.cache, cache1)
-        r.prefilled = True
+        r.prefill_pos = len(r.prompt_tokens)
         r.generated.append(int(jnp.argmax(logits[0])))
         return self.cost.prefill_time(self.hw, len(r.prompt_tokens))
 

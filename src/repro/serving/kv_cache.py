@@ -134,10 +134,14 @@ class PagedKVRuntime:
             del self._pages[rid]
 
     # -- block tables (the kernel operands) -------------------------------
-    def block_tables_prefill(self, rid: int) -> jnp.ndarray:
-        """(G, gs, pps_req) physical LOCAL slots for one request."""
+    def block_tables_prefill(self, rid: int, pad_to: Optional[int] = None
+                             ) -> jnp.ndarray:
+        """(G, gs, pad_to) physical LOCAL slots for one request's allocated
+        pages from position 0, scratch-padded. Chunked prefill passes a FIXED
+        ``pad_to`` (pps plus the write-window spill) so every chunk of every
+        request shares one block-table shape — no retrace per context length."""
         rows = self._pages[rid]
-        bt = self.aqua.block_tables(rows, pad_to=len(rows[0]),
+        bt = self.aqua.block_tables(rows, pad_to=pad_to or len(rows[0]),
                                     pad_slot=self.scratch_slot)
         return jnp.asarray(bt.reshape(self.G, self.gs, -1))
 
@@ -174,6 +178,17 @@ class PagedKVRuntime:
         self.aqua.ensure_local(self._flat(rid))
         for row in self._pages[rid]:
             self.aqua.set_page_fill(row, 1.0)
+
+    def nonlocal_pages(self, rid: int) -> int:
+        """Pages of the request currently NOT in the LOCAL tier."""
+        rows = self.aqua.page_table[self._flat(rid)]
+        return int((rows[:, 0] != LOCAL).sum())
+
+    def can_restore(self, rid: int) -> bool:
+        """True when a restore fits the free LOCAL slots right now — the
+        prefetch guard: an early ``ensure_local`` must never steal pages the
+        current run set still needs (it would raise mid-step otherwise)."""
+        return self.nonlocal_pages(rid) <= self.aqua.local_free
 
     # -- coordinator-driven lease plumbing --------------------------------
     def add_remote_lease(self, donor: str, nbytes: float):

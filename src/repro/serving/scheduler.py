@@ -7,6 +7,13 @@ Capacity planning is in PAGES, not slots: when constructed with a
 ``page_budget`` (the LOCAL pool size), the run set is chosen so its pages
 fit the local tier — the block-table analogue of vLLM's KV-memory admission
 gate. Without them (the dense shim) the plan degrades to slot counting.
+
+Step execution is budgeted in TOKENS (``split_step_budget``): every step
+spends at most ``step_tokens`` tokens, split between the decode lanes (one
+each) and prompt-prefill CHUNKS of the run set's not-yet-prefilled requests.
+A long prompt therefore never monopolizes a step — its prefill is spread
+over several bounded steps while short prompts' chunks and everyone's decode
+tokens ride along (chunked continuous batching, Kossmann et al. 2024).
 """
 from __future__ import annotations
 
@@ -23,10 +30,14 @@ class ReqState:
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None            # batch slot when running
     parked: object = None                 # ParkedContext when preempted
-    prefilled: bool = False
+    prefill_pos: int = 0                  # prompt tokens whose KV is written
     ttft_step: Optional[int] = None
     finish_step: Optional[int] = None
     lora_id: Optional[int] = None
+
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_pos >= len(self.prompt_tokens)
 
     @property
     def vruntime(self) -> int:            # CFS: service received = tokens out
@@ -35,6 +46,13 @@ class ReqState:
     @property
     def ctx_len(self) -> int:
         return len(self.prompt_tokens) + len(self.generated)
+
+    @property
+    def resident_tokens(self) -> int:
+        """Tokens whose K/V is materialized in the cache right now: prefilled
+        prompt tokens plus every generated token but the newest (its K/V is
+        appended at the next decode step)."""
+        return self.prefill_pos + max(len(self.generated) - 1, 0)
 
     @property
     def done(self) -> bool:
@@ -46,6 +64,53 @@ class Decision:
     run: List[ReqState]                   # the set that should be resident
     admit: List[ReqState]                 # subset of run needing prefill
     preempt: List[ReqState]               # currently-resident to page out
+
+
+def split_step_budget(step_tokens: Optional[int], decode_lanes: int,
+                      prefill_remaining: Sequence[int]) -> List[int]:
+    """Split one step's token budget into prefill chunk sizes.
+
+    ``decode_lanes`` tokens are reserved for the resident decoding requests
+    (one each); the remainder is FAIR-SHARED among the pending prefills so a
+    short prompt's chunk rides the same step as a long prompt's — the long
+    prefill can no longer monopolize a step (that is the TTFT-under-burst
+    fix). Shares that a short prompt cannot use spill over to the others.
+    ``step_tokens=None`` disables budgeting: every pending prefill gets its
+    full remaining prompt in one chunk (the unchunked baseline).
+    Returns one chunk size (possibly 0) per entry of ``prefill_remaining``.
+
+    When the decode lanes alone consume the whole budget, one token is still
+    granted (progress floor): an admitted prefill holding a batch slot must
+    never starve behind a saturated decode batch, so a step may exceed the
+    budget by at most one token.
+    """
+    rem = [max(r, 0) for r in prefill_remaining]
+    if step_tokens is None:
+        return rem
+    left = max(step_tokens - decode_lanes, 1 if any(rem) else 0)
+    chunks = [0] * len(rem)
+    while left > 0:
+        active = [i for i in range(len(rem)) if chunks[i] < rem[i]]
+        if not active:
+            break
+        share = max(left // len(active), 1)
+        for i in active:
+            take = min(share, rem[i] - chunks[i], left)
+            chunks[i] += take
+            left -= take
+            if left == 0:
+                break
+    return chunks
+
+
+def bucket_tokens(n: int, *, lo: int = 8) -> int:
+    """Pad a chunk length up to its shape bucket (powers of two from ``lo``),
+    so the jit cache holds one trace per bucket instead of one per distinct
+    prompt/chunk length."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class FCFSScheduler:
@@ -76,6 +141,12 @@ class FCFSScheduler:
             run.append(r)
             admit.append(r)
         return Decision(run, admit, [])
+
+    def peek(self, step: int, waiting: Sequence[ReqState],
+             running: Sequence[ReqState]) -> Decision:
+        """Non-binding preview of the next plan (FCFS planning is stateless),
+        used by the engine to prefetch page restores during the current step."""
+        return self.plan(step, waiting, running)
 
 
 class CFSScheduler:
@@ -117,6 +188,17 @@ class CFSScheduler:
         preempt = [r for r in running if r.rid not in run_ids]
         admit = [r for r in run if r.slot is None and not r.prefilled]
         return Decision(run, admit, preempt)
+
+    def peek(self, step: int, waiting: Sequence[ReqState],
+             running: Sequence[ReqState]) -> Decision:
+        """Non-binding preview of the next plan: same decision the next
+        ``plan`` call will make, with the slice counter restored — the engine
+        uses it to issue restore prefetches that overlap this step's compute."""
+        saved = self._since_switch
+        try:
+            return self.plan(step, waiting, running)
+        finally:
+            self._since_switch = saved
 
 
 def fairness_spread(requests: Sequence[ReqState]) -> int:
