@@ -1,92 +1,122 @@
-"""Context-switch microbenchmark: page-table tier flip vs seed blob repack.
+"""Context-switch microbenchmark: page-table tier flip vs the seed blob
+repack, for EVERY family in the zoo.
 
-Measures what one CFS preempt+restore of a parked request actually MOVES:
+Measures what one CFS preempt+restore of a parked request actually MOVES on
+the unified paged state runtime (attention KV pages, MLA latent pages, Mamba
+ssm/conv and RWKV6 wkv/shift state pages):
 
-  * paged runtime   — the request's KV pages flip tier via
+  * paged runtime   — the request's pages flip tier via
                       ``AquaTensor.offload`` / ``ensure_local``: native-dtype
-                      payload only (partial tail metered at its fill), ONE
-                      coalesced message per (tier, donor) group, no repack.
-  * seed blob path  — every cache leaf is sliced out of the dense decode
-                      cache, upcast to float32 and packed into one staging
-                      blob (``pack_context``): a ~2x byte blowup for bf16
-                      KV before it even reaches the link.
+                      payload only (partial token-plane tails metered at
+                      their fill), ONE coalesced message per
+                      (plane, tier, donor) group, no repack.
+  * blob baseline   — the DELETED seed path (PR 1's measured baseline),
+                      priced analytically: every cache leaf sliced out of the
+                      dense decode cache, upcast to float32 (4 bytes/element
+                      regardless of native dtype) and packed into one staging
+                      blob before it even reaches the link — a ~2x byte
+                      blowup for bf16 state plus a full HBM gather pass
+                      (``perfmodel.context_switch_time``).
+
+Writes ``BENCH_state_paging.json`` next to the repo root (bytes moved vs
+native state size and flip time vs the blob baseline, per family).
 
     PYTHONPATH=src python -m benchmarks.context_switch
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
+FAMILIES = {
+    "attention": "qwen1.5-0.5b",
+    "ssm": "rwkv6-3b",
+    "mla": "deepseek-v2-lite-16b",
+    "hybrid": "jamba-v0.1-52b",
+}
 
 
 def measure(arch: str = "qwen1.5-0.5b", ctx_len: int = 52,
             page_tokens: int = 8, max_seq: int = 64) -> Dict[str, float]:
-    """Meter one preempt+restore round trip on both runtimes (bf16 model)."""
+    """Meter one preempt+restore round trip on the paged runtime (bf16 model)
+    and price the deleted blob path analytically on the same footprint."""
     from repro.configs import get_config, smoke_config
     from repro.core.aqua_tensor import REMOTE
-    from repro.serving.kv_cache import (ContextStore, PagedKVRuntime,
-                                        extract_slot)
-    from repro.models import api
+    from repro.core.perfmodel import TPU_V5E, context_switch_time
+    from repro.serving.kv_cache import PagedStateRuntime
 
     cfg = smoke_config(get_config(arch)).replace(param_dtype="bfloat16",
                                                  compute_dtype="bfloat16")
 
     # --- paged runtime: park/restore are page-table tier flips -----------
-    kv = PagedKVRuntime(cfg, max_seq=max_seq, page_tokens=page_tokens,
-                        max_running=1)
-    kv.add_remote_lease("donor0", 512 * kv.aqua.page_bytes)
+    kv = PagedStateRuntime(cfg, max_seq=max_seq, page_tokens=page_tokens,
+                           max_running=1)
+    kv.add_remote_lease("donor0", 1 << 24)
     rid = 0
     kv.ensure_capacity(rid, ctx_len)
-    native = kv.kv_footprint_bytes(ctx_len)
+    native = kv.footprint_bytes(ctx_len)
 
+    t0 = kv.meter.sim_time
     kv.park(rid, ctx_len, prefer=REMOTE)
     paged_out_bytes = kv.meter.bytes_fabric + kv.meter.bytes_host
     paged_out_msgs = kv.meter.messages_fabric + kv.meter.messages_host
+    paged_out_time = kv.meter.sim_time - t0
     kv.restore(rid)
     paged_rt_bytes = kv.meter.bytes_fabric + kv.meter.bytes_host
     paged_rt_msgs = kv.meter.messages_fabric + kv.meter.messages_host
+    paged_rt_time = kv.meter.sim_time - t0
 
-    # --- seed blob path: slice every leaf, pack to one f32 blob ----------
-    store = ContextStore(page_elems=2048, local_pages=4, host_pages=2048,
-                         n_logical=4096)
-    store.add_remote_lease("donor0", 512 * 2048 * 4)
-    cache = api.init_decode_state(cfg, 1, max_seq)
-    ctx = extract_slot(cache, 0, ctx_len, max_seq)
-    parked = store.park(ctx, ctx_len, prefer=REMOTE)
-    blob_out_bytes = store.meter.bytes_fabric + store.meter.bytes_host
-    store.restore(parked)
-    blob_rt_bytes = store.meter.bytes_fabric + store.meter.bytes_host
+    # --- seed blob baseline (deleted path, priced analytically) ----------
+    # pack_context upcast EVERY leaf to float32: 4 bytes/element, plus the
+    # full-HBM coalescing gather, as one fabric message
+    blob_bytes = float(kv.footprint_elems(ctx_len)) * 4.0
+    blob_time = context_switch_time(TPU_V5E, blob_bytes, tier="fabric",
+                                    coalesced=True)
 
     return {
-        "native_kv_bytes": float(native),
+        "native_state_bytes": float(native),
         "paged/preempt_bytes": float(paged_out_bytes),
         "paged/preempt_messages": int(paged_out_msgs),
+        "paged/preempt_time_s": float(paged_out_time),
         "paged/roundtrip_bytes": float(paged_rt_bytes),
         "paged/roundtrip_messages": int(paged_rt_msgs),
-        "blob/preempt_bytes": float(blob_out_bytes),
-        "blob/roundtrip_bytes": float(blob_rt_bytes),
-        "blob/blowup_x": float(blob_out_bytes / native),
+        "paged/roundtrip_time_s": float(paged_rt_time),
         "paged/overhead_x": float(paged_out_bytes / native),
+        "paged/planes": len(kv.planes),
+        "blob/preempt_bytes": blob_bytes,
+        "blob/preempt_time_s": float(blob_time),
+        "blob/blowup_x": float(blob_bytes / native),
+        "flip_vs_blob_speedup_x": float(blob_time / max(paged_out_time, 1e-12)),
     }
 
 
-def run():
-    m = measure()
+def measure_all(ctx_len: int = 52) -> Dict[str, Dict[str, float]]:
+    return {fam: measure(arch=arch, ctx_len=ctx_len)
+            for fam, arch in FAMILIES.items()}
+
+
+def run(results: Dict[str, Dict[str, float]] = None):
     rows = []
-    for k, v in m.items():
-        note = {"blob/blowup_x": "seed path: f32 repack ~2x native bf16 KV",
+    for fam, m in (results or measure_all()).items():
+        note = {"blob/blowup_x": "seed path: f32 repack vs native payload",
                 "paged/overhead_x": "<=1.0: native payload only, tail at fill",
-                "paged/preempt_messages": "1 coalesced msg per (tier,donor)"}
-        rows.append((f"ctxswitch/{k}", v, note.get(k, "")))
+                "paged/preempt_messages": "1 coalesced msg per (plane,tier,donor)"}
+        for k, v in m.items():
+            rows.append((f"ctxswitch/{fam}/{k}", v, note.get(k, "")))
     return rows
 
 
 def main():
+    results = measure_all()
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_state_paging.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
     print("name,value,derived")
-    for name, val, derived in run():
+    for name, val, derived in run(results):
         print(f"{name},{val:.6g},{derived}")
+    print(f"wrote {os.path.abspath(out)}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ from repro.configs import get_config, smoke_config
 from repro.core.aqua_tensor import REMOTE
 from repro.models import api
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import ContextStore
 from repro.training.data import DataConfig
 from repro.training.optimizer import AdamWConfig, cosine_schedule
 from repro.training.train_loop import TrainConfig, train
@@ -26,19 +25,18 @@ def main():
     print(f"train: loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
     assert out["losses"][-1] < out["losses"][0]
 
-    # 2. serve it: CFS time-slices + AQUA-paged context switching
-    store = ContextStore(page_elems=2048, local_pages=8, host_pages=1024)
-    store.add_remote_lease("donor-gpu", 256 * 2048 * 4)   # a neighbor's HBM
+    # 2. serve it: CFS time-slices + AQUA page-table tier flips
     eng = ServingEngine(cfg, out["params"], max_running=2, max_seq=96,
-                        scheduler="cfs", slice_tokens=3, store=store,
+                        scheduler="cfs", slice_tokens=3,
                         offload_tier=REMOTE)
+    eng.pager.add_remote_lease("donor-gpu", 1 << 22)      # a neighbor's HBM
     rng = np.random.default_rng(1)
     for i in range(6):
         eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, 8))), 6)
     m = eng.run(500)
     print(f"serve: {len(eng.finished)} requests, "
           f"{m.preemptions} preemptions paged over the fabric, "
-          f"{store.stats()['meter']['bytes_fabric']/1e6:.2f} MB moved")
+          f"{eng.pager.stats()['meter']['bytes_fabric']/1e6:.2f} MB moved")
     print("quickstart OK")
 
 

@@ -43,7 +43,7 @@ def main():
                         offload_tier=REMOTE, coordinator=coord,
                         name="llm-qwen", want_remote_bytes=1e9,
                         respond_every=2)
-    print("runtime:", eng.runtime)
+    print("runtime: unified paged state; planes:", list(eng.kv.planes))
     rng = np.random.default_rng(2)
     for i in range(6):
         eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, 10))), 8)

@@ -93,6 +93,9 @@ class ModelCost:
     n_params: float            # active parameters per token
     kv_bytes_per_token: float  # whole-stack KV bytes per cached token
     dtype_bytes: int = 2
+    state_bytes: float = 0.0   # fixed recurrent state bytes per request
+    #                            (RWKV wkv/shift, Mamba ssm/conv) — moved on
+    #                            every context switch regardless of ctx_len
 
     @staticmethod
     def from_config(cfg) -> "ModelCost":
@@ -105,6 +108,20 @@ class ModelCost:
         else:
             n_attn = sum(1 for i in range(cfg.n_layers) if cfg.is_attention_layer(i))
             kvtok = 2 * cfg.n_kv_heads * hd * n_attn * 2
+        # fixed recurrent state (the state page planes): f32 ssm/wkv + native
+        # conv/shift leaves, per layer of the matching kind
+        state = 0.0
+        if cfg.family == "ssm" and cfg.ssm is not None:
+            rhd = cfg.ssm.rwkv_head_dim
+            H = cfg.d_model // rhd
+            state = cfg.n_layers * (H * rhd * rhd * 4 + 2 * cfg.d_model * 2)
+        elif cfg.family == "hybrid" and cfg.ssm is not None:
+            s = cfg.ssm
+            di = s.mamba_expand * cfg.d_model
+            n_mamba = sum(1 for i in range(cfg.n_layers)
+                          if not cfg.is_attention_layer(i))
+            state = n_mamba * (di * s.mamba_d_state * 4
+                               + (s.mamba_d_conv - 1) * di * 2)
         n_active = cfg.param_count()
         if cfg.moe is not None:
             m = cfg.moe
@@ -113,7 +130,7 @@ class ModelCost:
             n_moe_layers = cfg.n_layers // m.moe_every
             inactive = (m.n_experts - m.top_k) * glu * cfg.d_model * fe * n_moe_layers
             n_active -= inactive
-        return ModelCost(float(n_active), float(kvtok))
+        return ModelCost(float(n_active), float(kvtok), state_bytes=float(state))
 
     def prefill_time(self, hw: HardwareProfile, n_tokens: int) -> float:
         return 2.0 * self.n_params * n_tokens / (hw.flops_peak * hw.mfu)
@@ -128,6 +145,12 @@ class ModelCost:
 
     def kv_bytes(self, n_tokens: float) -> float:
         return self.kv_bytes_per_token * n_tokens
+
+    def context_bytes(self, n_tokens: float) -> float:
+        """Whole dynamic context of a request: token-paged KV/latents plus
+        the fixed recurrent state pages — what one page-table tier flip
+        moves on the unified paged runtime, for ANY family."""
+        return self.kv_bytes(n_tokens) + self.state_bytes
 
 
 def context_switch_time(hw: HardwareProfile, kv_bytes: float, *,

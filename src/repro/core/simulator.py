@@ -104,7 +104,9 @@ class ServingSimulator:
         timeline = []
 
         def kv_bytes(r: Request) -> float:
-            return self.model.kv_bytes(r.prompt_len + r.generated)
+            # whole dynamic context: token-paged KV/latents + the fixed
+            # recurrent state planes (nonzero for SSM/hybrid families)
+            return self.model.context_bytes(r.prompt_len + r.generated)
 
         def used_bytes() -> float:
             return sum(kv_bytes(r) for r in running if r.resident)
@@ -235,9 +237,10 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------
     def _switch_time(self, r: Request, direction: str) -> float:
-        # resident KV only: a mid-prefill request moves just the chunked
+        # resident context only: a mid-prefill request moves just the chunked
         # prefix it has written so far (prefill_pos == prompt_len once done)
-        kv = self.model.kv_bytes(
+        # plus its fixed state pages (SSM/hybrid recurrent leaves)
+        kv = self.model.context_bytes(
             (r.prefill_pos if not r.prefilled else r.prompt_len) + r.generated)
         if self.paging == "paged" and self.coalesced:
             # page-native runtime: tier flip of the page payload, one message

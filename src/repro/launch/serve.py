@@ -38,8 +38,8 @@ def main():
                         offload_tier=REMOTE if args.offload == "fabric" else HOST)
     # donor lease for the fabric tier (page pool or blob store, runtime-agnostic)
     eng.pager.add_remote_lease("donor0", 512 * 2048 * 4)
-    print(f"runtime: {eng.runtime} (page-native KV)" if eng.runtime == "paged"
-          else f"runtime: {eng.runtime} (blob shim)")
+    print(f"runtime: unified paged state "
+          f"(planes: {', '.join(eng.kv.planes)})")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, 8))),

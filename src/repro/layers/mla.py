@@ -10,7 +10,7 @@ insight (Fig. 3a) matters most here (see DESIGN.md §5).
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +97,134 @@ def fill_mla_cache(cache: MLACache, c_kv, k_rope) -> MLACache:
     c = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv.astype(cache.c_kv.dtype), 0, 1)
     r = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope.astype(cache.k_rope.dtype), 0, 1)
     return MLACache(c, r)
+
+
+# ---------------------------------------------------------------------------
+# Paged latent cache (unified paged state runtime)
+#
+# The per-token MLA state is the rank-`kv_lora` latent plus the shared roped
+# key — 576 native-dtype elements/token on V2. Both live fused in ONE token
+# page plane: payload (page_tokens, kv_lora + rope_dim), mirroring the
+# attention KV plane (`attention.write_chunk_pages` / `attention_decode_paged`)
+# so preemption is the same page-table tier flip.
+# ---------------------------------------------------------------------------
+def latent_dim(cfg: ModelConfig) -> int:
+    return cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+
+
+def write_chunk_latent_pages(lat_pool, lat, block_table, offset, *,
+                             page_tokens: int):
+    """Chunked prefill writes latent pages in place: ``lat`` (1,Tc,C) lands at
+    token row ``offset`` of the chunk's page WINDOW, gathered, row-updated and
+    scattered back so rows written by earlier chunks survive a mid-page chunk
+    boundary (the latent twin of ``attention.write_chunk_pages``).
+
+    lat_pool: (P, page, C); block_table: (W,) int32 LOCAL slots of the window;
+    offset: () int32, ``q_start % page_tokens``.
+    """
+    _, Tc, C = lat.shape
+    W = block_table.shape[0]
+    flat = lat_pool[block_table].reshape(W * page_tokens, C)
+    flat = jax.lax.dynamic_update_slice_in_dim(
+        flat, lat[0].astype(flat.dtype), offset, axis=0)
+    return lat_pool.at[block_table].set(flat.reshape(W, page_tokens, C))
+
+
+def _gather_latents(cfg: ModelConfig, lat_pool, block_table):
+    """(..., pps) slots -> (B, pps*page, kv_lora) + (B, pps*page, rope_dim)."""
+    m = cfg.mla
+    pages = lat_pool[block_table]                    # (..., pps, page, C)
+    allc = pages.reshape(pages.shape[:-3] + (-1, pages.shape[-1]))
+    if allc.ndim == 2:
+        allc = allc[None]
+    return allc[..., : m.kv_lora_rank], allc[..., m.kv_lora_rank:]
+
+
+def mla_prefill_chunk(params, cfg: ModelConfig, x, lat_pool, block_table,
+                      q_start, *, read_pps: Optional[int] = None):
+    """Chunked prefill MLA for ONE request (the paged twin of
+    ``attention.attention_prefill_chunk``).
+
+    x: (1,Tc,d) — one normed chunk at absolute positions ``q_start + [0,Tc)``;
+    lat_pool: (P,page,C); block_table: (pps_pad,) int32 physical slots of the
+    request's latent pages from position 0, dummy-padded. The chunk's latents
+    are written into their page window first, then the chunk attends
+    (non-absorbed, causal) to every latent written so far; ``read_pps`` bounds
+    the sweep to pages a request can actually own, exactly as for KV pages.
+    Any chunk split yields bit-identical outputs: every split reads the same
+    pool-resident latents over the same ``read_pps``-page extent.
+    """
+    m = cfg.mla
+    B, Tc, _ = x.shape
+    assert B == 1, "chunked prefill is per-request"
+    H = cfg.n_heads
+    page = lat_pool.shape[1]
+    q_start = jnp.asarray(q_start, jnp.int32).reshape(())
+    positions = q_start + jnp.arange(Tc, dtype=jnp.int32)[None, :]
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    lat = jnp.concatenate([c_kv, k_rope], axis=-1)
+
+    pps_win = Tc // page + (1 if Tc % page else 0) + 1
+    win = jax.lax.dynamic_slice(block_table, (q_start // page,), (pps_win,))
+    lat_pool = write_chunk_latent_pages(lat_pool, lat, win, q_start % page,
+                                        page_tokens=page)
+
+    c_all, r_all = _gather_latents(cfg, lat_pool, block_table[:read_pps])
+    S = c_all.shape[1]
+    k_nope = linear(params["wuk"], c_all).reshape(B, S, H, m.qk_nope_head_dim)
+    v = linear(params["wuv"], c_all).reshape(B, S, H, m.v_head_dim)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_all[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    mask = (jnp.arange(S)[None, :] <= positions[0][:, None])[None, None]
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v)
+    out = linear(params["wo"], ctx.reshape(B, Tc, -1))
+    return out, lat_pool
+
+
+def mla_decode_paged(params, cfg: ModelConfig, x, lat_pool, block_table, pos):
+    """Absorbed single-token decode reading/writing the paged latent pool.
+
+    x: (B,1,d); lat_pool: (P,page,C); block_table: (B,pps) int32 physical
+    LOCAL slots; pos: (B,). The new token's latent is appended into its tail
+    page row in place, then absorbed attention runs over the gathered pages
+    (masked past ``pos``), mirroring ``attention.attention_decode_paged``.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    page = lat_pool.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    positions = pos[:, None]                              # (B,1)
+    c_new, r_new = _latents(params, cfg, x, positions)
+    lat_new = jnp.concatenate([c_new, r_new], axis=-1)[:, 0]
+    slot = jnp.take_along_axis(block_table, (pos // page)[:, None], axis=1)[:, 0]
+    lat_pool = lat_pool.at[slot, pos % page].set(lat_new.astype(lat_pool.dtype))
+
+    c_kv, k_rope = _gather_latents(cfg, lat_pool, block_table)   # (B,S,*)
+    S = c_kv.shape[1]
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    wuk = params["wuk"]["w"].astype(x.dtype).reshape(m.kv_lora_rank, H,
+                                                     m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bthd,chd->bthc", q_nope, wuk)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bthc,bsc->bhts", q_eff, c_kv)
+              + jnp.einsum("bthd,bsd->bhts", q_rope, k_rope)) * scale
+    mask = (jnp.arange(S)[None, :] <= positions[:, :1])[:, None, None, :]
+    scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhts,bsc->bthc", probs, c_kv)
+    wuv = params["wuv"]["w"].astype(x.dtype).reshape(m.kv_lora_rank, H,
+                                                     m.v_head_dim)
+    ctx = jnp.einsum("bthc,chd->bthd", ctx_lat, wuv)
+    out = linear(params["wo"], ctx.reshape(B, 1, -1))
+    return out, lat_pool
 
 
 def mla_decode(params, cfg: ModelConfig, x, cache: MLACache, pos

@@ -156,8 +156,24 @@ def _tm_inputs(p, x, xx):
     return [x + xx * interp[:, :, i] for i in range(5)]
 
 
-def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *, use_kernel=False):
-    """x: (B,T,d). shift_prev: (B,d) hidden state of last token from prev chunk."""
+def _last_real_row(x, n_real):
+    """Row ``n_real - 1`` of (B,T,d) — the shift state a bucket-padded chunk
+    must carry (``x[:, -1]`` when n_real is None / the chunk is unpadded)."""
+    if n_real is None:
+        return x[:, -1]
+    return jax.lax.dynamic_slice_in_dim(x, n_real - 1, 1, axis=1)[:, 0]
+
+
+def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *,
+                  use_kernel=False, n_real=None):
+    """x: (B,T,d). shift_prev: (B,d) hidden state of last token from prev chunk.
+
+    ``n_real`` (traced scalar) marks the last real row of a bucket-padded
+    chunk: padded rows get ``w = 0`` (decay ``exp(0) = 1``) and ``k = 0`` (no
+    kv outer-product update), so the carried wkv state after the chunk is
+    bit-exactly the state after the last real token; the returned shift state
+    is that token's row rather than the padding tail.
+    """
     B, T, d = x.shape
     hd = cfg.ssm.rwkv_head_dim
     H = d // hd
@@ -173,6 +189,10 @@ def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *, use_kernel=F
     v = linear(p["wv"], xv).reshape(B, T, H, hd)
     g = jax.nn.silu(linear(p["wg"], xg))
     w = logw.reshape(B, T, H, hd)
+    if n_real is not None:
+        m = (jnp.arange(T) < n_real)[None, :, None, None]
+        k = k * m
+        w = w * m
 
     if use_kernel:
         from repro.kernels.rwkv6_wkv import ops as wkv_ops
@@ -186,28 +206,29 @@ def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *, use_kernel=F
         y, wkv_state = wkv6_ref(r, k, v, w, p["u"].astype(jnp.float32), wkv_state)
     y = _head_norm(p["ln_x"], y.reshape(B, T, d), H, hd)
     out = linear(p["wo"], y * g)
-    return out, x[:, -1], wkv_state
+    return out, _last_real_row(x, n_real), wkv_state
 
 
-def rwkv_channel_mix(p, x, shift_prev):
+def rwkv_channel_mix(p, x, shift_prev, n_real=None):
     prev = jnp.concatenate([shift_prev[:, None], x[:, :-1]], axis=1)
     xx = prev - x
     xk = x + xx * p["mu_k"].astype(x.dtype)
     xr = x + xx * p["mu_r"].astype(x.dtype)
     k = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
     out = jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], k)
-    return out, x[:, -1]
+    return out, _last_real_row(x, n_real)
 
 
 def rwkv_block(params, cfg: ModelConfig, x, state: RWKVState, norms,
-               *, use_kernel=False) -> Tuple[jnp.ndarray, RWKVState]:
+               *, use_kernel=False, n_real=None) -> Tuple[jnp.ndarray, RWKVState]:
     from repro.layers.core import rms_norm
     h, tm_shift, wkv = rwkv_time_mix(
         params["tm"], cfg, rms_norm(norms["n1"], x, cfg.rmsnorm_eps),
-        state.tm_shift, state.wkv, use_kernel=use_kernel)
+        state.tm_shift, state.wkv, use_kernel=use_kernel, n_real=n_real)
     x = x + h
     h, cm_shift = rwkv_channel_mix(
-        params["cm"], rms_norm(norms["n2"], x, cfg.rmsnorm_eps), state.cm_shift)
+        params["cm"], rms_norm(norms["n2"], x, cfg.rmsnorm_eps), state.cm_shift,
+        n_real=n_real)
     x = x + h
     return x, RWKVState(wkv, tm_shift.astype(state.tm_shift.dtype),
                         cm_shift.astype(state.cm_shift.dtype))

@@ -52,24 +52,30 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, shard_axes=None):
                                          shard_axes=shard_axes)
 
 
-# --- paged-KV serving runtime (decode KV on AquaTensor pages) --------------
-def supports_paged_kv(cfg: ModelConfig) -> bool:
-    return cfg.family != ENCDEC and lm.supports_paged_kv(cfg)
+# --- unified paged serving runtime (ALL dynamic context on pages) ----------
+def supports_paged(cfg: ModelConfig) -> bool:
+    return cfg.family != ENCDEC and lm.supports_paged(cfg)
 
 
-def prefill_chunk_paged(params, cfg: ModelConfig, tokens, kv_pool,
+def paged_layout(cfg: ModelConfig) -> dict:
+    return lm.paged_layout(cfg)
+
+
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pools,
                         block_tables, q_start, last_index, *,
-                        read_pps=None, impl: str = "pallas"):
+                        prefix_embeds=None, read_pps=None,
+                        impl: str = "pallas"):
     """One bucket-padded prompt chunk -> (logits (1,V) of ``last_index``,
-    kv_pool). Jit'd; trace count is bounded by the shape-bucket ladder."""
-    return lm.prefill_chunk_paged_jit(params, cfg, tokens, kv_pool,
+    pools). Jit'd; trace count is bounded by the shape-bucket ladder."""
+    return lm.prefill_chunk_paged_jit(params, cfg, tokens, pools,
                                       block_tables, q_start, last_index,
+                                      prefix_embeds=prefix_embeds,
                                       read_pps=read_pps, impl=impl)
 
 
-def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
+def decode_step_paged(params, cfg: ModelConfig, pools, block_tables,
                       tokens, pos, *, impl: str = "pallas"):
-    return lm.decode_step_paged_jit(params, cfg, kv_pool, block_tables,
+    return lm.decode_step_paged_jit(params, cfg, pools, block_tables,
                                     tokens, pos, impl=impl)
 
 

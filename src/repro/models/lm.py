@@ -147,17 +147,73 @@ def decode_state_specs(cfg: ModelConfig, batch: int, seq: int, dtype=None):
         functools.partial(init_decode_state, cfg, batch, seq, dtype))
 
 
-def supports_paged_kv(cfg: ModelConfig) -> bool:
-    """True when decode KV can live entirely on AquaTensor pages: every
-    sub-layer is full (unwindowed) GQA/MQA attention with no logit softcap.
-    SSM/Mamba/MLA state and ring-buffer caches stay on the dense path."""
-    if cfg.family not in (DENSE, MOE, VLM):
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when the request's ENTIRE dynamic context can live on AquaTensor
+    pages — i.e. every sub-layer's state has a page plane in
+    :func:`paged_layout`: full (unwindowed, uncapped) GQA/MQA attention KV,
+    Mamba ssm/conv tails, RWKV6 wkv + token-shift state, or the MLA latent
+    cache. Ring-buffer windowed layers and encoder-decoder stacks are the
+    only remaining exceptions (ROADMAP follow-up)."""
+    if cfg.family not in (DENSE, MOE, VLM, SSM, HYBRID):
         return False
-    if cfg.mla is not None or cfg.attn_logit_softcap > 0:
+    if cfg.attn_logit_softcap > 0:
         return False
     gs = group_size(cfg)
-    return all(mixer_kind(cfg, i) == "attn" and layer_window(cfg, i) == 0
-               for i in range(gs))
+    return all(mixer_kind(cfg, i) in ("attn", "rwkv", "mamba", "mla")
+               and layer_window(cfg, i) == 0 for i in range(gs))
+
+
+def paged_layout(cfg: ModelConfig) -> dict:
+    """Map every dynamic-context leaf of the family onto a page PLANE.
+
+    A plane is one AquaTensor pool; every sub-layer position (within the
+    layer group) contributes its state leaves to the planes listed here, in
+    group order. Two plane kinds:
+
+      * ``tokens`` — grows with context, ``ceil(ctx/page_tokens)`` pages per
+        layer. ``kv``: payload ``(2, n_kv, page, hd)`` (attention K/V);
+        ``mla``: payload ``(page, kv_lora + rope_dim)`` (fused latent+rope).
+      * ``state``  — fixed-size recurrent state, ONE page per layer whose
+        payload is exactly the leaf. ``ssm``: ``(di, ds)`` f32; ``conv``:
+        ``(d_conv-1, di)`` native; ``wkv``: ``(H, hd, hd)`` f32; ``shift``:
+        ``(2, d_model)`` native (rows: time-mix / channel-mix shifts).
+
+    Returns ``{name: {"kind", "positions", "dtype", ...}}`` where token
+    planes carry ``dims`` + ``token_bytes`` and state planes carry ``shape``.
+    """
+    assert supports_paged(cfg), f"{cfg.name}: not paged-servable"
+    from repro.layers import mamba as _mam
+    native = jnp.dtype(cfg.compute_dtype)
+    planes: dict = {}
+
+    def add(name, i, **kw):
+        planes.setdefault(name, dict(positions=[], **kw))["positions"].append(i)
+
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    for i in range(group_size(cfg)):
+        kind = mixer_kind(cfg, i)
+        if kind == "attn":
+            add("kv", i, kind="tokens", dtype=native, dims=(K, hd),
+                token_bytes=2 * K * hd * native.itemsize)
+        elif kind == "mla":
+            C = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            add("mla", i, kind="tokens", dtype=native, dims=(C,),
+                token_bytes=C * native.itemsize)
+        elif kind == "mamba":
+            di, ds, dc, _ = _mam._dims(cfg)
+            add("ssm", i, kind="state", dtype=jnp.dtype(jnp.float32),
+                shape=(di, ds))
+            add("conv", i, kind="state", dtype=native, shape=(dc - 1, di))
+        elif kind == "rwkv":
+            rhd = cfg.ssm.rwkv_head_dim
+            H = cfg.d_model // rhd
+            add("wkv", i, kind="state", dtype=jnp.dtype(jnp.float32),
+                shape=(H, rhd, rhd))
+            add("shift", i, kind="state", dtype=native, shape=(2, cfg.d_model))
+        else:  # pragma: no cover — guarded by supports_paged
+            raise ValueError(f"{cfg.name}: sub-layer {i} ({kind}) has no "
+                             "page plane")
+    return planes
 
 
 # ---------------------------------------------------------------------------
@@ -349,136 +405,221 @@ def reset_trace_counts():
     TRACE_COUNTS.clear()
 
 
-def _group_prefill_chunk(gp, cfg: ModelConfig, x, kv_pool, bt_g, q_start, *,
-                         read_pps: Optional[int], impl: str):
-    """One chunk of one request (B=1): write the chunk's K/V pages in place,
-    attend to everything written so far via the query-block kernel."""
+def _plane_state_rwkv(pools, tables_g, j, b=None):
+    """Assemble an RWKVState from the state pools. ``b=None``: B=1 prefill
+    (scalar slots, add the batch axis); else batched decode (slots (B,))."""
+    ws, ss = tables_g["wkv"][j], tables_g["shift"][j]
+    if b is None:
+        return rwkv_mod.RWKVState(pools["wkv"][ws][None],
+                                  pools["shift"][ss][0][None],
+                                  pools["shift"][ss][1][None])
+    return rwkv_mod.RWKVState(pools["wkv"][ws],
+                              pools["shift"][ss][:, 0],
+                              pools["shift"][ss][:, 1])
+
+
+def _store_state_rwkv(pools, tables_g, j, nst, b=None):
+    ws, ss = tables_g["wkv"][j], tables_g["shift"][j]
+    shift = jnp.stack([nst.tm_shift, nst.cm_shift],
+                      axis=-2).astype(pools["shift"].dtype)
+    if b is None:
+        pools["wkv"] = pools["wkv"].at[ws].set(nst.wkv[0])
+        pools["shift"] = pools["shift"].at[ss].set(shift[0])
+    else:
+        pools["wkv"] = pools["wkv"].at[ws].set(nst.wkv)
+        pools["shift"] = pools["shift"].at[ss].set(shift)
+    return pools
+
+
+def _group_fwd_paged(gp, cfg: ModelConfig, x, pools, tables_g, *,
+                     q_start=None, n_real=None, pos=None,
+                     read_pps: Optional[int], impl: str):
+    """One layer group against the page pools — shared by chunked prefill
+    (B=1, ``q_start``/``n_real`` set) and batched decode (``pos`` set).
+
+    Sub-layer kind is static in the position within the group, so each
+    position statically dispatches to its plane(s); ``idx`` tracks each
+    plane's running sub-index, matching the runtime's table row order.
+    """
+    prefill = pos is None
+    b = None if prefill else x.shape[0]
+    idx: Counter = Counter()
     for i in range(group_size(cfg)):
         p = gp[f"sub{i}"]
+        kind = mixer_kind(cfg, i)
+        if kind == "rwkv":
+            j = idx["wkv"]
+            idx["wkv"] += 1
+            st = _plane_state_rwkv(pools, tables_g, j, b)
+            x, nst = rwkv_mod.rwkv_block(p["mix"], cfg, x, st,
+                                         {"n1": p["n1"], "n2": p["n2"]},
+                                         n_real=n_real)
+            pools = _store_state_rwkv(pools, tables_g, j, nst, b)
+            continue
         h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
-        h, kv_pool = attn.attention_prefill_chunk(p["mix"], cfg, h, kv_pool,
-                                                  bt_g[i], q_start,
-                                                  read_pps=read_pps,
-                                                  impl=impl)
+        if kind == "mamba":
+            j = idx["ssm"]
+            idx["ssm"] += 1
+            ss, cs = tables_g["ssm"][j], tables_g["conv"][j]
+            if prefill:
+                st = mamba_mod.MambaState(pools["ssm"][ss][None],
+                                          pools["conv"][cs][None])
+                h, nst = mamba_mod.mamba_forward(p["mix"], cfg, h, st,
+                                                 n_real=n_real)
+                pools["ssm"] = pools["ssm"].at[ss].set(nst.ssm[0])
+                pools["conv"] = pools["conv"].at[cs].set(
+                    nst.conv[0].astype(pools["conv"].dtype))
+            else:
+                st = mamba_mod.MambaState(pools["ssm"][ss], pools["conv"][cs])
+                h, nst = mamba_mod.mamba_decode(p["mix"], cfg, h, st)
+                pools["ssm"] = pools["ssm"].at[ss].set(nst.ssm)
+                pools["conv"] = pools["conv"].at[cs].set(
+                    nst.conv.astype(pools["conv"].dtype))
+        elif kind == "mla":
+            j = idx["mla"]
+            idx["mla"] += 1
+            if prefill:
+                h, pools["mla"] = mla_mod.mla_prefill_chunk(
+                    p["mix"], cfg, h, pools["mla"], tables_g["mla"][j],
+                    q_start, read_pps=read_pps)
+            else:
+                h, pools["mla"] = mla_mod.mla_decode_paged(
+                    p["mix"], cfg, h, pools["mla"], tables_g["mla"][j], pos)
+        else:
+            j = idx["kv"]
+            idx["kv"] += 1
+            if prefill:
+                h, pools["kv"] = attn.attention_prefill_chunk(
+                    p["mix"], cfg, h, pools["kv"], tables_g["kv"][j], q_start,
+                    read_pps=read_pps, impl=impl)
+            else:
+                h, pools["kv"] = attn.attention_decode_paged(
+                    p["mix"], cfg, h, pools["kv"], tables_g["kv"][j], pos,
+                    impl=impl)
         x = x + h
         x = _ffn_apply(p, cfg, x, i, dropless=True)
-    return x, kv_pool
+    return x, pools
 
 
-def prefill_chunk_paged(params, cfg: ModelConfig, tokens, kv_pool,
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, pools,
                         block_tables, q_start, last_index, *,
+                        prefix_embeds=None,
                         read_pps: Optional[int] = None,
                         impl: str = "pallas"):
-    """Prefill ONE CHUNK of one request, writing KV straight into the pool.
+    """Prefill ONE CHUNK of one request, writing its state straight into the
+    page pools — any family, one code path.
 
-    tokens: (1,Tc) — the chunk, bucket-padded (garbage rows past the real
-    length are masked causally and overwritten by later chunks/decode);
-    kv_pool: (P,2,K,page,hd); block_tables: (G,gs,pps_pad) int32 physical
-    slots of the request's pages from position 0, dummy-padded; q_start /
-    last_index: () int32 (traced) — the chunk's absolute start position and
-    the row whose logits the caller wants (the last REAL token; only the
-    final chunk's are consumed, but the unembed of one row is cheap and
-    keeps the compiled program shape-stable).
-    -> (logits (1,V) of that row, updated kv_pool)
+    tokens: (1,Tc) — the chunk, bucket-padded. Garbage rows past the real
+    length are masked causally for attention/MLA (and overwritten by later
+    chunks/decode); for recurrent planes ``n_real = last_index + 1`` zeroes
+    their state updates (identity transition), so the carried Mamba/RWKV
+    state is bit-exactly the state after the last real token.
+    pools: {plane: pool} LOCAL pools (see ``paged_layout``);
+    block_tables: {plane: (G, n_sub, ...)} — token planes ``(..., pps_pad)``
+    int32 physical slots from position 0, dummy-padded; state planes bare
+    physical slots. q_start / last_index: () int32 (traced) — the chunk's
+    absolute start position and the row whose logits the caller wants.
+    prefix_embeds: (1, P, d) VLM prefix rows — rows of the chunk at absolute
+    positions < P take these embeddings instead of the token embedding (the
+    engine routes the q_start == 0 chunks of a VLM prompt through here).
+    -> (logits (1,V) of ``last_index``, updated pools)
 
-    Whole-prompt prefill is the degenerate single-chunk call (q_start=0,
-    Tc >= prompt length); routing depends only on per-token state, so any
-    chunk split yields bit-identical logits. MoE FFNs therefore run
-    DROPLESS here (as the paged decode path always has): capacity-factor
-    dispatch would make a token's drop probability depend on its chunk's
-    batch occupancy, breaking split invariance.
+    Whole-prompt prefill is the degenerate single-chunk call; any chunk
+    split yields bit-identical logits (split-invariant page reduction for
+    attention/MLA, exact state handoff for Mamba/RWKV). MoE FFNs run
+    DROPLESS so a token's routing cannot depend on its chunk's occupancy.
     """
-    assert supports_paged_kv(cfg), f"{cfg.name}: paged KV unsupported"
+    assert supports_paged(cfg), f"{cfg.name}: not paged-servable"
     assert tokens.shape[0] == 1, "chunked prefill is per-request"
     TRACE_COUNTS["prefill_chunk"] += 1
-    x = embed(params["embed"], cfg, tokens)
     q_start = jnp.asarray(q_start, jnp.int32).reshape(())
+    last_index = jnp.asarray(last_index, jnp.int32).reshape(())
+    n_real = last_index + 1
+    x = embed(params["embed"], cfg, tokens)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        rows = q_start + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        pre = jnp.take(prefix_embeds[0], jnp.clip(rows, 0, P - 1), axis=0)
+        x = jnp.where((rows < P)[None, :, None], pre[None].astype(x.dtype), x)
 
     def scan_body(carry, xs):
-        x, pool = carry
-        gp, bt_g = xs
-        x, pool = _group_prefill_chunk(gp, cfg, x, pool, bt_g, q_start,
-                                       read_pps=read_pps, impl=impl)
-        return (x, pool), None
+        x, pools = carry
+        gp, tg = xs
+        x, pools = _group_fwd_paged(gp, cfg, x, dict(pools), tg,
+                                    q_start=q_start, n_real=n_real,
+                                    read_pps=read_pps, impl=impl)
+        return (x, pools), None
 
-    (x, kv_pool), _ = jax.lax.scan(scan_body, (x, kv_pool),
-                                   (params["blocks"], block_tables))
+    (x, pools), _ = jax.lax.scan(scan_body, (x, pools),
+                                 (params["blocks"], block_tables))
     x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
-    last = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(last_index, jnp.int32),
-                                        1, axis=1)
+    last = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
     logits = unembed(params["embed"], cfg, last)[:, 0]
-    return logits, kv_pool
+    return logits, pools
 
 
 @functools.lru_cache(maxsize=None)
 def _prefill_chunk_jit(cfg: ModelConfig, impl: str, read_pps: Optional[int]):
     """One compiled program per (config, impl, shape bucket)."""
-    return jax.jit(lambda params, tokens, pool, bt, q_start, last:
-                   prefill_chunk_paged(params, cfg, tokens, pool, bt,
-                                       q_start, last, read_pps=read_pps,
-                                       impl=impl))
+    return jax.jit(lambda params, tokens, pools, bt, q_start, last, prefix:
+                   prefill_chunk_paged(params, cfg, tokens, pools, bt,
+                                       q_start, last, prefix_embeds=prefix,
+                                       read_pps=read_pps, impl=impl))
 
 
-def prefill_chunk_paged_jit(params, cfg: ModelConfig, tokens, kv_pool,
+def prefill_chunk_paged_jit(params, cfg: ModelConfig, tokens, pools,
                             block_tables, q_start, last_index, *,
+                            prefix_embeds=None,
                             read_pps: Optional[int] = None,
                             impl: str = "pallas"):
     """Jit'd chunk prefill: callers pass bucket-padded shapes, so the trace
     count is bounded by the bucket ladder, not the prompt-length set."""
-    return _prefill_chunk_jit(cfg, impl, read_pps)(params, tokens, kv_pool,
+    return _prefill_chunk_jit(cfg, impl, read_pps)(params, tokens, pools,
                                                    block_tables, q_start,
-                                                   last_index)
+                                                   last_index, prefix_embeds)
 
 
-def _group_decode_paged(gp, cfg: ModelConfig, x, kv_pool, bt_g, pos, *,
-                        impl: str):
-    for i in range(group_size(cfg)):
-        p = gp[f"sub{i}"]
-        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
-        h, kv_pool = attn.attention_decode_paged(p["mix"], cfg, h, kv_pool,
-                                                 bt_g[i], pos, impl=impl)
-        x = x + h
-        x = _ffn_apply(p, cfg, x, i, dropless=True)
-    return x, kv_pool
-
-
-def decode_step_paged(params, cfg: ModelConfig, kv_pool, block_tables,
+def decode_step_paged(params, cfg: ModelConfig, pools, block_tables,
                       tokens, pos, *, impl: str = "pallas"):
-    """One token for every sequence against the paged KV pool.
+    """One token for every sequence against the page pools — any family.
 
-    tokens/pos: (B,); kv_pool: (P,2,K,page,hd); block_tables: (G,gs,B,pps)
-    int32 physical LOCAL slots. -> (logits (B,V), updated kv_pool).
+    tokens/pos: (B,); pools: {plane: pool}; block_tables: {plane:
+    (G, n_sub, B[, pps])} int32 physical LOCAL slots (token planes carry the
+    trailing pps axis; state planes are one slot per layer per lane; idle
+    lanes point at the plane's scratch page). -> (logits (B,V), pools).
     Decode attention goes through kernels/paged_attention (interpret on CPU)
-    when ``impl='pallas'``; ``impl='xla'`` uses the jnp oracle.
+    when ``impl='pallas'``; ``impl='xla'`` uses the jnp oracle. MLA and the
+    recurrent planes read/scatter the pools directly in jnp (shape-stable).
     """
-    assert supports_paged_kv(cfg), f"{cfg.name}: paged KV unsupported"
+    assert supports_paged(cfg), f"{cfg.name}: not paged-servable"
     TRACE_COUNTS["decode_step"] += 1
     x = embed(params["embed"], cfg, tokens[:, None])
 
     def scan_body(carry, xs):
-        x, pool = carry
-        gp, bt_g = xs
-        x, pool = _group_decode_paged(gp, cfg, x, pool, bt_g, pos, impl=impl)
-        return (x, pool), None
+        x, pools = carry
+        gp, tg = xs
+        x, pools = _group_fwd_paged(gp, cfg, x, dict(pools), tg, pos=pos,
+                                    read_pps=None, impl=impl)
+        return (x, pools), None
 
-    (x, kv_pool), _ = jax.lax.scan(scan_body, (x, kv_pool),
-                                   (params["blocks"], block_tables))
+    (x, pools), _ = jax.lax.scan(scan_body, (x, pools),
+                                 (params["blocks"], block_tables))
     x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
     logits = unembed(params["embed"], cfg, x)[:, 0]
-    return logits, kv_pool
+    return logits, pools
 
 
 @functools.lru_cache(maxsize=None)
 def _decode_step_jit(cfg: ModelConfig, impl: str):
-    return jax.jit(lambda params, pool, bt, tokens, pos: decode_step_paged(
-        params, cfg, pool, bt, tokens, pos, impl=impl))
+    return jax.jit(lambda params, pools, bt, tokens, pos: decode_step_paged(
+        params, cfg, pools, bt, tokens, pos, impl=impl))
 
 
-def decode_step_paged_jit(params, cfg: ModelConfig, kv_pool, block_tables,
+def decode_step_paged_jit(params, cfg: ModelConfig, pools, block_tables,
                           tokens, pos, *, impl: str = "pallas"):
     """Jit'd paged decode: batch lanes and block tables have fixed padded
     shapes, so the whole step compiles exactly once per (config, impl)."""
-    return _decode_step_jit(cfg, impl)(params, kv_pool, block_tables, tokens,
+    return _decode_step_jit(cfg, impl)(params, pools, block_tables, tokens,
                                        pos)
 
 

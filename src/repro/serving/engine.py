@@ -1,30 +1,35 @@
 """The serving engine: chunked continuous batching with pluggable schedulers
-(FCFS / CFS) on a page-native KV runtime.
+(FCFS / CFS) on the unified paged state runtime.
 
-By default decode KV lives on AquaTensor pages (``PagedKVRuntime``): each
-request owns per-layer block tables, decode attention reads the LOCAL page
-pool through the ``kernels/paged_attention`` block-table kernel (interpret
-mode on CPU), prefill writes pages directly, and a CFS preemption is a
-page-table tier flip — ``offload(pages)`` out, ``ensure_local(pages)`` back,
-one coalesced message per (tier, donor) group, zero repacking (paper §3+§5).
-Families whose decode state is not plain paged KV (RWKV/Mamba state, MLA
-latent caches, windowed ring buffers) fall back to the seed dense-slot
-runtime, which parks whole contexts as blobs via the ``ContextStore`` shim.
+EVERY family's per-request dynamic context lives on AquaTensor pages
+(``PagedStateRuntime``): attention K/V and MLA latents on token-paged
+planes, Mamba ssm/conv tails and RWKV6 wkv/shift state on fixed-size state
+planes. Decode and prefill read/write the LOCAL pools inside the jit'd
+whole-step programs (attention through the ``kernels/paged_attention``
+block-table kernels — interpret mode on CPU — MLA and recurrent planes via
+shape-stable jnp gathers), and a CFS preemption is a page-table tier flip
+for any family — ``offload(pages)`` out, ``ensure_local(pages)`` back, one
+coalesced message per (plane, tier, donor) group, zero repacking (paper
+§3+§5). There is no dense fallback runtime: the seed-era dense blob-store
+shim is deleted. Families with no page plane yet (windowed ring buffers,
+attention-logit softcap, encoder-decoder) are rejected at construction.
 
-Prefill is CHUNKED on the paged runtime: every step spends at most
-``step_tokens`` tokens, split between the decode lanes and prompt chunks of
-the run set's pending prefills (several requests' chunks may ride one step),
-so no step scales with the longest prompt. All paged entry points go through
-shape buckets — chunk lengths pad to a power-of-two ladder, block tables and
-decode lanes to fixed sizes — so the jit cache holds a constant number of
-traces regardless of the prompt-length mix. Page restores for the NEXT
-step's scheduled requests are prefetched during the current step and priced
-with the transfer hidden up to the step's compute time
-(``perfmodel.overlapped_transfer_time`` — the paper's offload/compute
-overlap).
+Prefill is CHUNKED: every step spends at most ``step_tokens`` tokens, split
+between the decode lanes and prompt chunks of the run set's pending
+prefills (several requests' chunks may ride one step), so no step scales
+with the longest prompt. Recurrent planes stay exact across chunk
+boundaries (masked identity transitions for the bucket padding). A VLM
+prompt's ``prefix_embeds`` occupy its first ``n_prefix`` positions and are
+injected into the chunks that cover them (the ``q_start == 0`` side of the
+prompt). All paged entry points go through shape buckets — chunk lengths
+pad to a power-of-two ladder, block tables and decode lanes to fixed sizes
+— so the jit cache holds a constant number of traces regardless of the
+prompt-length mix. Page restores for the NEXT step's scheduled requests are
+prefetched during the current step and priced with the transfer hidden up
+to the step's compute time (``perfmodel.overlapped_transfer_time``).
 
-The engine runs REAL model numerics (any decoder-only family in the zoo) on
-tiny configs in CI; its per-step wall-times are additionally priced by
+The engine runs REAL model numerics (any paged-servable family in the zoo)
+on tiny configs in CI; its per-step wall-times are additionally priced by
 core/perfmodel.py so end-to-end TTFT/RCT in *simulated seconds* are reported
 for the benchmark harness. The scheduler and paging logic are shared with the
 discrete-event simulator — one implementation, two clocks.
@@ -41,18 +46,16 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.aqua_tensor import HOST, REMOTE, TransferMeter
+from repro.core.aqua_tensor import REMOTE
 from repro.core.coordinator import Coordinator
 from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E,
                                   overlapped_transfer_time)
 from repro.models import api
-from repro.serving.kv_cache import (ContextStore, PagedKVRuntime,
-                                    extract_slot, insert_slot)
+from repro.serving.kv_cache import PagedStateRuntime
 from repro.serving.scheduler import (CFSScheduler, Decision, FCFSScheduler,
                                      ReqState, bucket_tokens, fairness_spread,
                                      split_step_budget)
@@ -84,15 +87,13 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_running: int = 4,
                  max_seq: int = 128, scheduler: str = "cfs",
                  slice_tokens: int = 4, offload_tier: int = REMOTE,
-                 runtime: str = "auto",
-                 kv: Optional[PagedKVRuntime] = None,
+                 kv: Optional[PagedStateRuntime] = None,
                  kv_page_tokens: int = 8,
                  kv_local_pages: Optional[int] = None,
                  kv_host_pages: int = 8192,
                  paged_impl: str = "pallas",
                  step_tokens: Optional[int] = None,
                  prefetch: bool = True,
-                 store: Optional[ContextStore] = None,
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
                  want_remote_bytes: float = 0.0, respond_every: int = 4):
@@ -107,50 +108,35 @@ class ServingEngine:
         self.offload_tier = offload_tier
         self.paged_impl = paged_impl
 
-        if runtime == "auto":
-            runtime = "paged" if api.supports_paged_kv(cfg) else "dense"
-        if runtime == "paged" and not api.supports_paged_kv(cfg):
-            raise ValueError(f"{cfg.name}: paged runtime unsupported")
-        self.runtime = runtime
+        if not api.supports_paged(cfg):
+            raise ValueError(
+                f"{cfg.name}: not paged-servable — windowed ring-buffer / "
+                "softcap / encoder-decoder layers have no page plane yet "
+                "(ROADMAP follow-up); the dense blob runtime is gone")
 
-        if step_tokens is not None:
-            if runtime != "paged":
-                raise ValueError("step_tokens (chunked prefill) requires the "
-                                 "paged runtime; the dense shim prefills "
-                                 "whole prompts")
-            if step_tokens < 8:
-                raise ValueError("step_tokens must be >= 8 (one chunk bucket)")
+        if step_tokens is not None and step_tokens < 8:
+            raise ValueError("step_tokens must be >= 8 (one chunk bucket)")
         self.step_tokens = step_tokens
-        self.prefetch = prefetch and runtime == "paged"
+        self.prefetch = prefetch
 
-        page_cost = None
-        page_budget = None
-        if runtime == "paged":
-            self.kv = kv or PagedKVRuntime(
-                cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
-                local_pages=kv_local_pages, host_pages=kv_host_pages,
-                max_running=max_running)
-            self.pager = self.kv
-            self.cache = None
-            # the scheduler plans in PAGES. CFS revisits the run set every
-            # slice, so it budgets one slice of growth; FCFS never preempts,
-            # so an admitted request must fit the LOCAL pool to COMPLETION.
-            page_cost = (self._page_cost_cfs if scheduler == "cfs"
-                         else self._page_cost_fcfs)
-            page_budget = self.kv.page_budget
-            # chunk block tables pad to the request's max pages PLUS the
-            # write window of the largest chunk bucket: ONE table shape for
-            # every (chunk, context-length) combination
-            hi = bucket_tokens(max_seq)
-            self._pps_pad = (self.kv.pps
-                             + math.ceil(hi / self.kv.page_tokens) + 1)
-        else:
-            self.kv = None
-            self.store = store or ContextStore(page_elems=4096,
-                                               local_pages=16,
-                                               host_pages=1024)
-            self.pager = self.store
-            self.cache = api.init_decode_state(cfg, max_running, max_seq)
+        self.kv = kv or PagedStateRuntime(
+            cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
+            local_pages=kv_local_pages, host_pages=kv_host_pages,
+            max_running=max_running)
+        self.pager = self.kv
+        # the scheduler plans in PAGES (a per-plane cost vector). CFS
+        # revisits the run set every slice, so it budgets one slice of
+        # growth; FCFS never preempts, so an admitted request must fit the
+        # LOCAL pools to COMPLETION.
+        page_cost = (self._page_cost_cfs if scheduler == "cfs"
+                     else self._page_cost_fcfs)
+        page_budget = self.kv.page_budget
+        # chunk block tables pad to the request's max pages PLUS the write
+        # window of the largest chunk bucket: ONE table shape for every
+        # (chunk, context-length) combination
+        hi = bucket_tokens(max_seq)
+        self._pps_pad = (self.kv.pps
+                         + math.ceil(hi / self.kv.page_tokens) + 1)
 
         self.coord = coordinator
         self.respond_every = respond_every
@@ -174,13 +160,14 @@ class ServingEngine:
         self.metrics = EngineMetrics()
         self._rid = itertools.count()
 
-    def _page_cost_cfs(self, r: ReqState) -> int:
-        """Pages the request needs LOCAL through the next slice boundary:
-        context now plus one slice of growth (CFS re-plans every slice)."""
+    def _page_cost_cfs(self, r: ReqState) -> np.ndarray:
+        """Per-plane pages the request needs LOCAL through the next slice
+        boundary: context now plus one slice of growth (CFS re-plans every
+        slice)."""
         return self.kv.pages_per_request(
             min(r.ctx_len + self.slice_tokens, self.max_seq))
 
-    def _page_cost_fcfs(self, r: ReqState) -> int:
+    def _page_cost_fcfs(self, r: ReqState) -> np.ndarray:
         """FCFS never preempts: an admitted request holds LOCAL pages until
         it completes, so budget its full remaining generation."""
         remaining = r.max_new_tokens - len(r.generated)
@@ -189,9 +176,23 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens: Sequence[int], max_new_tokens: int,
-               arrival: float = 0.0, lora_id: Optional[int] = None) -> ReqState:
+               arrival: float = 0.0, lora_id: Optional[int] = None,
+               prefix_embeds=None) -> ReqState:
+        """Queue a request. For a VLM config (``cfg.n_prefix_embeds > 0``)
+        ``prefix_embeds`` is the (n_prefix, d) / (1, n_prefix, d) patch-
+        embedding block occupying the prompt's first positions; omitted, it
+        defaults to zeros (the stub frontend's null image)."""
         r = ReqState(next(self._rid), arrival, list(map(int, prompt_tokens)),
                      max_new_tokens, lora_id=lora_id)
+        if self.cfg.n_prefix_embeds:
+            P, d = self.cfg.n_prefix_embeds, self.cfg.d_model
+            if prefix_embeds is None:
+                prefix_embeds = jnp.zeros((1, P, d), self.cfg.dtype())
+            prefix_embeds = jnp.asarray(prefix_embeds).reshape(1, P, d)
+            r.n_prefix = P
+            r.prefix_embeds = prefix_embeds
+        elif prefix_embeds is not None:
+            raise ValueError(f"{self.cfg.name} takes no prefix embeds")
         self.waiting.append(r)
         return r
 
@@ -220,7 +221,7 @@ class ServingEngine:
         pending = [r for r in decision.run if not r.prefilled]
         chunks = split_step_budget(
             self.step_tokens, len(lanes),
-            [len(r.prompt_tokens) - r.prefill_pos for r in pending])
+            [r.prompt_positions - r.prefill_pos for r in pending])
 
         compute_time, transfer_time = self._place(decision,
                                                   list(zip(pending, chunks)))
@@ -232,9 +233,7 @@ class ServingEngine:
         # one decode step for every resident request past its prefill
         live = [r for r in self.running if not r.done and r.prefilled]
         if live:
-            compute_time += (self._decode_paged(live)
-                             if self.runtime == "paged"
-                             else self._decode_dense(live))
+            compute_time += self._decode(live)
         step_time = compute_time + transfer_time
 
         # retire bookkeeping first: freed slots/pages raise the odds the
@@ -245,8 +244,8 @@ class ServingEngine:
                 r.finish_step = m.steps
                 self._free_slots.append(r.slot)
                 r.slot = None
-                if self.runtime == "paged":
-                    self.kv.release(r.rid)
+                r.prefix_embeds = None       # don't pin VLM embeds forever
+                self.kv.release(r.rid)
                 self.running.remove(r)
                 self.finished.append(r)
                 retired.append(r)
@@ -270,18 +269,16 @@ class ServingEngine:
             fairness_spread(self.waiting + self.running))
 
     # ------------------------------------------------------------------
-    # placement: shared by both runtimes (park / slot / restore / prefill);
-    # only the park, restore and prefill primitives differ
+    # placement: park preempted requests, slot + restore the scheduled set,
+    # run this step's prefill chunks
     # ------------------------------------------------------------------
     def _place(self, decision: Decision,
                chunk_plan: List) -> tuple:
-        """Execute a plan: park preempted requests, slot + restore the
-        scheduled set, run this step's prefill chunks. Returns
-        ``(prefill_compute_time, metered_transfer_time)``."""
+        """Execute a plan. Returns ``(prefill_compute_time,
+        metered_transfer_time)``."""
         m = self.metrics
-        paged = self.runtime == "paged"
         t_before = self.pager.meter.sim_time
-        if paged and self._prefetched:
+        if self._prefetched:
             # prefetch misprediction (a submit() between steps changed the
             # plan): re-park so LOCAL holds only the planned run set — the
             # page-budget invariant ensure_capacity relies on
@@ -294,17 +291,10 @@ class ServingEngine:
                     r.parked = True
             self._prefetched = []
         for r in decision.preempt:
-            if paged:
-                # only r.resident_tokens of KV exist in the pool: the newest
-                # generated token's K/V is appended at its next decode step
-                self.kv.park(r.rid, r.resident_tokens,
-                             prefer=self.offload_tier)
-                r.parked = True
-            else:
-                ctx = extract_slot(self.cache, r.slot, r.ctx_len,
-                                   self.max_seq)
-                r.parked = self.store.park(ctx, r.ctx_len,
-                                           prefer=self.offload_tier)
+            # only r.resident_tokens of context exist in the pools: the
+            # newest generated token's state lands at its next decode step
+            self.kv.park(r.rid, r.resident_tokens, prefer=self.offload_tier)
+            r.parked = True
             self._free_slots.append(r.slot)
             r.slot = None
             m.preemptions += 1
@@ -318,12 +308,7 @@ class ServingEngine:
                     f"{self.max_running}) — scheduler exceeded the slot cap")
             r.slot = self._free_slots.pop()
             if r.parked:
-                if paged:
-                    self.kv.restore(r.rid)   # ensure_local: coalesced page-in
-                else:
-                    ctx = self.store.restore(r.parked)
-                    self.cache = insert_slot(self.cache, ctx, r.slot,
-                                             r.ctx_len, self.max_seq)
+                self.kv.restore(r.rid)       # ensure_local: coalesced page-in
                 r.parked = None
                 m.restores += 1
         prefill_time = 0.0
@@ -331,12 +316,8 @@ class ServingEngine:
         for r, n in chunk_plan:
             if n <= 0 or r.slot is None:
                 continue
-            if paged:
-                prefill_time += self._prefill_chunk_paged(r, n)
-                ptoks += n
-            else:
-                ptoks += len(r.prompt_tokens)
-                prefill_time += self._prefill_into_slot(r)
+            prefill_time += self._prefill_chunk(r, n)
+            ptoks += n
             m.prefills += 1
         m.prefill_tokens_trace.append(ptoks)
         return prefill_time, self.pager.meter.sim_time - t_before
@@ -366,74 +347,50 @@ class ServingEngine:
         return visible
 
     # ------------------------------------------------------------------
-    # paged runtime primitives
+    # runtime primitives
     # ------------------------------------------------------------------
-    def _prefill_chunk_paged(self, r: ReqState, n_tokens: int) -> float:
-        """Run one prompt chunk: allocate its pages, write K/V in place,
-        produce the first token when the chunk completes the prompt."""
+    def _prefill_chunk(self, r: ReqState, n_tokens: int) -> float:
+        """Run one prompt chunk: allocate its pages, write every plane's
+        state in place, produce the first token when the chunk completes the
+        prompt. ``n_tokens`` counts prompt POSITIONS — a VLM request's first
+        chunks cover its prefix-embedding rows, whose token ids are dummies
+        and whose residual rows come from ``prefix_embeds`` instead."""
         start = r.prefill_pos
         self.kv.ensure_capacity(r.rid, start + n_tokens)
         Tb = bucket_tokens(n_tokens)         # shape bucket, not exact length
         toks = np.zeros((1, Tb), np.int32)
-        toks[0, :n_tokens] = r.prompt_tokens[start:start + n_tokens]
+        idx = np.arange(n_tokens) + start - r.n_prefix
+        text = idx >= 0
+        toks[0, :n_tokens][text] = np.asarray(r.prompt_tokens,
+                                              np.int32)[idx[text]]
         bt = self.kv.block_tables_prefill(r.rid, pad_to=self._pps_pad)
-        logits, self.kv.pool = api.prefill_chunk_paged(
-            self.params, self.cfg, jnp.asarray(toks), self.kv.pool, bt,
+        logits, self.kv.pools = api.prefill_chunk_paged(
+            self.params, self.cfg, jnp.asarray(toks), self.kv.pools, bt,
             jnp.int32(start), jnp.int32(n_tokens - 1),
+            prefix_embeds=r.prefix_embeds,
             read_pps=self.kv.pps, impl=self.paged_impl)
         r.prefill_pos = start + n_tokens
         if r.prefilled:
             r.generated.append(int(jnp.argmax(logits[0])))
         return self.cost.prefill_time(self.hw, n_tokens)
 
-    def _decode_paged(self, live: List[ReqState]) -> float:
+    def _decode(self, live: List[ReqState]) -> float:
         tokens = np.zeros((self.max_running,), np.int32)
         pos = np.zeros((self.max_running,), np.int32)
         lanes: List[Optional[int]] = [None] * self.max_running
         for r in live:
             # the new token's position may cross into a fresh page: grow the
-            # block table (allocation guarantees LOCAL; parked requests were
-            # already restored in _place_paged)
+            # block tables (allocation guarantees LOCAL; parked requests
+            # were already restored in _place)
             self.kv.ensure_capacity(r.rid, r.ctx_len)
             lanes[r.slot] = r.rid
             tokens[r.slot] = (r.generated[-1] if r.generated
                               else r.prompt_tokens[-1])
             pos[r.slot] = r.ctx_len - 1
         bts = self.kv.block_tables(lanes)
-        logits, self.kv.pool = api.decode_step_paged(
-            self.params, self.cfg, self.kv.pool, bts,
+        logits, self.kv.pools = api.decode_step_paged(
+            self.params, self.cfg, self.kv.pools, bts,
             jnp.asarray(tokens), jnp.asarray(pos), impl=self.paged_impl)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        ctx_mean = float(np.mean([r.ctx_len for r in live]))
-        for r in live:
-            r.generated.append(int(nxt[r.slot]))
-        return self.cost.decode_step_time(self.hw, len(live), ctx_mean,
-                                          self.weight_bytes)
-
-    # ------------------------------------------------------------------
-    # dense runtime (shim) primitives: whole-prompt prefill into a slot
-    # ------------------------------------------------------------------
-    def _prefill_into_slot(self, r: ReqState) -> float:
-        cache1 = api.init_decode_state(self.cfg, 1, self.max_seq)
-        toks = jnp.asarray(r.prompt_tokens, jnp.int32)[None]
-        logits, cache1 = api.prefill(self.params, self.cfg, toks, cache1)
-        self.cache = jax.tree.map(
-            lambda big, one: big.at[:, r.slot].set(one[:, 0].astype(big.dtype)),
-            self.cache, cache1)
-        r.prefill_pos = len(r.prompt_tokens)
-        r.generated.append(int(jnp.argmax(logits[0])))
-        return self.cost.prefill_time(self.hw, len(r.prompt_tokens))
-
-    def _decode_dense(self, live: List[ReqState]) -> float:
-        tokens = np.zeros((self.max_running,), np.int32)
-        pos = np.zeros((self.max_running,), np.int32)
-        for r in live:
-            tokens[r.slot] = (r.generated[-1] if r.generated
-                              else r.prompt_tokens[-1])
-            pos[r.slot] = r.ctx_len - 1
-        logits, self.cache = api.decode_step(
-            self.params, self.cfg, self.cache,
-            jnp.asarray(tokens), jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         ctx_mean = float(np.mean([r.ctx_len for r in live]))
         for r in live:
@@ -450,5 +407,3 @@ class ServingEngine:
         if self.coord is not None:
             self._respond()        # don't leave leases dangling after drain
         return self.metrics
-    # NOTE: pack_context/extract_slot/insert_slot are OFF the hot path for
-    # every paged-capable family; only the dense shim above still uses them.

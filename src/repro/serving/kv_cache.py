@@ -1,35 +1,41 @@
-"""Page-native decode KV: block tables over AquaTensor page pools.
+"""Unified paged state runtime: EVERY family's dynamic context on AquaTensor
+pages, behind per-request block tables.
 
-``PagedKVRuntime`` is the serving engine's KV manager (paper §3 + §5 made
-structural): per-layer K/V pages for every request live in ONE fused
-page-major AquaTensor pool — payload ``(2, n_kv, page, hd)`` in the model's
-native dtype — and each request owns a per-layer block table of logical page
-ids. Decode attention reads the LOCAL pool through the
-``kernels/paged_attention`` block-table kernel; prefill writes pages
-directly; a decode step appends the new token's K/V into the request's tail
-page via the page-append writer op.
+``PagedStateRuntime`` is the serving engine's state manager (paper §3 + §5
+made structural, for the paper's whole model zoo): each family's per-request
+dynamic context is decomposed by ``models/lm.py:paged_layout`` into page
+PLANES — one tiered AquaTensor pool per plane, native-dtype payloads:
 
-Preemption is therefore a *page-table tier flip*:
+    kv     (2, n_kv, page, hd)   attention K/V, ceil(ctx/page) pages/layer
+    mla    (page, kv_lora+rope)  fused MLA latent + roped key, token-paged
+    ssm    (d_inner, d_state)    Mamba SSM state (f32), one page/layer
+    conv   (d_conv-1, d_inner)   Mamba conv tail, one page/layer
+    wkv    (H, hd, hd)           RWKV6 wkv state (f32), one page/layer
+    shift  (2, d_model)          RWKV6 time/channel-mix shifts, one page/layer
 
-    park    = AquaTensor.offload(pages)      one coalesced message per
-    restore = AquaTensor.ensure_local(pages) (tier, donor) group
+A hybrid (Jamba) request owns kv pages for its attention sub-layers and
+ssm/conv pages for the Mamba ones; an RWKV6 request owns only fixed-size
+state pages (O(1) context). Decode/prefill read and write the LOCAL pools
+directly inside the jit'd whole-step programs (attention through the
+``kernels/paged_attention`` block-table kernels, MLA/recurrent planes via
+shape-stable jnp gathers/scatters), so preemption is a *page-table tier
+flip* for every family:
 
-— no gather of cache leaves, no float32 blob, no repacking. The partial tail
-page is metered at its valid fraction, so a parked request moves exactly its
-native-dtype KV footprint.
+    park    = offload(pages)      one coalesced message per
+    restore = ensure_local(pages) (plane, tier, donor) group
 
-``ContextStore`` (below) is the seed blob path, kept as the compatibility
-shim for families whose decode state is not plain paged KV (RWKV/Mamba
-state, MLA latent caches, ring-buffer windowed layers) and as the
-"what AQUA replaces" baseline in benchmarks/context_switch.py.
+— no gather of cache leaves, no float32 blob, no repacking, for ANY family.
+Partial token-plane tails are metered at their valid fraction, so a parked
+request moves exactly its native-dtype context footprint. The seed-era dense
+blob-store shim this replaces is deleted; there is exactly one way a
+request's state moves between tiers.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -37,280 +43,311 @@ from repro.configs.base import ModelConfig
 from repro.core.aqua_tensor import (AquaTensor, LOCAL, REMOTE, TransferMeter)
 
 
-class PagedKVRuntime:
-    """Block-table KV manager on a tiered AquaTensor page pool."""
+@dataclass
+class _Plane:
+    """One page plane: an AquaTensor pool + the per-request page bookkeeping."""
+    name: str
+    kind: str                        # "tokens" | "state"
+    aqua: AquaTensor
+    n_layers: int                    # plane layers across the whole stack
+    n_sub: int                       # plane sub-layers per group
+    token_bytes: int = 0             # per-layer bytes/token (token planes)
+    scratch_lp: int = 0
+    pages: Dict[int, List[List[int]]] = field(default_factory=dict)
+
+    @property
+    def scratch_slot(self) -> int:
+        return int(self.aqua.page_table[self.scratch_lp, 1])
+
+    def flat(self, rid: int) -> np.ndarray:
+        return np.asarray([lp for row in self.pages.get(rid, [])
+                           for lp in row], np.int64)
+
+
+class PagedStateRuntime:
+    """Family-agnostic block-table state manager on tiered AquaTensor pools."""
 
     def __init__(self, cfg: ModelConfig, *, max_seq: int,
                  page_tokens: int = 8, local_pages: Optional[int] = None,
                  host_pages: int = 8192, n_logical: int = 16384,
                  max_running: int = 4, meter: Optional[TransferMeter] = None):
         from repro.models import lm
-        if not lm.supports_paged_kv(cfg):
-            raise ValueError(f"{cfg.name}: not a pure paged-KV architecture "
-                             "(use the dense runtime)")
+        if not lm.supports_paged(cfg):
+            raise ValueError(f"{cfg.name}: not paged-servable (windowed "
+                             "ring-buffer / softcap / encdec layers have no "
+                             "page plane yet)")
         self.cfg = cfg
         self.G = lm.n_groups(cfg)
         self.gs = lm.group_size(cfg)
-        self.n_layers = self.G * self.gs
         self.page_tokens = page_tokens
         self.max_seq = max_seq
         self.pps = math.ceil(max_seq / page_tokens)
-        K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-        dtype = jnp.dtype(cfg.compute_dtype)
-        self.token_bytes = 2 * K * hd * dtype.itemsize          # per layer
-        if local_pages is None:
-            # fit `max_running` full-length requests plus the scratch page
-            local_pages = max_running * self.n_layers * self.pps + 1
-        self.aqua = AquaTensor(n_logical=n_logical,
-                               page_shape=(2, K, page_tokens, hd),
-                               local_slots=local_pages,
-                               host_slots=host_pages, dtype=dtype,
-                               meter=meter, name=f"{cfg.name}/kv")
-        # pinned LOCAL dummy page: idle batch lanes and block-table padding
-        # point here so masked DMAs (and idle-lane appends) stay in-bounds
-        self._scratch_lp = int(self.aqua.allocate(1, prefer=LOCAL)[0])
-        # rid -> (n_layers, pages) logical page ids, grown as ctx grows
-        self._pages: Dict[int, List[List[int]]] = {}
+        self.meter = meter or TransferMeter()
+        self.planes: Dict[str, _Plane] = {}
+        for name, spec in lm.paged_layout(cfg).items():
+            n_sub = len(spec["positions"])
+            n_layers = self.G * n_sub
+            if spec["kind"] == "tokens":
+                if name == "kv":
+                    K, hd = spec["dims"]
+                    page_shape: Tuple[int, ...] = (2, K, page_tokens, hd)
+                else:                                   # mla latent plane
+                    (C,) = spec["dims"]
+                    page_shape = (page_tokens, C)
+                per_req = n_layers * self.pps
+                # token-plane LOCAL budget is caller-tunable (the admission
+                # gate the schedulers plan against); +1 is the scratch page
+                slots = (local_pages if local_pages is not None
+                         else max_running * per_req + 1)
+            else:
+                page_shape = spec["shape"]
+                per_req = n_layers
+                slots = max_running * per_req + 1
+            aqua = AquaTensor(n_logical=n_logical, page_shape=page_shape,
+                              local_slots=slots, host_slots=host_pages,
+                              dtype=spec["dtype"], meter=self.meter,
+                              name=f"{cfg.name}/{name}")
+            plane = _Plane(name, spec["kind"], aqua, n_layers, n_sub,
+                           token_bytes=spec.get("token_bytes", 0))
+            # pinned LOCAL dummy page: idle batch lanes and block-table
+            # padding point here so masked DMAs / idle-lane state reads and
+            # writes stay in-bounds
+            plane.scratch_lp = int(aqua.allocate(1, prefer=LOCAL)[0])
+            self.planes[name] = plane
 
     # -- geometry ---------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
-        """Pages per layer covering n_tokens."""
+        """Token-plane pages per layer covering n_tokens."""
         return max(1, math.ceil(n_tokens / self.page_tokens))
 
-    def pages_per_request(self, n_tokens: int) -> int:
-        return self.n_layers * self.pages_for(n_tokens)
+    def _plane_pages(self, plane: _Plane, n_tokens: int) -> int:
+        if plane.kind == "tokens":
+            return plane.n_layers * self.pages_for(n_tokens)
+        return plane.n_layers
 
-    def kv_footprint_bytes(self, n_tokens: int) -> float:
-        """Native-dtype whole-stack KV bytes of a request (no page slack)."""
-        return float(self.n_layers * n_tokens * self.token_bytes)
+    def pages_per_request(self, n_tokens: int) -> np.ndarray:
+        """Per-plane page cost of a request at n_tokens of context — the
+        vector the schedulers budget against (one entry per plane)."""
+        return np.asarray([self._plane_pages(p, n_tokens)
+                           for p in self.planes.values()], np.int64)
+
+    def footprint_bytes(self, n_tokens: int) -> float:
+        """Native-dtype whole-context bytes of a request (no page slack):
+        token planes at n_tokens, recurrent state planes at their fixed
+        size. This is exactly what one park/restore moves."""
+        total = 0.0
+        for p in self.planes.values():
+            if p.kind == "tokens":
+                total += p.n_layers * n_tokens * p.token_bytes
+            else:
+                total += p.n_layers * p.aqua.page_bytes
+        return float(total)
+
+    def footprint_elems(self, n_tokens: int) -> int:
+        """Element count of the same footprint (the seed blob path moved
+        4 bytes per element, whatever the native dtype)."""
+        total = 0
+        for p in self.planes.values():
+            per_page = int(np.prod(p.aqua.page_shape))
+            if p.kind == "tokens":
+                total += p.n_layers * n_tokens * (p.token_bytes
+                                                  // p.aqua.dtype.itemsize)
+            else:
+                total += p.n_layers * per_page
+        return total
 
     @property
-    def page_budget(self) -> int:
-        """LOCAL pages available to requests (scratch page excluded)."""
-        return self.aqua.local_pool.shape[0] - 1
+    def page_budget(self) -> np.ndarray:
+        """Per-plane LOCAL pages available to requests (scratch excluded)."""
+        return np.asarray([p.aqua.local_pool.shape[0] - 1
+                           for p in self.planes.values()], np.int64)
 
     @property
-    def scratch_slot(self) -> int:
-        return int(self.aqua.page_table[self._scratch_lp, 1])
+    def aqua(self) -> AquaTensor:
+        """The sole plane's tensor — attention-only (or ssm-state-only)
+        convenience for tests/benchmarks; multi-plane runtimes must address
+        ``planes[name].aqua`` explicitly."""
+        if len(self.planes) != 1:
+            raise AttributeError("runtime has multiple planes; use "
+                                 f".planes[name].aqua ({list(self.planes)})")
+        return next(iter(self.planes.values())).aqua
 
+    # -- pool plumbing (the jit operands) ---------------------------------
     @property
-    def pool(self) -> jnp.ndarray:
-        return self.aqua.local_pool
+    def pools(self) -> Dict[str, jnp.ndarray]:
+        return {n: p.aqua.local_pool for n, p in self.planes.items()}
 
-    @pool.setter
-    def pool(self, value: jnp.ndarray):
-        self.aqua.local_pool = value
-
-    @property
-    def meter(self) -> TransferMeter:
-        return self.aqua.meter
+    @pools.setter
+    def pools(self, value: Dict[str, jnp.ndarray]):
+        for n, pool in value.items():
+            self.planes[n].aqua.local_pool = pool
 
     # -- allocation -------------------------------------------------------
     def ensure_capacity(self, rid: int, n_tokens: int):
-        """Grow the request's per-layer block tables to cover n_tokens.
+        """Grow the request's block tables to cover n_tokens: token planes
+        add pages as the context crosses page boundaries; state planes
+        allocate their fixed page set on first touch (zeroed — a freed slot
+        may hold a previous occupant's state, and the zero page IS the
+        initial recurrent state).
 
-        New pages must be LOCAL (the kernels read the LOCAL pool): if the
-        allocator had to spill a fresh page to another tier the LOCAL pool is
-        full and no later step could pull it back either, so fail loudly here
-        with the tensor/tier MemoryError. The page-budget-aware schedulers
-        are designed to keep planned run sets below this point.
+        New pages must be LOCAL (the step programs read the LOCAL pools): if
+        the allocator had to spill a fresh page to another tier the LOCAL
+        pool is full and no later step could pull it back either, so fail
+        loudly here with the tensor/tier MemoryError. The page-budget-aware
+        schedulers are designed to keep planned run sets below this point.
         """
-        rows = self._pages.setdefault(rid, [[] for _ in range(self.n_layers)])
-        need = self.pages_for(n_tokens)
-        for row in rows:
-            while len(row) < need:
-                lp = int(self.aqua.allocate(1, prefer=LOCAL)[0])
-                if self.aqua.page_table[lp, 0] != LOCAL:
-                    self.aqua.ensure_local([lp])    # raises: LOCAL exhausted
-                row.append(lp)
-
-    def _flat(self, rid: int) -> np.ndarray:
-        return np.asarray([lp for row in self._pages[rid] for lp in row],
-                          np.int64)
+        for plane in self.planes.values():
+            rows = plane.pages.setdefault(
+                rid, [[] for _ in range(plane.n_layers)])
+            need = (self.pages_for(n_tokens) if plane.kind == "tokens" else 1)
+            fresh: List[int] = []
+            for row in rows:
+                while len(row) < need:
+                    lp = int(plane.aqua.allocate(1, prefer=LOCAL)[0])
+                    if plane.aqua.page_table[lp, 0] != LOCAL:
+                        plane.aqua.ensure_local([lp])  # raises: LOCAL is full
+                    row.append(lp)
+                    if plane.kind == "state":
+                        fresh.append(lp)
+            if fresh:
+                plane.aqua.write_local(
+                    fresh, jnp.zeros((len(fresh),) + plane.aqua.page_shape,
+                                     plane.aqua.dtype))
 
     def release(self, rid: int):
-        if rid in self._pages:
-            self.aqua.free(self._flat(rid))
-            del self._pages[rid]
+        for plane in self.planes.values():
+            if rid in plane.pages:
+                plane.aqua.free(plane.flat(rid))
+                del plane.pages[rid]
 
-    # -- block tables (the kernel operands) -------------------------------
+    # -- block tables (the step-program operands) --------------------------
     def block_tables_prefill(self, rid: int, pad_to: Optional[int] = None
-                             ) -> jnp.ndarray:
-        """(G, gs, pad_to) physical LOCAL slots for one request's allocated
-        pages from position 0, scratch-padded. Chunked prefill passes a FIXED
+                             ) -> Dict[str, jnp.ndarray]:
+        """One request's tables from position 0: token planes as
+        (G, n_sub, pad_to) physical LOCAL slots, scratch-padded; state
+        planes as (G, n_sub) bare slots. Chunked prefill passes a FIXED
         ``pad_to`` (pps plus the write-window spill) so every chunk of every
-        request shares one block-table shape — no retrace per context length."""
-        rows = self._pages[rid]
-        bt = self.aqua.block_tables(rows, pad_to=pad_to or len(rows[0]),
-                                    pad_slot=self.scratch_slot)
-        return jnp.asarray(bt.reshape(self.G, self.gs, -1))
+        request shares one table shape — no retrace per context length."""
+        out = {}
+        for name, plane in self.planes.items():
+            rows = plane.pages[rid]
+            if plane.kind == "tokens":
+                bt = plane.aqua.block_tables(rows,
+                                             pad_to=pad_to or len(rows[0]),
+                                             pad_slot=plane.scratch_slot)
+                out[name] = jnp.asarray(bt.reshape(self.G, plane.n_sub, -1))
+            else:
+                bt = plane.aqua.block_tables(rows, pad_to=1,
+                                             pad_slot=plane.scratch_slot)
+                out[name] = jnp.asarray(bt.reshape(self.G, plane.n_sub))
+        return out
 
-    def block_tables(self, lane_rids: Sequence[Optional[int]]) -> jnp.ndarray:
-        """Batched query: (G, gs, B, pps) physical LOCAL slots, one row per
-        batch lane; empty lanes and padding point at the scratch page."""
+    def block_tables(self, lane_rids: Sequence[Optional[int]]
+                     ) -> Dict[str, jnp.ndarray]:
+        """Batched decode query: token planes as (G, n_sub, B, pps) physical
+        LOCAL slots, state planes as (G, n_sub, B); empty lanes and padding
+        point at each plane's scratch page."""
         B = len(lane_rids)
-        rows: List[List[int]] = []
-        for l in range(self.n_layers):
-            for rid in lane_rids:
-                rows.append(self._pages[rid][l] if rid is not None else [])
-        bt = self.aqua.block_tables(rows, pad_to=self.pps,
-                                    pad_slot=self.scratch_slot)
-        return jnp.asarray(bt.reshape(self.G, self.gs, B, self.pps))
+        out = {}
+        for name, plane in self.planes.items():
+            rows: List[List[int]] = []
+            for l in range(plane.n_layers):
+                for rid in lane_rids:
+                    rows.append(plane.pages[rid][l] if rid is not None else [])
+            if plane.kind == "tokens":
+                bt = plane.aqua.block_tables(rows, pad_to=self.pps,
+                                             pad_slot=plane.scratch_slot)
+                out[name] = jnp.asarray(
+                    bt.reshape(self.G, plane.n_sub, B, self.pps))
+            else:
+                bt = plane.aqua.block_tables(rows, pad_to=1,
+                                             pad_slot=plane.scratch_slot)
+                out[name] = jnp.asarray(bt.reshape(self.G, plane.n_sub, B))
+        return out
 
     # -- tier migration (preempt / restore as page-table flips) ------------
     def park(self, rid: int, n_tokens: int, *, prefer: int = REMOTE):
         """Preempt: flip the request's pages out of LOCAL — one coalesced
-        message per (tier, donor) group, each page metered at its fill.
+        message per (plane, tier, donor) group, token pages metered at their
+        fill, state pages whole (they are always fully live).
 
-        ``n_tokens`` is the KV actually RESIDENT in the pool (for an engine
-        request at ctx_len that is ctx_len-1: the newest token's K/V is
-        appended at its next decode step). A page allocated ahead of a
-        boundary but not yet written moves at fill 0.
+        ``n_tokens`` is the context actually RESIDENT in the pools (for an
+        engine request at ctx_len that is ctx_len-1: the newest token's
+        state lands at its next decode step). A token page allocated ahead
+        of a boundary but not yet written moves at fill 0.
         """
-        for row in self._pages[rid]:
-            fills = np.clip(n_tokens - np.arange(len(row)) * self.page_tokens,
-                            0, self.page_tokens) / self.page_tokens
-            self.aqua.set_page_fill(row, fills)
-        self.aqua.offload(self._flat(rid), prefer=prefer)
+        for plane in self.planes.values():
+            if rid not in plane.pages:
+                continue
+            if plane.kind == "tokens":
+                for row in plane.pages[rid]:
+                    fills = np.clip(
+                        n_tokens - np.arange(len(row)) * self.page_tokens,
+                        0, self.page_tokens) / self.page_tokens
+                    plane.aqua.set_page_fill(row, fills)
+            plane.aqua.offload(plane.flat(rid), prefer=prefer)
 
     def restore(self, rid: int):
         """Make every page of the request LOCAL (no-op when already there)."""
-        self.aqua.ensure_local(self._flat(rid))
-        for row in self._pages[rid]:
-            self.aqua.set_page_fill(row, 1.0)
+        for plane in self.planes.values():
+            if rid not in plane.pages:
+                continue
+            plane.aqua.ensure_local(plane.flat(rid))
+            for row in plane.pages[rid]:
+                plane.aqua.set_page_fill(row, 1.0)
 
-    def nonlocal_pages(self, rid: int) -> int:
-        """Pages of the request currently NOT in the LOCAL tier."""
-        rows = self.aqua.page_table[self._flat(rid)]
-        return int((rows[:, 0] != LOCAL).sum())
+    def nonlocal_pages(self, rid: int) -> np.ndarray:
+        """Per-plane pages of the request currently NOT in the LOCAL tier."""
+        out = []
+        for plane in self.planes.values():
+            rows = plane.aqua.page_table[plane.flat(rid)]
+            out.append(int((rows[:, 0] != LOCAL).sum()) if len(rows) else 0)
+        return np.asarray(out, np.int64)
 
     def can_restore(self, rid: int) -> bool:
-        """True when a restore fits the free LOCAL slots right now — the
-        prefetch guard: an early ``ensure_local`` must never steal pages the
-        current run set still needs (it would raise mid-step otherwise)."""
-        return self.nonlocal_pages(rid) <= self.aqua.local_free
+        """True when a restore fits every plane's free LOCAL slots right now
+        — the prefetch guard: an early ``ensure_local`` must never steal
+        pages the current run set still needs (it would raise mid-step)."""
+        free = np.asarray([p.aqua.local_free for p in self.planes.values()])
+        return bool(np.all(self.nonlocal_pages(rid) <= free))
 
     # -- coordinator-driven lease plumbing --------------------------------
     def add_remote_lease(self, donor: str, nbytes: float):
-        slots = max(1, int(nbytes // self.aqua.page_bytes))
-        self.aqua.add_remote_lease(donor, slots)
+        """Split a donor's byte grant across the planes in proportion to
+        their share of a full-length request's footprint. Slots are floored
+        per plane so the booked capacity never exceeds the grant the
+        coordinator accounts (a plane whose share rounds to zero simply
+        gets no pool from this donor and falls through to the host tier);
+        a grant too small for any plane's page goes whole to the
+        largest-weight plane, matching the old single-pool ``max(1, ...)``."""
+        weights = {n: float(self._plane_pages(p, self.max_seq)
+                            * p.aqua.page_bytes)
+                   for n, p in self.planes.items()}
+        total = sum(weights.values())
+        slots = {n: int(nbytes * weights[n] / total // p.aqua.page_bytes)
+                 for n, p in self.planes.items()}
+        if not any(slots.values()):
+            slots[max(weights, key=weights.get)] = 1
+        for name, n_slots in slots.items():
+            if n_slots > 0:
+                self.planes[name].aqua.add_remote_lease(donor, n_slots)
 
     def evict_remote(self, donor: str) -> int:
-        return self.aqua.evict_remote(donor)
+        return sum(p.aqua.evict_remote(donor)
+                   for p in self.planes.values()
+                   if donor in p.aqua.remote_pools)
 
     def stats(self) -> Dict:
-        return {"tiers": self.aqua.tier_counts(),
+        tiers: Dict[str, int] = {}
+        for p in self.planes.values():
+            for k, v in p.aqua.tier_counts().items():
+                tiers[k] = tiers.get(k, 0) + v
+        return {"tiers": tiers,
+                "planes": {n: p.aqua.tier_counts()
+                           for n, p in self.planes.items()},
                 "page_tokens": self.page_tokens,
-                "meter": {"bytes_fabric": self.aqua.meter.bytes_fabric,
-                          "bytes_host": self.aqua.meter.bytes_host,
-                          "messages_fabric": self.aqua.meter.messages_fabric,
-                          "messages_host": self.aqua.meter.messages_host,
-                          "sim_time": self.aqua.meter.sim_time}}
-
-
-# ===========================================================================
-# Legacy blob path — compatibility shim for non-paged families
-# ===========================================================================
-def _is_seq_leaf(leaf, max_seq: int) -> bool:
-    return leaf.ndim >= 3 and leaf.shape[2] == max_seq
-
-
-def extract_slot(cache, slot: int, ctx_len: int, max_seq: int):
-    """[shim] Slice one request's context out of the batched cache pytree."""
-    def f(leaf):
-        if _is_seq_leaf(leaf, max_seq):
-            return leaf[:, slot, :ctx_len]
-        return leaf[:, slot]
-    return jax.tree.map(f, cache)
-
-
-def insert_slot(cache, ctx, slot: int, ctx_len: int, max_seq: int):
-    """[shim] Write a request's context back into the batched cache."""
-    def f(leaf, part):
-        if _is_seq_leaf(leaf, max_seq):
-            return leaf.at[:, slot, :ctx_len].set(part.astype(leaf.dtype))
-        return leaf.at[:, slot].set(part.astype(leaf.dtype))
-    return jax.tree.map(f, cache, ctx)
-
-
-def pack_context(ctx) -> Tuple[jnp.ndarray, List[Tuple[tuple, Any]]]:
-    """[shim] Flatten a context pytree into one f32 vector + restore metadata.
-
-    This is the seed blob path the paged runtime replaces: every cache leaf
-    is gathered and upcast to float32 on EVERY context switch (a ~2x byte
-    blowup for bf16 state) — kept only for families whose decode state is
-    not paged KV, and as the benchmark baseline.
-    """
-    leaves = jax.tree.leaves(ctx)
-    meta = [(l.shape, l.dtype) for l in leaves]
-    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
-    return flat, meta
-
-
-def unpack_context(flat: jnp.ndarray, meta, treedef):
-    parts = []
-    off = 0
-    for shape, dtype in meta:
-        n = int(np.prod(shape))
-        parts.append(flat[off:off + n].reshape(shape).astype(dtype))
-        off += n
-    return jax.tree.unflatten(treedef, parts)
-
-
-@dataclass
-class ParkedContext:
-    page_ids: np.ndarray
-    n_elems: int
-    meta: list
-    treedef: Any
-    ctx_len: int
-
-
-class ContextStore:
-    """[shim] Pages parked request contexts into an AquaTensor as f32 blobs."""
-
-    def __init__(self, *, page_elems: int = 32768, local_pages: int = 64,
-                 host_pages: int = 4096, n_logical: int = 8192,
-                 meter: Optional[TransferMeter] = None):
-        self.page_elems = page_elems
-        self.aqua = AquaTensor(n_logical=n_logical, page_shape=(page_elems,),
-                               local_slots=local_pages, host_slots=host_pages,
-                               dtype=jnp.float32, meter=meter, name="ctx")
-
-    @property
-    def meter(self) -> TransferMeter:
-        return self.aqua.meter
-
-    # -- coordinator-driven lease plumbing --------------------------------
-    def add_remote_lease(self, donor: str, nbytes: float):
-        slots = max(1, int(nbytes // (self.page_elems * 4)))
-        self.aqua.add_remote_lease(donor, slots)
-
-    def evict_remote(self, donor: str) -> int:
-        return self.aqua.evict_remote(donor)
-
-    # -- park / restore ----------------------------------------------------
-    def park(self, ctx, ctx_len: int, *, prefer: int = REMOTE) -> ParkedContext:
-        flat, meta = pack_context(ctx)       # the coalescing gather
-        treedef = jax.tree.structure(ctx)
-        n_pages = math.ceil(flat.size / self.page_elems)
-        pad = n_pages * self.page_elems - flat.size
-        flat = jnp.pad(flat, (0, pad))
-        lps = self.aqua.allocate(n_pages, prefer=prefer)
-        self.aqua.write(lps, flat.reshape(n_pages, self.page_elems))
-        return ParkedContext(lps, flat.size - pad, meta, treedef, ctx_len)
-
-    def restore(self, parked: ParkedContext):
-        pages = self.aqua.read(parked.page_ids, meter=True)
-        flat = pages.reshape(-1)[: parked.n_elems]
-        ctx = unpack_context(flat, parked.meta, parked.treedef)
-        self.aqua.free(parked.page_ids)
-        return ctx
-
-    def stats(self) -> Dict:
-        return {"tiers": self.aqua.tier_counts(),
-                "meter": {"bytes_fabric": self.aqua.meter.bytes_fabric,
-                          "bytes_host": self.aqua.meter.bytes_host,
-                          "messages_fabric": self.aqua.meter.messages_fabric,
-                          "messages_host": self.aqua.meter.messages_host,
-                          "sim_time": self.aqua.meter.sim_time}}
+                "meter": {"bytes_fabric": self.meter.bytes_fabric,
+                          "bytes_host": self.meter.bytes_host,
+                          "messages_fabric": self.meter.messages_fabric,
+                          "messages_host": self.meter.messages_host,
+                          "sim_time": self.meter.sim_time}}

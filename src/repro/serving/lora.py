@@ -67,31 +67,40 @@ def apply_lora(params: dict, cfg: ModelConfig, adapter: dict) -> dict:
 
 class AdapterCache:
     """LRU adapter cache over an AquaTensor: hot adapters LOCAL, cold ones on
-    the donor GPU (fabric) or host. Fetch = one coalesced blob transfer."""
+    the donor GPU (fabric) or host. Fetch = one coalesced blob transfer.
+
+    Adapters page in their NATIVE dtype: every array leaf is raveled into one
+    contiguous vector of ``dtype`` (pass the model's param dtype) — the
+    paper's "load the adapter as one tensor" fix with no f32 blowup, on the
+    same page machinery every other state tier now uses.
+    """
 
     def __init__(self, *, capacity_local: int, page_elems: int = 65536,
-                 meter: Optional[TransferMeter] = None):
+                 dtype=jnp.float32, meter: Optional[TransferMeter] = None):
         self.capacity = capacity_local
         self.page_elems = page_elems
         self.aqua = AquaTensor(
             n_logical=4096, page_shape=(page_elems,),
             local_slots=max(capacity_local * 2, 4), host_slots=4096,
-            dtype=jnp.float32, meter=meter, name="lora")
+            dtype=dtype, meter=meter, name="lora")
         self._parked: Dict[int, tuple] = {}
         self._lru: list = []
 
     def put(self, aid: int, adapter: dict):
-        from repro.serving.kv_cache import pack_context
-        flat, meta = pack_context(adapter_arrays(adapter))
+        leaves = jax.tree.leaves(adapter_arrays(adapter))
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(self.aqua.dtype) for l in leaves])
         n_pages = -(-flat.size // self.page_elems)
         flat = jnp.pad(flat, (0, n_pages * self.page_elems - flat.size))
         lps = self.aqua.allocate(n_pages, prefer=REMOTE)
         self.aqua.write(lps, flat.reshape(n_pages, self.page_elems))
-        self._parked[aid] = (lps, meta, flat.size, adapter)
+        # the python dict is retained alongside the paged blob: fetch()
+        # meters the coalesced page-in and returns the retained object
+        self._parked[aid] = (lps, adapter)
 
     def fetch(self, aid: int) -> dict:
         """Bring an adapter into the local tier (metered if cold)."""
-        lps, meta, n, adapter = self._parked[aid]
+        lps, adapter = self._parked[aid]
         hit = aid in self._lru
         if not hit:
             self.aqua.read(lps, meter=True)   # the coalesced fabric fetch

@@ -4,9 +4,13 @@ discrete-event simulator.
 
 Capacity planning is in PAGES, not slots: when constructed with a
 ``page_cost`` callback (pages a request needs LOCAL if scheduled) and a
-``page_budget`` (the LOCAL pool size), the run set is chosen so its pages
+``page_budget`` (the LOCAL pool sizes), the run set is chosen so its pages
 fit the local tier — the block-table analogue of vLLM's KV-memory admission
-gate. Without them (the dense shim) the plan degrades to slot counting.
+gate. Cost and budget are PER-PLANE vectors (np arrays, one entry per page
+plane of the unified state runtime: kv / mla token pages, ssm / conv / wkv /
+shift state pages); a request fits only when EVERY plane fits. Scalars keep
+working for single-plane callers. Without cost/budget the plan degrades to
+slot counting.
 
 Step execution is budgeted in TOKENS (``split_step_budget``): every step
 spends at most ``step_tokens`` tokens, split between the decode lanes (one
@@ -20,6 +24,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
+import numpy as np
+
 
 @dataclass
 class ReqState:
@@ -29,15 +35,22 @@ class ReqState:
     max_new_tokens: int
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None            # batch slot when running
-    parked: object = None                 # ParkedContext when preempted
-    prefill_pos: int = 0                  # prompt tokens whose KV is written
+    parked: object = None                 # truthy while paged out
+    prefill_pos: int = 0                  # prompt POSITIONS whose state is written
+    n_prefix: int = 0                     # VLM prefix-embedding positions
+    prefix_embeds: object = None          # (1, n_prefix, d) array when VLM
     ttft_step: Optional[int] = None
     finish_step: Optional[int] = None
     lora_id: Optional[int] = None
 
     @property
+    def prompt_positions(self) -> int:
+        """Positions the prompt occupies: VLM prefix embeds + text tokens."""
+        return self.n_prefix + len(self.prompt_tokens)
+
+    @property
     def prefilled(self) -> bool:
-        return self.prefill_pos >= len(self.prompt_tokens)
+        return self.prefill_pos >= self.prompt_positions
 
     @property
     def vruntime(self) -> int:            # CFS: service received = tokens out
@@ -45,7 +58,7 @@ class ReqState:
 
     @property
     def ctx_len(self) -> int:
-        return len(self.prompt_tokens) + len(self.generated)
+        return self.prompt_positions + len(self.generated)
 
     @property
     def resident_tokens(self) -> int:
@@ -135,9 +148,9 @@ class FCFSScheduler:
                 break
             if self.page_cost is not None and self.page_budget is not None:
                 c = self.page_cost(r)
-                if run and pages + c > self.page_budget:
+                if run and np.any(pages + c > self.page_budget):
                     break                     # strict FCFS: no skip-ahead
-                pages += c
+                pages = pages + c
             run.append(r)
             admit.append(r)
         return Decision(run, admit, [])
@@ -180,10 +193,10 @@ class CFSScheduler:
                 if len(run) >= self.max_running:
                     break
                 c = self.page_cost(r)
-                if run and pages + c > self.page_budget:
+                if run and np.any(pages + c > self.page_budget):
                     continue                  # fair-pick the next that fits
                 run.append(r)
-                pages += c
+                pages = pages + c
         run_ids = {r.rid for r in run}
         preempt = [r for r in running if r.rid not in run_ids]
         admit = [r for r in run if r.slot is None and not r.prefilled]

@@ -1,7 +1,9 @@
-"""Page-native serving runtime tests: fused-pool kernels vs oracles, batched
-block-table queries, partial-tail metering, tier-exhaustion errors, paged-vs-
-dense bit-identical decoding under CFS preemption, unified TTFT accounting,
-and the context-switch microbenchmark's coalescing invariants.
+"""Page-native serving runtime tests (kv plane deep coverage): fused-pool
+kernels vs oracles, batched block-table queries, partial-tail metering,
+tier-exhaustion errors, bit-identical decoding under CFS preemption in bf16,
+unified TTFT accounting, and the context-switch microbenchmark's coalescing
+invariants. The other planes (mla/ssm/conv/wkv/shift) are covered in
+tests/test_state_paging.py.
 """
 import jax
 import jax.numpy as jnp
@@ -16,7 +18,7 @@ from repro.kernels.paged_attention.ref import (append_kv_ref,
                                                paged_attention_pool_ref)
 from repro.models import api
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import PagedKVRuntime
+from repro.serving.kv_cache import PagedStateRuntime
 
 ARCH = "qwen1.5-0.5b"
 
@@ -155,10 +157,11 @@ def _greedy(cfg, params, prompt, n, max_seq=64):
     return out
 
 
-def test_paged_vs_dense_bit_identical_under_cfs_preemption_bf16():
-    """Tentpole parity: prefill + decode with interleaved CFS preemptions on
-    the paged runtime produces bit-identical tokens vs the seed dense path —
-    in bf16, with NO float32 roundtrip on the context switches."""
+def test_preemption_bit_identical_bf16_no_f32_roundtrip():
+    """Tentpole parity: prefill + decode with interleaved CFS preemptions
+    produces bit-identical tokens vs serving each request alone (never
+    preempted) — in bf16, with NO float32 roundtrip on the context switches:
+    park/restore move the native-dtype page payloads untouched."""
     cfg = smoke_config(get_config(ARCH)).replace(param_dtype="bfloat16",
                                                  compute_dtype="bfloat16")
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -167,23 +170,28 @@ def test_paged_vs_dense_bit_identical_under_cfs_preemption_bf16():
                                           int(rng.integers(4, 12)))))
                for _ in range(4)]
 
-    def serve(runtime):
+    def serve(batch):
         eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
                             scheduler="cfs", slice_tokens=3,
-                            offload_tier=REMOTE, runtime=runtime)
+                            offload_tier=REMOTE)
         eng.pager.add_remote_lease("donor0", 2 ** 24)
-        for p in prompts:
-            eng.submit(p, 6)
-        m = eng.run(400)
-        assert m.preemptions > 0 and m.restores > 0
+        if batch:                              # contended: CFS preempts
+            for p in prompts:
+                eng.submit(p, 6)
+            m = eng.run(400)
+            assert m.preemptions > 0 and m.restores > 0
+        else:                                  # serial: never preempted
+            for p in prompts:
+                eng.submit(p, 6)
+                eng.run(400)
+            assert eng.metrics.preemptions == 0
         return {tuple(r.prompt_tokens): r.generated for r in eng.finished}, eng
 
-    got_paged, eng_p = serve("paged")
-    got_dense, _ = serve("dense")
-    assert got_paged == got_dense
+    got_preempted, eng_p = serve(True)
+    got_serial, _ = serve(False)
+    assert got_preempted == got_serial
     # the paged switches moved native-dtype pages over the fabric
     assert eng_p.kv.meter.bytes_fabric > 0
-    # and the seed blob helpers are off the hot path entirely
     assert eng_p.kv.aqua.dtype == jnp.bfloat16
 
 
@@ -196,7 +204,6 @@ def test_paged_engine_transparent_vs_direct_greedy():
     truth = [_greedy(cfg, params, p, 5) for p in prompts]
     eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
                         scheduler="cfs", slice_tokens=3, offload_tier=HOST)
-    assert eng.runtime == "paged"
     for p in prompts:
         eng.submit(p, 5)
     m = eng.run(300)
@@ -215,11 +222,11 @@ def test_paged_engine_under_local_page_pressure():
     prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 8)))
                for _ in range(3)]
     truth = [_greedy(cfg, params, p, 5) for p in prompts]
-    kv = PagedKVRuntime(cfg, max_seq=64, page_tokens=8, max_running=1)
+    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=1)
     eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
                         scheduler="cfs", slice_tokens=3, offload_tier=HOST,
-                        runtime="paged", kv=kv)
-    assert eng.sched.page_budget == kv.page_budget
+                        kv=kv)
+    assert (eng.sched.page_budget == kv.page_budget).all()
     for p in prompts:
         eng.submit(p, 5)
     eng.run(400)
@@ -234,16 +241,14 @@ def test_ttft_includes_full_step_time_on_both_paths():
     simulated duration of step 0."""
     cfg = smoke_config(get_config(ARCH))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
-    for runtime in ("paged", "dense"):
-        eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
-                            scheduler="cfs", slice_tokens=3,
-                            offload_tier=HOST, runtime=runtime)
-        r = eng.submit([1, 2, 3, 4], 4, arrival=0.0)
-        eng.step()
-        m = eng.metrics
-        assert r.generated, "prefill must emit the first token"
-        assert m.ttft[r.rid] == pytest.approx(m.sim_time)
-        assert m.ttft[r.rid] > 0.0
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
+                        scheduler="cfs", slice_tokens=3, offload_tier=HOST)
+    r = eng.submit([1, 2, 3, 4], 4, arrival=0.0)
+    eng.step()
+    m = eng.metrics
+    assert r.generated, "prefill must emit the first token"
+    assert m.ttft[r.rid] == pytest.approx(m.sim_time)
+    assert m.ttft[r.rid] > 0.0
 
 
 def test_park_meters_exactly_resident_tokens():
@@ -252,7 +257,7 @@ def test_park_meters_exactly_resident_tokens():
     boundary metered a FULL page at 1/page fill. Park meters precisely
     n_tokens of native-dtype KV, for any alignment."""
     cfg = smoke_config(get_config(ARCH))
-    kv = PagedKVRuntime(cfg, max_seq=64, page_tokens=8, max_running=1)
+    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=1)
     kv.add_remote_lease("d0", 64 * kv.aqua.page_bytes)
     for resident in (3, 8, 9, 16):            # sub-page, boundary, +1, 2 pages
         rid = resident
@@ -260,7 +265,7 @@ def test_park_meters_exactly_resident_tokens():
         before = kv.meter.bytes_fabric
         kv.park(rid, resident, prefer=REMOTE)
         moved = kv.meter.bytes_fabric - before
-        assert moved == pytest.approx(kv.kv_footprint_bytes(resident)), resident
+        assert moved == pytest.approx(kv.footprint_bytes(resident)), resident
         kv.restore(rid)
         kv.release(rid)
 
@@ -279,10 +284,9 @@ def test_fcfs_paged_budgets_to_completion_under_pressure():
     truth = [_greedy(cfg, params, p, 20) for p in prompts]
     # pages to completion: ceil(28/8)=4 pages x 4 layers = 16 per request;
     # a 20-page budget forces strictly serial FCFS admission
-    kv = PagedKVRuntime(cfg, max_seq=64, page_tokens=8, local_pages=21)
+    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, local_pages=21)
     eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
-                        scheduler="fcfs", offload_tier=HOST,
-                        runtime="paged", kv=kv)
+                        scheduler="fcfs", offload_tier=HOST, kv=kv)
     for p in prompts:
         eng.submit(p, 20)
     eng.run(600)
@@ -297,9 +301,9 @@ def test_context_switch_benchmark_coalescing_invariants():
     from benchmarks.context_switch import measure
     m = measure(arch=ARCH, ctx_len=52, page_tokens=8, max_seq=64)
     # paged preempt moves ONLY native-dtype payload (tail at its fill)...
-    assert m["paged/preempt_bytes"] <= m["native_kv_bytes"] + 1e-6
-    # ...as one coalesced message per (tier, donor) group
+    assert m["paged/preempt_bytes"] <= m["native_state_bytes"] + 1e-6
+    # ...as one coalesced message per (plane, tier, donor) group
     assert m["paged/preempt_messages"] == 1
     assert m["paged/roundtrip_messages"] == 2
-    # the seed blob path pays the f32 repack: ~2x for a bf16 model
-    assert m["blob/preempt_bytes"] >= 1.9 * m["native_kv_bytes"]
+    # the seed blob path paid the f32 repack: ~2x for a bf16 model
+    assert m["blob/preempt_bytes"] >= 1.9 * m["native_state_bytes"]

@@ -17,7 +17,7 @@ from repro.kernels.paged_attention.ref import \
 from repro.layers.attention import write_chunk_pages
 from repro.models import api, lm
 from repro.serving.engine import SchedulingInvariantError, ServingEngine
-from repro.serving.kv_cache import PagedKVRuntime
+from repro.serving.kv_cache import PagedStateRuntime
 from repro.serving.scheduler import (Decision, bucket_tokens,
                                      split_step_budget)
 
@@ -126,15 +126,15 @@ def test_chunked_prefill_bit_identical_across_chunk_sizes():
     pad_to = 16                                       # pps(8)+spill, page=8
 
     def last_logits(splits):
-        kv = PagedKVRuntime(cfg, max_seq=64, page_tokens=8, max_running=2)
+        kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=2)
         pos = 0
         out = None
         for c in splits:
             kv.ensure_capacity(0, pos + c)
             bt = kv.block_tables_prefill(0, pad_to=pad_to)
             toks = jnp.asarray(prompt[pos:pos + c], jnp.int32)[None]
-            logits, kv.pool = lm.prefill_chunk_paged(
-                params, cfg, toks, kv.pool, bt, jnp.int32(pos),
+            logits, kv.pools = lm.prefill_chunk_paged(
+                params, cfg, toks, kv.pools, bt, jnp.int32(pos),
                 jnp.int32(c - 1))
             pos += c
             out = logits[0]
@@ -237,13 +237,11 @@ def test_ttft_under_burst_improves_at_paper_scale():
 # ---------------------------------------------------------------------------
 # scheduling invariant: never silently skip placement
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("runtime", ["paged", "dense"])
-def test_place_raises_loudly_when_slots_exhausted(runtime):
+def test_place_raises_loudly_when_slots_exhausted():
     cfg = smoke_config(get_config(ARCH))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(cfg, params, max_running=1, max_seq=64,
-                        scheduler="cfs", slice_tokens=3, offload_tier=HOST,
-                        runtime=runtime)
+                        scheduler="cfs", slice_tokens=3, offload_tier=HOST)
     r = eng.submit([1, 2, 3, 4], 2)
     eng._free_slots = []                              # simulate a plan bug
     with pytest.raises(SchedulingInvariantError, match="slot"):

@@ -1,8 +1,8 @@
-"""Serving engine tests: transparent AQUA paging is bit-exact on both
-runtimes (page-native KV for pure-attention families, the dense blob shim for
-SSM/MLA/hybrid state), CFS fairness invariants hold, coordinator-driven
+"""Serving engine tests: transparent AQUA paging is bit-exact on the unified
+paged state runtime for EVERY family (attention KV pages, MLA latent pages,
+Mamba/RWKV6 state pages), CFS fairness invariants hold, coordinator-driven
 elasticity works mid-serve, and the LoRA adapter cache meters coalesced
-fetches.
+native-dtype fetches.
 """
 import jax
 import jax.numpy as jnp
@@ -14,15 +14,15 @@ from repro.core.aqua_tensor import HOST, REMOTE
 from repro.core.coordinator import Coordinator
 from repro.models import api
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import ContextStore
 from repro.serving.lora import (AdapterCache, adapter_bytes, apply_lora,
                                 init_adapter)
 from repro.serving.scheduler import CFSScheduler, FCFSScheduler, ReqState
 
-# families whose decode state is NOT plain paged KV: they exercise the dense
-# slotted cache + ContextStore blob shim (qwen, the pure-GQA family, runs the
-# page-native runtime — see test_paged_runtime.py for its deep coverage)
-DENSE_FAMILIES = ["rwkv6-3b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"]
+# families whose decode state is NOT plain paged KV: they exercise the MLA
+# latent plane and the Mamba/RWKV6 state planes of the unified runtime
+# (qwen, the pure-GQA family, runs the kv plane — see test_paged_runtime.py
+# for its deep coverage)
+STATE_FAMILIES = ["rwkv6-3b", "deepseek-v2-lite-16b", "jamba-v0.1-52b"]
 
 
 def _greedy(cfg, params, prompt, n, max_seq=96):
@@ -38,41 +38,33 @@ def _greedy(cfg, params, prompt, n, max_seq=96):
     return out
 
 
-def _mk_dense_engine(cfg, params, **kw):
-    store = ContextStore(page_elems=2048, local_pages=8, host_pages=2048,
-                         n_logical=4096)
-    store.add_remote_lease("donor0", 256 * 2048 * 4)
-    args = dict(max_running=2, max_seq=96, scheduler="cfs", slice_tokens=3,
-                store=store, offload_tier=REMOTE, runtime="dense")
-    args.update(kw)
-    return ServingEngine(cfg, params, **args), store
-
-
-@pytest.mark.parametrize("arch", DENSE_FAMILIES)
-def test_cfs_paging_is_transparent_dense_shim(arch):
-    """Tokens under CFS + AQUA blob paging == direct per-request greedy."""
+@pytest.mark.parametrize("arch", STATE_FAMILIES)
+def test_cfs_paging_is_transparent_state_planes(arch):
+    """Tokens under CFS + AQUA state-page tier flips == direct greedy: the
+    recurrent/latent state round-trips the fabric bit-exactly."""
     cfg = smoke_config(get_config(arch))
-    assert not api.supports_paged_kv(cfg)     # these families need the shim
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
                                           int(rng.integers(4, 12)))))
                for _ in range(5)]
     truth = [_greedy(cfg, params, p, 6) for p in prompts]
-    eng, store = _mk_dense_engine(cfg, params)
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=96,
+                        scheduler="cfs", slice_tokens=3, offload_tier=REMOTE)
+    eng.pager.add_remote_lease("donor0", 1 << 24)
     for p in prompts:
         eng.submit(p, 6)
     m = eng.run(400)
     got = {tuple(r.prompt_tokens): r.generated for r in eng.finished}
     assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
     assert m.preemptions > 0 and m.restores > 0
-    assert store.stats()["meter"]["bytes_fabric"] > 0
+    assert eng.pager.stats()["meter"]["bytes_fabric"] > 0
 
 
-def test_paged_runtime_is_default_for_pure_attention():
-    """The engine serves pure-GQA families page-natively by default: decode
-    attention reads the AquaTensor pool through kernels/paged_attention and
-    preemption flips page tiers over the fabric."""
+def test_paged_runtime_serves_pure_attention():
+    """The engine serves pure-GQA families page-natively: decode attention
+    reads the AquaTensor pool through kernels/paged_attention and preemption
+    flips page tiers over the fabric."""
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
@@ -82,7 +74,7 @@ def test_paged_runtime_is_default_for_pure_attention():
     truth = [_greedy(cfg, params, p, 6) for p in prompts]
     eng = ServingEngine(cfg, params, max_running=2, max_seq=96,
                         scheduler="cfs", slice_tokens=3, offload_tier=REMOTE)
-    assert eng.runtime == "paged" and eng.paged_impl == "pallas"
+    assert list(eng.kv.planes) == ["kv"] and eng.paged_impl == "pallas"
     eng.pager.add_remote_lease("donor0", 256 * eng.kv.aqua.page_bytes)
     for p in prompts:
         eng.submit(p, 6)
@@ -91,6 +83,15 @@ def test_paged_runtime_is_default_for_pure_attention():
     assert all(got[tuple(p)] == t for p, t in zip(prompts, truth))
     assert m.preemptions > 0 and m.restores > 0
     assert eng.kv.stats()["meter"]["bytes_fabric"] > 0
+
+
+def test_unservable_families_rejected_loudly():
+    """Families with no page plane yet (windowed ring buffers) are rejected
+    at construction — there is no dense fallback runtime anymore."""
+    cfg = smoke_config(get_config("gemma3-12b"))
+    assert not api.supports_paged(cfg)
+    with pytest.raises(ValueError, match="not paged-servable"):
+        ServingEngine(cfg, None, max_running=1, max_seq=64)
 
 
 def test_host_tier_paging_also_transparent():
@@ -131,9 +132,9 @@ def test_cfs_fairness_bounded_fcfs_not():
 
 
 def test_elastic_reclaim_mid_serve_preserves_correctness():
-    """Donor reclaims its lease while requests' KV pages sit on it: pages
-    fall back to host, decoding continues bit-exactly (paper §6.2) — on the
-    page-native runtime the evacuation is a page-table retier, no repack."""
+    """Donor reclaims its lease while requests' state pages sit on it: pages
+    fall back to host, decoding continues bit-exactly (paper §6.2) — the
+    evacuation is a page-table retier, no repack."""
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(3)
@@ -146,7 +147,6 @@ def test_elastic_reclaim_mid_serve_preserves_correctness():
                         slice_tokens=3, offload_tier=REMOTE,
                         coordinator=coord, name="llm0",
                         want_remote_bytes=1 << 22, respond_every=1)
-    assert eng.runtime == "paged"
     for p in prompts:
         eng.submit(p, 8)
     for _ in range(10):
@@ -163,7 +163,7 @@ def test_lora_adapter_cache_meters_cold_fetches():
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     ad0 = init_adapter(jax.random.PRNGKey(1), cfg, rank=4)
     ad1 = init_adapter(jax.random.PRNGKey(2), cfg, rank=4)
-    cache = AdapterCache(capacity_local=1, page_elems=4096)
+    cache = AdapterCache(capacity_local=1, page_elems=4096, dtype=cfg.dtype())
     cache.put(0, ad0)
     cache.put(1, ad1)
     cache.fetch(0)
@@ -172,6 +172,21 @@ def test_lora_adapter_cache_meters_cold_fetches():
     assert cache.aqua.meter.sim_time == t1
     cache.fetch(1)                            # cold: metered
     assert cache.aqua.meter.sim_time > t1
+
+
+def test_lora_adapter_parks_native_dtype_pages():
+    """Adapter parking pages the adapter in its NATIVE dtype (one contiguous
+    blob, no f32 blowup): the bytes parked equal adapter_bytes up to one
+    page of tail padding."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b")).replace(
+        param_dtype="bfloat16", compute_dtype="bfloat16")
+    ad = init_adapter(jax.random.PRNGKey(1), cfg, rank=4)
+    cache = AdapterCache(capacity_local=1, page_elems=4096, dtype=cfg.dtype())
+    assert cache.aqua.dtype == jnp.bfloat16
+    cache.put(0, ad)
+    parked = cache.aqua.meter.bytes_fabric + cache.aqua.meter.bytes_host
+    page_bytes = cache.aqua.page_bytes
+    assert adapter_bytes(ad) <= parked <= adapter_bytes(ad) + page_bytes
 
 
 def test_apply_lora_changes_only_qv_outputs():
