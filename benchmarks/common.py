@@ -32,5 +32,6 @@ def codellama_sim(hw, scheduler, tier, **kw):
 
 
 def pct(xs, q):
+    """Quantile of xs by sorted-index clamp (shared by every benchmark)."""
     xs = sorted(xs)
-    return xs[min(int(q * len(xs)), len(xs) - 1)] if xs else float("nan")
+    return float(xs[min(int(q * len(xs)), len(xs) - 1)]) if xs else float("nan")

@@ -26,12 +26,9 @@ from typing import Dict
 
 import numpy as np
 
+from benchmarks.common import pct as _pct
+
 STEP_TOKENS = 16
-
-
-def _pct(xs, q):
-    xs = sorted(xs)
-    return float(xs[min(int(q * len(xs)), len(xs) - 1)]) if xs else float("nan")
 
 
 def measure_engine(arch: str = "qwen1.5-0.5b", long_len: int = 64,

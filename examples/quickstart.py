@@ -1,13 +1,12 @@
-"""Quickstart: train a tiny model, then serve it with CFS + AQUA paging.
+"""Quickstart: train a tiny model, then serve it with CFS + AQUA paging and
+copy-on-write prompt-prefix sharing.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.core.aqua_tensor import REMOTE
-from repro.models import api
 from repro.serving.engine import ServingEngine
 from repro.training.data import DataConfig
 from repro.training.optimizer import AdamWConfig, cosine_schedule
@@ -31,12 +30,24 @@ def main():
                         offload_tier=REMOTE)
     eng.pager.add_remote_lease("donor-gpu", 1 << 22)      # a neighbor's HBM
     rng = np.random.default_rng(1)
-    for i in range(6):
-        eng.submit(list(map(int, rng.integers(0, cfg.vocab_size, 8))), 6)
+    # a shared 16-token "system prompt" + per-user tails: once the first
+    # request prefills it, later arrivals adopt its physical pages
+    system = list(map(int, rng.integers(0, cfg.vocab_size, 16)))
+    lead = eng.submit(system + [1, 2], 6)
+    while not lead.prefilled:
+        eng.step()
+    for i in range(5):
+        eng.submit(system
+                   + list(map(int, rng.integers(0, cfg.vocab_size, 4))), 6)
     m = eng.run(500)
+    sh = eng.kv.stats()["sharing"]
     print(f"serve: {len(eng.finished)} requests, "
           f"{m.preemptions} preemptions paged over the fabric, "
           f"{eng.pager.stats()['meter']['bytes_fabric']/1e6:.2f} MB moved")
+    print(f"prefix sharing: {sh['prefix_hits']} hits, "
+          f"{sh['adopted_tokens']} prompt tokens adopted, "
+          f"{sh['cow_copies']} copy-on-write clones")
+    assert sh["prefix_hits"] == 5
     print("quickstart OK")
 
 

@@ -1,0 +1,95 @@
+"""Docs-health check (wired into CI and tier-1 via tests/test_docs_health.py).
+
+Two invariants over README.md and docs/*.md:
+
+  1. every fenced ```python code block compiles, and its import statements
+     execute cleanly against src/ (so examples in the docs can't reference
+     modules/symbols that drifted away);
+  2. every intra-repo markdown link ([text](path) that is not http/mailto/
+     anchor) resolves to an existing file relative to the document.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(ROOT))
+    except ValueError:
+        return str(path)
+
+_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.S)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def python_blocks(text: str):
+    return _BLOCK_RE.findall(text)
+
+
+def check_block(block: str, where: str):
+    """Compile the whole block; execute only its import statements (found
+    via the AST, so multi-line/parenthesized/indented imports work)."""
+    try:
+        tree = ast.parse(block, where)
+    except SyntaxError as e:
+        return [f"{where}: syntax error in python block: {e}"]
+    imports = [node for node in ast.walk(tree)
+               if isinstance(node, (ast.Import, ast.ImportFrom))
+               and getattr(node, "level", 0) == 0]
+    if not imports:
+        return []
+    mod = ast.fix_missing_locations(ast.Module(body=imports,
+                                               type_ignores=[]))
+    try:
+        exec(compile(mod, where, "exec"), {})
+    except Exception as e:
+        return [f"{where}: import failed: {e!r}"]
+    return []
+
+
+def check_links(path: pathlib.Path, text: str):
+    errors = []
+    for m in _LINK_RE.finditer(text):
+        url = m.group(1)
+        if url.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = (path.parent / url.split("#", 1)[0]).resolve()
+        if not target.exists():
+            errors.append(f"{_rel(path)}: broken link -> {url}")
+    return errors
+
+
+def check_file(path: pathlib.Path):
+    text = path.read_text()
+    errors = check_links(path, text)
+    for i, block in enumerate(python_blocks(text)):
+        errors += check_block(block,
+                              f"{_rel(path)}[python block {i}]")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing doc: {f}" for f in missing]
+    checked = 0
+    for f in files:
+        if f.exists():
+            errors += check_file(f)
+            checked += 1
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"docs-health: {checked} files checked, {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -89,6 +89,12 @@ class AquaTensor:
         self._remote_free: Dict[str, List[int]] = {}
         # page_table[lp] = (tier, slot, donor_idx) ; -1 = unallocated
         self.page_table = np.full((n_logical, 3), -1, np.int64)
+        # reference count per logical page: pages shared between block tables
+        # (prefix sharing) are retained once per referencer and their physical
+        # slot is released only when the LAST reference is freed. All physical
+        # accounting (tier_counts, local_free, MemoryError on exhaustion) is
+        # per logical page, so a page shared by N block tables costs one slot.
+        self.page_refs = np.zeros((n_logical,), np.int64)
         # fraction of the page payload that holds live data (partial tails):
         # transfers are metered on valid bytes only, so a request's last,
         # half-filled KV page does not inflate its migration cost.
@@ -125,7 +131,15 @@ class AquaTensor:
     # allocation
     # ------------------------------------------------------------------
     def allocate(self, n: int, prefer: int = LOCAL) -> np.ndarray:
-        """Allocate n logical pages (preferred tier first, then fallbacks)."""
+        """Allocate n logical pages (preferred tier first, then fallbacks).
+
+        Each page starts with refcount 1 (the allocator owns it); sharers
+        call :meth:`retain` to add references.
+
+        Raises:
+            MemoryError: out of logical page ids, or every physical tier is
+                full (``all tiers full``).
+        """
         free_lp = np.nonzero(self.page_table[:, 0] == -1)[0]
         if len(free_lp) < n:
             raise MemoryError(f"{self.name}: out of logical pages")
@@ -134,10 +148,32 @@ class AquaTensor:
             tier, slot, donor = self._take_slot(prefer)
             self.page_table[lp] = (tier, slot, donor)
         self.page_fill[lps] = 1.0
+        self.page_refs[lps] = 1
         return lps
 
-    def free(self, lps: Sequence[int]):
+    def retain(self, lps: Sequence[int]):
+        """Add one reference to each listed page (copy-on-write sharing): the
+        physical slot is released only when every reference is freed."""
+        lps = np.asarray(lps, np.int64)
+        if (self.page_refs[lps] < 1).any():
+            bad = [int(l) for l in lps if self.page_refs[l] < 1]
+            raise ValueError(f"{self.name}: retain of unallocated pages {bad}")
+        self.page_refs[lps] += 1
+
+    def refcounts(self, lps: Sequence[int]) -> np.ndarray:
+        """Current reference count of each listed logical page."""
+        return self.page_refs[np.asarray(lps, np.int64)].copy()
+
+    def free(self, lps: Sequence[int]) -> List[int]:
+        """Drop one reference per listed page; release the physical slot of
+        pages whose count reaches zero. Returns the logical ids actually
+        freed — a page still referenced by another block table survives with
+        its payload intact (the sharer keeps reading it)."""
+        freed: List[int] = []
         for lp in lps:
+            if self.page_refs[lp] > 1:
+                self.page_refs[lp] -= 1
+                continue
             tier, slot, donor = self.page_table[lp]
             if tier == LOCAL:
                 self._free_local.append(int(slot))
@@ -147,6 +183,9 @@ class AquaTensor:
                 self._remote_free[self._donors[donor]].append(int(slot))
             self.page_table[lp] = (-1, -1, -1)
             self.page_fill[lp] = 1.0
+            self.page_refs[lp] = 0
+            freed.append(int(lp))
+        return freed
 
     def set_page_fill(self, lps: Sequence[int], frac):
         """Declare the valid fraction of each page payload (partial tails)."""

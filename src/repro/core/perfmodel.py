@@ -152,6 +152,17 @@ class ModelCost:
         moves on the unified paged runtime, for ANY family."""
         return self.kv_bytes(n_tokens) + self.state_bytes
 
+    def unique_context_bytes(self, n_tokens: float,
+                             shared_tokens: float = 0.0) -> float:
+        """Dedup-aware context footprint: the bytes a request owns
+        EXCLUSIVELY when its first ``shared_tokens`` of KV alias another
+        resident request's pages (copy-on-write prefix sharing). The shared
+        prefix is physical once per group — charge it to whichever sharer
+        is counted first and price every other member (and their page-table
+        tier flips while a sharer stays resident) at this marginal size."""
+        return self.context_bytes(n_tokens) \
+            - self.kv_bytes(min(shared_tokens, n_tokens))
+
 
 def context_switch_time(hw: HardwareProfile, kv_bytes: float, *,
                         tier: str, coalesced: bool = True,

@@ -35,6 +35,13 @@ class Request:
     prompt_len: int
     gen_len: int
     lora_bytes: float = 0.0
+    # copy-on-write prefix sharing: requests with the same prefix_group
+    # alias the physical pages of their common shared_prefix_len-token
+    # prompt prefix — the prefix occupies KV capacity ONCE per group while
+    # any member is resident, and a context switch moves it only when no
+    # other member's pages keep it pinned (mirrors PagedStateRuntime).
+    prefix_group: Optional[int] = None
+    shared_prefix_len: int = 0
     # progress
     generated: int = 0
     prefill_pos: int = 0             # prompt tokens prefilled so far (chunked)
@@ -93,6 +100,11 @@ class ServingSimulator:
         self.paging = paging
         self.lora_cache = lora_cache_bytes
         self.lora_num_adapters = lora_num_adapters
+        # prefix sharing only exists for all-token-plane families: a
+        # recurrent state page summarizes the whole prefix and cannot be
+        # aliased (PagedStateRuntime forces sharing off when state_bytes>0),
+        # so the simulator ignores prefix groups for those models
+        self.prefix_sharing_ok = model.state_bytes == 0.0
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, horizon: float = 1e9) -> SimResult:
@@ -108,16 +120,55 @@ class ServingSimulator:
             # recurrent state planes (nonzero for SSM/hybrid families)
             return self.model.context_bytes(r.prompt_len + r.generated)
 
+        def marginal_bytes(r: Request, groups) -> float:
+            # dedup-aware admission: a member of a prefix group whose shared
+            # pages are already counted (another member in `groups`) costs
+            # only its exclusive context
+            if (self.prefix_sharing_ok and r.prefix_group is not None
+                    and r.prefix_group in groups):
+                return self.model.unique_context_bytes(
+                    r.prompt_len + r.generated,
+                    min(r.shared_prefix_len, r.prompt_len))
+            return kv_bytes(r)
+
         def used_bytes() -> float:
-            return sum(kv_bytes(r) for r in running if r.resident)
+            groups, total = set(), 0.0
+            for r in running:
+                if r.resident:
+                    total += marginal_bytes(r, groups)
+                    if r.prefix_group is not None:
+                        groups.add(r.prefix_group)
+            return total
+
+        def resident_groups() -> set:
+            return {r.prefix_group for r in running
+                    if r.resident and r.prefix_group is not None}
 
         assert self.kv_cap > 0, "model does not fit this serving unit " \
             "(use HardwareProfile.pod_slice for TP-sharded serving)"
         stall = 0
         while (pending or waiting or running) and t < horizon:
-            # admit arrivals
+            # admit arrivals. Prefix sharing adopts at arrival (mirroring
+            # the engine's submit-time index lookup): an arriving member of
+            # a prefix group whose shared prefix some member already wrote
+            # skips those chunks (>= 1 position remains for the first-token
+            # logits, as in the engine).
             while pending and pending[0].arrival <= t:
-                waiting.append(pending.pop(0))
+                r = pending.pop(0)
+                skip = min(r.shared_prefix_len, r.prompt_len - 1)
+                # adoptable only from a member that STILL HOLDS pages
+                # covering the skipped prefix (unfinished — the engine drops
+                # index entries when the last sharer frees its pages) and
+                # that has actually written that much of it
+                if (self.prefix_sharing_ok and r.prefix_group is not None
+                        and skip > 0
+                        and any(o is not r
+                                and o.prefix_group == r.prefix_group
+                                and o.finish is None
+                                and o.prefill_pos >= skip
+                                for o in requests)):
+                    r.prefill_pos = skip
+                waiting.append(r)
             if not running and not waiting:
                 t = pending[0].arrival
                 continue
@@ -136,37 +187,63 @@ class ServingSimulator:
             step_time = 0.0
             pagein_time = 0.0
             if self.scheduler == "vllm":
-                # FCFS admission while KV fits
+                # FCFS admission while KV fits (physical bytes: a shared
+                # prefix already resident via its group is not re-counted)
                 for r in list(waiting):
-                    if used_bytes() + kv_bytes(r) <= self.kv_cap \
+                    if used_bytes() + marginal_bytes(r, resident_groups()) \
+                            <= self.kv_cap \
                             and len(running) < self.max_running:
                         waiting.remove(r)
                         r.resident = True
                         running.append(r)
                 ntok = 1
             else:  # cfs
-                # slice boundary: fair-pick the least-served prompts
+                # slice boundary: fair-pick the least-served prompts under
+                # the PHYSICAL byte budget (marginal cost per prefix group)
                 candidates = running + waiting
                 candidates.sort(key=lambda r: (r.generated, r.arrival))
                 nxt = []
                 acc = 0.0
+                groups: set = set()
                 for r in candidates:
-                    b = kv_bytes(r)
+                    b = marginal_bytes(r, groups)
                     if acc + b > self.kv_cap or len(nxt) >= self.max_running:
                         continue
                     acc += b
                     nxt.append(r)
-                # page out the preempted, page in the scheduled
+                    if r.prefix_group is not None:
+                        groups.add(r.prefix_group)
+                # page out the preempted, page in the scheduled. A shared
+                # prefix moves ONCE per group: it stays pinned while any
+                # member remains scheduled, and when a whole group parks,
+                # only the first member's switch carries the prefix bytes.
+                nxt_groups = {r.prefix_group for r in nxt
+                              if r.prefix_group is not None}
+                moved_groups: set = set()
                 for r in running:
                     if r not in nxt and r.resident:
-                        step_time += self._switch_time(r, direction="out")
+                        pinned = (r.prefix_group is not None
+                                  and (r.prefix_group in nxt_groups
+                                       or r.prefix_group in moved_groups))
+                        step_time += self._switch_time(r, direction="out",
+                                                       shared_pinned=pinned)
+                        if r.prefix_group is not None:
+                            moved_groups.add(r.prefix_group)
                         r.resident = False
+                in_groups = {r.prefix_group for r in nxt
+                             if r.resident and r.prefix_group is not None}
                 for r in nxt:
                     # anything with resident KV pays the page-in: a request
                     # parked MID-prefill moves its prefill_pos-token prefix
+                    # (minus a shared prefix some member already restored)
                     if not r.resident and (r.prefilled or r.prefill_pos > 0):
-                        pagein_time += self._switch_time(r, direction="in")
+                        pinned = (r.prefix_group is not None
+                                  and r.prefix_group in in_groups)
+                        pagein_time += self._switch_time(r, direction="in",
+                                                         shared_pinned=pinned)
                     r.resident = True
+                    if r.prefix_group is not None:
+                        in_groups.add(r.prefix_group)
                 waiting = [r for r in candidates if r not in nxt]
                 running = nxt
                 ntok = self.slice_tokens
@@ -236,12 +313,18 @@ class ServingSimulator:
         return SimResult(requests, timeline)
 
     # ------------------------------------------------------------------
-    def _switch_time(self, r: Request, direction: str) -> float:
+    def _switch_time(self, r: Request, direction: str,
+                     shared_pinned: bool = False) -> float:
         # resident context only: a mid-prefill request moves just the chunked
         # prefix it has written so far (prefill_pos == prompt_len once done)
-        # plus its fixed state pages (SSM/hybrid recurrent leaves)
-        kv = self.model.context_bytes(
-            (r.prefill_pos if not r.prefilled else r.prompt_len) + r.generated)
+        # plus its fixed state pages (SSM/hybrid recurrent leaves).
+        # shared_pinned: the request's shared prefix pages stay put (another
+        # group member keeps them resident, or they already moved this
+        # round) — only the exclusive context flips tiers.
+        ctx = (r.prefill_pos if not r.prefilled else r.prompt_len) + r.generated
+        shared = (min(r.shared_prefix_len, ctx)
+                  if shared_pinned and self.prefix_sharing_ok else 0.0)
+        kv = self.model.unique_context_bytes(ctx, shared)
         if self.paging == "paged" and self.coalesced:
             # page-native runtime: tier flip of the page payload, one message
             # per (tier, donor) group — no repack gather

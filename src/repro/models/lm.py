@@ -178,8 +178,19 @@ def paged_layout(cfg: ModelConfig) -> dict:
         ``(d_conv-1, di)`` native; ``wkv``: ``(H, hd, hd)`` f32; ``shift``:
         ``(2, d_model)`` native (rows: time-mix / channel-mix shifts).
 
-    Returns ``{name: {"kind", "positions", "dtype", ...}}`` where token
-    planes carry ``dims`` + ``token_bytes`` and state planes carry ``shape``.
+    Token planes are SHAREABLE (``"shareable": True``): their pages are
+    position-addressed and immutable once prefill has written them, so two
+    requests with a common page-aligned prompt prefix can alias the same
+    physical pages and a prefill chunk may start past the shared prefix
+    (``q_start > 0`` on its first chunk — the block tables carry the shared
+    pages, so attention/MLA reads cover them without recomputation). State
+    planes are NOT shareable: a recurrent state page is rewritten on every
+    chunk/decode step and summarizes the whole prefix, so the runtime
+    disables prefix sharing for any family that owns one.
+
+    Returns ``{name: {"kind", "positions", "dtype", "shareable", ...}}``
+    where token planes carry ``dims`` + ``token_bytes`` and state planes
+    carry ``shape``.
     """
     assert supports_paged(cfg), f"{cfg.name}: not paged-servable"
     from repro.layers import mamba as _mam
@@ -194,22 +205,24 @@ def paged_layout(cfg: ModelConfig) -> dict:
         kind = mixer_kind(cfg, i)
         if kind == "attn":
             add("kv", i, kind="tokens", dtype=native, dims=(K, hd),
-                token_bytes=2 * K * hd * native.itemsize)
+                token_bytes=2 * K * hd * native.itemsize, shareable=True)
         elif kind == "mla":
             C = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
             add("mla", i, kind="tokens", dtype=native, dims=(C,),
-                token_bytes=C * native.itemsize)
+                token_bytes=C * native.itemsize, shareable=True)
         elif kind == "mamba":
             di, ds, dc, _ = _mam._dims(cfg)
             add("ssm", i, kind="state", dtype=jnp.dtype(jnp.float32),
-                shape=(di, ds))
-            add("conv", i, kind="state", dtype=native, shape=(dc - 1, di))
+                shape=(di, ds), shareable=False)
+            add("conv", i, kind="state", dtype=native, shape=(dc - 1, di),
+                shareable=False)
         elif kind == "rwkv":
             rhd = cfg.ssm.rwkv_head_dim
             H = cfg.d_model // rhd
             add("wkv", i, kind="state", dtype=jnp.dtype(jnp.float32),
-                shape=(H, rhd, rhd))
-            add("shift", i, kind="state", dtype=native, shape=(2, cfg.d_model))
+                shape=(H, rhd, rhd), shareable=False)
+            add("shift", i, kind="state", dtype=native,
+                shape=(2, cfg.d_model), shareable=False)
         else:  # pragma: no cover — guarded by supports_paged
             raise ValueError(f"{cfg.name}: sub-layer {i} ({kind}) has no "
                              "page plane")

@@ -91,12 +91,42 @@ class ServingEngine:
                  kv_page_tokens: int = 8,
                  kv_local_pages: Optional[int] = None,
                  kv_host_pages: int = 8192,
+                 prefix_sharing: bool = True,
                  paged_impl: str = "pallas",
                  step_tokens: Optional[int] = None,
                  prefetch: bool = True,
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
                  want_remote_bytes: float = 0.0, respond_every: int = 4):
+        """Build a serving engine on the unified paged state runtime.
+
+        Args:
+            cfg: model config (must be paged-servable) and ``params`` its
+                weights pytree.
+            max_running: batch slots (concurrent decode lanes).
+            max_seq: maximum context length per request.
+            scheduler: ``"cfs"`` (fair, preempting) or ``"fcfs"``.
+            slice_tokens: CFS fair-pick period in generated tokens.
+            offload_tier: preferred park tier (``REMOTE`` fabric / ``HOST``).
+            kv: an existing :class:`PagedStateRuntime` to serve on; by
+                default one is built from the ``kv_*`` sizing knobs.
+            prefix_sharing: enable copy-on-write prompt-prefix sharing
+                (effective only on all-token-plane families).
+            paged_impl: ``"pallas"`` kernels (interpret on CPU) or the
+                ``"xla"`` jnp oracles.
+            step_tokens: per-step token budget for chunked prefill
+                (``None`` = whole-prompt chunks); must be >= 8.
+            prefetch: overlap next-step page restores with compute.
+            coordinator/want_remote_bytes/respond_every: AQUA-LIB consumer
+                wiring — lease donor HBM at construction, poll reclaims
+                every ``respond_every`` steps.
+            name: engine id used in coordinator bookkeeping and errors.
+            hw: hardware profile pricing the simulated clock.
+
+        Raises:
+            ValueError: the family is not paged-servable, or
+                ``step_tokens < 8``.
+        """
         self.cfg = cfg
         self.params = params
         self.max_running = max_running
@@ -122,7 +152,7 @@ class ServingEngine:
         self.kv = kv or PagedStateRuntime(
             cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
             local_pages=kv_local_pages, host_pages=kv_host_pages,
-            max_running=max_running)
+            max_running=max_running, prefix_sharing=prefix_sharing)
         self.pager = self.kv
         # the scheduler plans in PAGES (a per-plane cost vector). CFS
         # revisits the run set every slice, so it budgets one slice of
@@ -160,28 +190,77 @@ class ServingEngine:
         self.metrics = EngineMetrics()
         self._rid = itertools.count()
 
-    def _page_cost_cfs(self, r: ReqState) -> np.ndarray:
-        """Per-plane pages the request needs LOCAL through the next slice
-        boundary: context now plus one slice of growth (CFS re-plans every
-        slice)."""
-        return self.kv.pages_per_request(
-            min(r.ctx_len + self.slice_tokens, self.max_seq))
+    def _shared_discount(self, r: ReqState,
+                         chosen: Sequence[ReqState]) -> np.ndarray:
+        """PHYSICAL pages this request aliases with the run set chosen so
+        far (counted once by the sharer already picked), minus the headroom
+        a pending copy-on-write recompute may claim back."""
+        if not self.kv.sharing or not chosen:
+            return np.zeros(len(self.kv.planes), np.int64)
+        disc = self.kv.shared_pages_with(
+            r.rid, [o.rid for o in chosen if o.rid != r.rid])
+        if r.shared_tokens and r.prefill_pos < r.shared_tokens:
+            # the final-position recompute of a fully-matched prompt CoWs
+            # the tail shared page in every layer row of each token plane
+            disc = np.maximum(disc - self.kv.cow_reserve(), 0)
+        return disc
 
-    def _page_cost_fcfs(self, r: ReqState) -> np.ndarray:
+    def _page_cost_cfs(self, r: ReqState,
+                       chosen: Sequence[ReqState] = ()) -> np.ndarray:
+        """Per-plane PHYSICAL pages the request needs LOCAL through the next
+        slice boundary: context now plus one slice of growth (CFS re-plans
+        every slice), minus pages shared with the run set chosen so far —
+        shared prefixes directly raise admission capacity."""
+        base = self.kv.pages_per_request(
+            min(r.ctx_len + self.slice_tokens, self.max_seq))
+        return base - self._shared_discount(r, chosen)
+
+    def _page_cost_fcfs(self, r: ReqState,
+                        chosen: Sequence[ReqState] = ()) -> np.ndarray:
         """FCFS never preempts: an admitted request holds LOCAL pages until
-        it completes, so budget its full remaining generation."""
+        it completes, so budget its full remaining generation (minus pages
+        shared with already-admitted sharers, which stay allocated for as
+        long as any referencer lives)."""
         remaining = r.max_new_tokens - len(r.generated)
-        return self.kv.pages_per_request(
+        base = self.kv.pages_per_request(
             min(r.ctx_len + max(remaining, 0), self.max_seq))
+        return base - self._shared_discount(r, chosen)
 
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens: Sequence[int], max_new_tokens: int,
                arrival: float = 0.0, lora_id: Optional[int] = None,
                prefix_embeds=None) -> ReqState:
-        """Queue a request. For a VLM config (``cfg.n_prefix_embeds > 0``)
-        ``prefix_embeds`` is the (n_prefix, d) / (1, n_prefix, d) patch-
-        embedding block occupying the prompt's first positions; omitted, it
-        defaults to zeros (the stub frontend's null image)."""
+        """Queue a request for generation.
+
+        If prefix sharing is enabled (the default on all-token-plane
+        families) the prompt is matched against the runtime's prefix index
+        here: the longest page-aligned prefix another live request already
+        wrote is ADOPTED — the new request's block tables alias those
+        physical pages (refcounted, copy-on-write) and its chunked prefill
+        starts past the shared prefix (``ReqState.shared_tokens``,
+        ``prefill_pos``). At least the final prompt position is always
+        recomputed so the first-token logits exist.
+
+        Args:
+            prompt_tokens: prompt token ids (ints).
+            max_new_tokens: tokens to generate before the request retires.
+            arrival: arrival timestamp on the simulated clock (TTFT/RCT are
+                reported relative to it).
+            lora_id: adapter id; partitions the prefix index (the same
+                tokens under a different adapter never alias).
+            prefix_embeds: for a VLM config (``cfg.n_prefix_embeds > 0``)
+                the (n_prefix, d) / (1, n_prefix, d) patch-embedding block
+                occupying the prompt's first positions; omitted, it defaults
+                to zeros (the stub frontend's null image). VLM requests
+                never share prefixes (the image is not in the hash).
+
+        Returns:
+            The queued :class:`ReqState` (its ``generated`` list fills in
+            as the engine steps).
+
+        Raises:
+            ValueError: ``prefix_embeds`` passed to a non-VLM config.
+        """
         r = ReqState(next(self._rid), arrival, list(map(int, prompt_tokens)),
                      max_new_tokens, lora_id=lora_id)
         if self.cfg.n_prefix_embeds:
@@ -193,6 +272,15 @@ class ServingEngine:
             r.prefix_embeds = prefix_embeds
         elif prefix_embeds is not None:
             raise ValueError(f"{self.cfg.name} takes no prefix embeds")
+        if self.kv.sharing and not r.n_prefix:
+            shared = self.kv.adopt_prefix(r.rid, r.prompt_tokens,
+                                          seed=lora_id)
+            if shared:
+                r.shared_tokens = shared
+                # always leave >= 1 position to compute: the last chunk
+                # produces the first-token logits (a full match recomputes
+                # the final position, CoW-cloning the tail shared page)
+                r.prefill_pos = min(shared, r.prompt_positions - 1)
         self.waiting.append(r)
         return r
 
@@ -209,6 +297,26 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self):
+        """Run ONE engine step: plan the run set, execute the plan, decode.
+
+        In order: (1) poll coordinator reclaims every ``respond_every``
+        steps; (2) ``sched.plan`` picks the run set under the physical-page
+        budget; (3) ``_place`` parks preempted requests (page-table tier
+        flips), slots + restores scheduled ones, and runs this step's
+        prompt chunks under the ``step_tokens`` budget; (4) one decode token
+        for every resident prefilled request; (5) finished requests retire
+        (pages released — shared prefix pages survive while any sharer
+        lives); (6) next step's restores are prefetched, priced as hidden
+        up to this step's compute time. Metrics (TTFT/RCT on the simulated
+        clock, step times, fairness spread) accrue on ``self.metrics``.
+
+        Raises:
+            SchedulingInvariantError: the planned run set needs more batch
+                slots than exist — a scheduler bug, never silent.
+            MemoryError: a page allocation or tier flip found every slot of
+                the target tier full (the page-budget-aware schedulers are
+                designed to keep plans below this point).
+        """
         m = self.metrics
         if self.coord is not None and m.steps % self.respond_every == 0:
             self._respond()
@@ -357,6 +465,9 @@ class ServingEngine:
         and whose residual rows come from ``prefix_embeds`` instead."""
         start = r.prefill_pos
         self.kv.ensure_capacity(r.rid, start + n_tokens)
+        # copy-on-write: a fully-matched prompt recomputes its final
+        # position INTO the shared tail page — clone it first
+        self.kv.make_writable(r.rid, start, start + n_tokens)
         Tb = bucket_tokens(n_tokens)         # shape bucket, not exact length
         toks = np.zeros((1, Tb), np.int32)
         idx = np.arange(n_tokens) + start - r.n_prefix
@@ -370,6 +481,10 @@ class ServingEngine:
             prefix_embeds=r.prefix_embeds,
             read_pps=self.kv.pps, impl=self.paged_impl)
         r.prefill_pos = start + n_tokens
+        if not r.n_prefix:
+            # publish completed full prompt pages into the prefix index so
+            # later arrivals with the same prefix adopt them
+            self.kv.register_prefix(r.rid, r.prefill_pos)
         if r.prefilled:
             r.generated.append(int(jnp.argmax(logits[0])))
         return self.cost.prefill_time(self.hw, n_tokens)
@@ -381,8 +496,10 @@ class ServingEngine:
         for r in live:
             # the new token's position may cross into a fresh page: grow the
             # block tables (allocation guarantees LOCAL; parked requests
-            # were already restored in _place)
+            # were already restored in _place). A decode append landing in
+            # a still-shared page copies it first (CoW).
             self.kv.ensure_capacity(r.rid, r.ctx_len)
+            self.kv.make_writable(r.rid, r.ctx_len - 1, r.ctx_len)
             lanes[r.slot] = r.rid
             tokens[r.slot] = (r.generated[-1] if r.generated
                               else r.prompt_tokens[-1])
@@ -400,6 +517,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 1000):
+        """Step until every submitted request finished (or ``max_steps``);
+        honors pending coordinator reclaims before returning. Returns the
+        engine's :class:`EngineMetrics`."""
         for _ in range(max_steps):
             if not (self.waiting or self.running):
                 break

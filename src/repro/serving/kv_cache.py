@@ -29,6 +29,21 @@ Partial token-plane tails are metered at their valid fraction, so a parked
 request moves exactly its native-dtype context footprint. The seed-era dense
 blob-store shim this replaces is deleted; there is exactly one way a
 request's state moves between tiers.
+
+PREFIX SHARING (copy-on-write): the same by-reference insight applies
+*within* the resident tier. A prefix index (hash chain over page-aligned
+prompt token blocks) lets ``adopt_prefix`` map a new request's block tables
+onto the physical pages another request already wrote for the same prompt
+prefix — the sharer skips those chunks in the chunked-prefill pipeline and
+its first chunk starts past the shared prefix. Shared pages are refcounted
+in the AquaTensor (``page_refs``), pinned LOCAL while any referencer is
+active, moved between tiers ONCE however many block tables point at them,
+and copied on write (``make_writable``) the moment a sharer must write into
+one (recomputing the final prompt position of a fully-matched prompt, or a
+decode append landing in a shared tail). Sharing is enabled only when every
+plane is ``shareable`` (token planes: position-addressed, immutable once
+written); families with recurrent state planes opt out — a state page
+summarizes the whole prefix and is rewritten every step.
 """
 from __future__ import annotations
 
@@ -54,6 +69,11 @@ class _Plane:
     token_bytes: int = 0             # per-layer bytes/token (token planes)
     scratch_lp: int = 0
     pages: Dict[int, List[List[int]]] = field(default_factory=dict)
+    # LOCAL pin count per logical page: how many ACTIVE (unparked)
+    # requests reference it. park() may only offload pages whose pin
+    # reaches zero — a shared prefix page stays LOCAL while any sharer
+    # still runs, and moves tiers exactly once when the last sharer parks.
+    pin: Dict[int, int] = field(default_factory=dict)
 
     @property
     def scratch_slot(self) -> int:
@@ -64,13 +84,51 @@ class _Plane:
                            for lp in row], np.int64)
 
 
+def _hash_blocks(tokens: Sequence[int], page_tokens: int,
+                 seed: object = None) -> List[int]:
+    """Chain-hash a prompt's FULL page-aligned token blocks: entry ``i``
+    identifies the whole prefix ``tokens[:(i+1)*page_tokens]`` (each link
+    hashes the previous link plus its own block), so a single dict lookup per
+    page walks the longest shared prefix. ``seed`` partitions the key space
+    (e.g. by LoRA adapter — the same tokens under a different adapter
+    produce different K/V and must never alias)."""
+    out: List[int] = []
+    h = hash(("aqua-prefix", seed))
+    for i in range(len(tokens) // page_tokens):
+        h = hash((h, tuple(tokens[i * page_tokens:(i + 1) * page_tokens])))
+        out.append(h)
+    return out
+
+
 class PagedStateRuntime:
     """Family-agnostic block-table state manager on tiered AquaTensor pools."""
 
     def __init__(self, cfg: ModelConfig, *, max_seq: int,
                  page_tokens: int = 8, local_pages: Optional[int] = None,
                  host_pages: int = 8192, n_logical: int = 16384,
-                 max_running: int = 4, meter: Optional[TransferMeter] = None):
+                 max_running: int = 4, meter: Optional[TransferMeter] = None,
+                 prefix_sharing: bool = True):
+        """Build one AquaTensor pool per page plane of ``cfg``'s family.
+
+        Args:
+            cfg: model config; must be paged-servable (``lm.supports_paged``).
+            max_seq: maximum context length a request may reach; sizes the
+                per-request block tables (``pps`` pages per layer).
+            page_tokens: tokens per token-plane page.
+            local_pages: LOCAL slots of each token plane (the admission
+                budget the schedulers plan against); default sizes for
+                ``max_running`` full-length requests.
+            host_pages: host-tier slots per plane (the PCIe fallback).
+            n_logical: logical page ids per plane.
+            max_running: used only to size default pools.
+            meter: shared ``TransferMeter``; a fresh one by default.
+            prefix_sharing: enable the copy-on-write prefix index. Forced
+                off when any plane is not ``shareable`` (recurrent state).
+
+        Raises:
+            ValueError: the family has a sub-layer with no page plane
+                (windowed ring buffers, logit softcap, encoder-decoder).
+        """
         from repro.models import lm
         if not lm.supports_paged(cfg):
             raise ValueError(f"{cfg.name}: not paged-servable (windowed "
@@ -84,7 +142,30 @@ class PagedStateRuntime:
         self.pps = math.ceil(max_seq / page_tokens)
         self.meter = meter or TransferMeter()
         self.planes: Dict[str, _Plane] = {}
-        for name, spec in lm.paged_layout(cfg).items():
+        layout = lm.paged_layout(cfg)
+        # prefix sharing requires every plane to be position-addressed and
+        # immutable once written (token planes); one recurrent state plane
+        # disables it for the whole family — skipping a shared chunk would
+        # skip its state recurrence
+        self.sharing = bool(prefix_sharing) and all(
+            spec.get("shareable", False) for spec in layout.values())
+        # prefix index: chain hash -> {plane: (n_layers,) logical page ids,
+        # "_prefix": the exact token prefix, "_seed": the hash seed}. The
+        # stored prefix is compared verbatim on every match — a chain-hash
+        # collision can never alias one prompt's KV into another's block
+        # tables. Entries are backed by live requests' refcounts (no owner
+        # of their own) and dropped the moment their backing pages are freed.
+        self._index: Dict[int, Dict[str, object]] = {}
+        self._lp_entry: Dict[Tuple[str, int], int] = {}
+        self._req_hashes: Dict[int, List[int]] = {}
+        self._req_tokens: Dict[int, Tuple[int, ...]] = {}
+        self._req_seed: Dict[int, object] = {}
+        self._req_registered: Dict[int, int] = {}
+        self._active: set = set()
+        self.prefix_hits = 0
+        self.adopted_tokens = 0
+        self.cow_copies = 0
+        for name, spec in layout.items():
             n_sub = len(spec["positions"])
             n_layers = self.G * n_sub
             if spec["kind"] == "tokens":
@@ -182,20 +263,51 @@ class PagedStateRuntime:
         for n, pool in value.items():
             self.planes[n].aqua.local_pool = pool
 
+    # -- activation bookkeeping (LOCAL pins) -------------------------------
+    def _unpin(self, plane: _Plane, lp: int):
+        c = plane.pin.get(lp, 0) - 1
+        if c <= 0:
+            plane.pin.pop(lp, None)
+        else:
+            plane.pin[lp] = c
+
+    def _activate(self, rid: int):
+        """Mark the request active: pull every page it references LOCAL
+        (adopted prefix pages may sit on another tier) and pin them there —
+        a pinned page is never offloaded by another sharer's park."""
+        if rid in self._active:
+            return
+        self._active.add(rid)
+        for plane in self.planes.values():
+            lps = plane.flat(rid)
+            if len(lps):
+                plane.aqua.ensure_local(lps)
+                plane.aqua.set_page_fill(lps, 1.0)
+                for lp in lps:
+                    lp = int(lp)
+                    plane.pin[lp] = plane.pin.get(lp, 0) + 1
+
     # -- allocation -------------------------------------------------------
     def ensure_capacity(self, rid: int, n_tokens: int):
-        """Grow the request's block tables to cover n_tokens: token planes
-        add pages as the context crosses page boundaries; state planes
-        allocate their fixed page set on first touch (zeroed — a freed slot
-        may hold a previous occupant's state, and the zero page IS the
-        initial recurrent state).
+        """Grow the request's block tables to cover ``n_tokens`` of context.
+
+        Token planes add pages as the context crosses page boundaries
+        (adopted shared-prefix pages already in the tables count toward the
+        need); state planes allocate their fixed page set on first touch
+        (zeroed — a freed slot may hold a previous occupant's state, and the
+        zero page IS the initial recurrent state). Implicitly activates the
+        request: its existing pages are pulled LOCAL and pinned.
 
         New pages must be LOCAL (the step programs read the LOCAL pools): if
         the allocator had to spill a fresh page to another tier the LOCAL
         pool is full and no later step could pull it back either, so fail
         loudly here with the tensor/tier MemoryError. The page-budget-aware
         schedulers are designed to keep planned run sets below this point.
+
+        Raises:
+            MemoryError: a fresh page cannot be placed (or kept) LOCAL.
         """
+        self._activate(rid)
         for plane in self.planes.values():
             rows = plane.pages.setdefault(
                 rid, [[] for _ in range(plane.n_layers)])
@@ -207,6 +319,7 @@ class PagedStateRuntime:
                     if plane.aqua.page_table[lp, 0] != LOCAL:
                         plane.aqua.ensure_local([lp])  # raises: LOCAL is full
                     row.append(lp)
+                    plane.pin[lp] = plane.pin.get(lp, 0) + 1
                     if plane.kind == "state":
                         fresh.append(lp)
             if fresh:
@@ -215,10 +328,205 @@ class PagedStateRuntime:
                                      plane.aqua.dtype))
 
     def release(self, rid: int):
+        """Drop the request's references: pages it shares with a live
+        request survive (the sharer keeps reading them — they are never
+        zeroed or reused while referenced); exclusively-owned pages are
+        freed, and any prefix-index entries they backed are dropped so a
+        recycled logical id can never serve a stale prefix match."""
         for plane in self.planes.values():
-            if rid in plane.pages:
-                plane.aqua.free(plane.flat(rid))
-                del plane.pages[rid]
+            if rid not in plane.pages:
+                continue
+            lps = plane.flat(rid)
+            if rid in self._active:
+                for lp in lps:
+                    self._unpin(plane, int(lp))
+            for lp in plane.aqua.free(lps):
+                self._drop_index_entry(plane.name, lp)
+            del plane.pages[rid]
+        self._active.discard(rid)
+        self._req_hashes.pop(rid, None)
+        self._req_tokens.pop(rid, None)
+        self._req_seed.pop(rid, None)
+        self._req_registered.pop(rid, None)
+
+    def _drop_index_entry(self, plane_name: str, lp: int):
+        h = self._lp_entry.pop((plane_name, int(lp)), None)
+        if h is None:
+            return
+        entry = self._index.pop(h, None)
+        if entry:
+            for name, lps in entry.items():
+                if name.startswith("_"):
+                    continue
+                for e in lps:
+                    self._lp_entry.pop((name, int(e)), None)
+
+    # -- prefix sharing (refcounted copy-on-write pages) -------------------
+    def adopt_prefix(self, rid: int, tokens: Sequence[int],
+                     seed: object = None) -> int:
+        """Map a new request's block tables onto already-resident pages for
+        the longest indexed page-aligned prefix of ``tokens``.
+
+        For every matched page the physical page is RETAINED (refcount + 1)
+        and its logical id appended to this request's block-table rows in
+        every plane — the chunked-prefill pipeline then starts past the
+        shared prefix (the engine sets ``prefill_pos`` accordingly). Must be
+        called before the request's first ``ensure_capacity``. Also caches
+        the prompt's block-hash chain so the request's own full pages can be
+        registered as it prefills (``register_prefix``).
+
+        Args:
+            rid: the request id (no pages allocated yet).
+            tokens: the full prompt token ids.
+            seed: extra hash seed partitioning the index (e.g. lora_id).
+
+        Returns:
+            Matched prefix length in TOKENS (a multiple of ``page_tokens``;
+            0 when sharing is disabled or nothing matches). The caller must
+            still compute at least the final prompt position for logits —
+            on a full match that recompute write triggers copy-on-write of
+            the tail page (``make_writable``).
+        """
+        if not self.sharing:
+            return 0
+        hashes = _hash_blocks(tokens, self.page_tokens, seed)
+        self._req_hashes[rid] = hashes
+        self._req_tokens[rid] = tuple(map(int, tokens))
+        self._req_seed[rid] = seed
+        n = 0
+        for p, h in enumerate(hashes):
+            entry = self._index.get(h)
+            if (entry is None or entry["_seed"] != seed
+                    or entry["_prefix"] != self._req_tokens[rid]
+                    [:(p + 1) * self.page_tokens]):
+                break                   # miss (or a chain-hash collision)
+            n += 1
+        self._req_registered[rid] = n
+        if n == 0:
+            return 0
+        if any(rid in p.pages for p in self.planes.values()):
+            raise ValueError(f"adopt_prefix({rid}) after pages were "
+                             "allocated — adoption must precede the first "
+                             "ensure_capacity")
+        for name, plane in self.planes.items():
+            rows = plane.pages.setdefault(
+                rid, [[] for _ in range(plane.n_layers)])
+            for p in range(n):
+                lps = self._index[hashes[p]][name]
+                plane.aqua.retain(lps)
+                for l in range(plane.n_layers):
+                    rows[l].append(int(lps[l]))
+        self.prefix_hits += 1
+        self.adopted_tokens += n * self.page_tokens
+        return n * self.page_tokens
+
+    def register_prefix(self, rid: int, n_tokens: int):
+        """Publish the request's completed full prompt pages into the prefix
+        index (up to ``n_tokens`` positions written so far). Pages adopted
+        from the index are already there; decode-written pages are never
+        registered (the hash chain covers prompt blocks only). No-op unless
+        ``adopt_prefix`` cached the request's hash chain."""
+        hashes = self._req_hashes.get(rid)
+        if not self.sharing or hashes is None:
+            return
+        n_full = min(n_tokens // self.page_tokens, len(hashes))
+        start = self._req_registered.get(rid, 0)
+        for p in range(start, n_full):
+            h = hashes[p]
+            if h in self._index:        # a concurrent twin won the race
+                continue
+            entry: Dict[str, object] = {
+                "_prefix": self._req_tokens[rid][:(p + 1) * self.page_tokens],
+                "_seed": self._req_seed.get(rid),
+            }
+            for name, plane in self.planes.items():
+                rows = plane.pages.get(rid)
+                if rows is None or len(rows[0]) <= p:
+                    return
+                entry[name] = np.asarray(
+                    [rows[l][p] for l in range(plane.n_layers)], np.int64)
+            self._index[h] = entry
+            for name, lps in entry.items():
+                if name.startswith("_"):
+                    continue
+                for lp in lps:
+                    self._lp_entry[(name, int(lp))] = h
+        self._req_registered[rid] = max(start, n_full)
+
+    def make_writable(self, rid: int, start: int, end: int):
+        """Copy-on-write: before the request writes token positions
+        ``[start, end)``, clone any covered page it SHARES (refcount > 1)
+        into a fresh exclusive LOCAL page and repoint only this request's
+        block-table row at the clone. The other referencers (and the prefix
+        index) keep the original — a sharer's write can never corrupt the
+        prefix another request is still reading.
+
+        Raises:
+            MemoryError: no LOCAL slot is free for a clone.
+        """
+        if not self.sharing or end <= start:
+            return
+        p0, p1 = start // self.page_tokens, (end - 1) // self.page_tokens
+        for plane in self.planes.values():
+            if plane.kind != "tokens":
+                continue
+            rows = plane.pages.get(rid)
+            if not rows:
+                continue
+            for row in rows:
+                for p in range(p0, min(p1 + 1, len(row))):
+                    lp = int(row[p])
+                    if int(plane.aqua.refcounts([lp])[0]) <= 1:
+                        continue
+                    new = int(plane.aqua.allocate(1, prefer=LOCAL)[0])
+                    if plane.aqua.page_table[new, 0] != LOCAL:
+                        plane.aqua.ensure_local([new])
+                    plane.aqua.write_local([new], plane.aqua.read([lp]))
+                    if rid in self._active:
+                        self._unpin(plane, lp)
+                        plane.pin[new] = plane.pin.get(new, 0) + 1
+                    plane.aqua.free([lp])      # deref; sharers keep it
+                    row[p] = new
+                    self.cow_copies += 1
+
+    def shared_pages_with(self, rid: int, other_rids: Sequence[int]
+                          ) -> np.ndarray:
+        """Per-plane count of this request's pages also referenced by any of
+        ``other_rids`` — the physical-page discount the schedulers apply
+        when budgeting a run set that contains both sharers."""
+        out = []
+        for plane in self.planes.values():
+            mine = plane.pages.get(rid)
+            if not mine:
+                out.append(0)
+                continue
+            mine_set = {lp for row in mine for lp in row}
+            shared = set()
+            for o in other_rids:
+                for row in plane.pages.get(o, []):
+                    shared.update(mine_set.intersection(row))
+            out.append(len(shared))
+        return np.asarray(out, np.int64)
+
+    def cow_reserve(self) -> np.ndarray:
+        """Per-plane pages a pending copy-on-write may allocate (one clone
+        per layer row of each token plane): the scheduler headroom for a
+        fully-matched request that must still recompute its final prompt
+        position."""
+        return np.asarray([p.n_layers if p.kind == "tokens" else 0
+                           for p in self.planes.values()], np.int64)
+
+    def physical_pages(self) -> Dict[str, int]:
+        """Allocated PHYSICAL pages per plane (a page shared by N block
+        tables counts once) — what eviction and MemoryError accounting see."""
+        return {n: int((p.aqua.page_table[:, 0] != -1).sum())
+                for n, p in self.planes.items()}
+
+    def logical_pages(self) -> Dict[str, int]:
+        """Block-table page references per plane (a page shared by N block
+        tables counts N times) — the unshared footprint for comparison."""
+        return {n: sum(len(row) for rows in p.pages.values() for row in rows)
+                for n, p in self.planes.items()}
 
     # -- block tables (the step-program operands) --------------------------
     def block_tables_prefill(self, rid: int, pad_to: Optional[int] = None
@@ -275,6 +583,12 @@ class PagedStateRuntime:
         engine request at ctx_len that is ctx_len-1: the newest token's
         state lands at its next decode step). A token page allocated ahead
         of a boundary but not yet written moves at fill 0.
+
+        Shared pages move ONCE: parking drops this request's LOCAL pin, and
+        only pages whose pin count reaches zero (no other active sharer) are
+        offloaded — a shared prefix page leaves LOCAL when its LAST active
+        referencer parks, and is metered full (its payload is complete
+        whatever this request's own resident prefix is).
         """
         for plane in self.planes.values():
             if rid not in plane.pages:
@@ -284,17 +598,27 @@ class PagedStateRuntime:
                     fills = np.clip(
                         n_tokens - np.arange(len(row)) * self.page_tokens,
                         0, self.page_tokens) / self.page_tokens
+                    # shared prefix pages are always fully written (only
+                    # full prompt pages enter the index)
+                    fills = np.where(plane.aqua.refcounts(row) > 1,
+                                     1.0, fills)
                     plane.aqua.set_page_fill(row, fills)
-            plane.aqua.offload(plane.flat(rid), prefer=prefer)
+            lps = plane.flat(rid)
+            if rid in self._active:
+                for lp in lps:
+                    self._unpin(plane, int(lp))
+            victims = [int(lp) for lp in lps
+                       if plane.pin.get(int(lp), 0) == 0]
+            if victims:
+                plane.aqua.offload(np.asarray(victims, np.int64),
+                                   prefer=prefer)
+        self._active.discard(rid)
 
     def restore(self, rid: int):
-        """Make every page of the request LOCAL (no-op when already there)."""
-        for plane in self.planes.values():
-            if rid not in plane.pages:
-                continue
-            plane.aqua.ensure_local(plane.flat(rid))
-            for row in plane.pages[rid]:
-                plane.aqua.set_page_fill(row, 1.0)
+        """Make every page of the request LOCAL and pin it there (no bytes
+        move for pages a still-active sharer kept LOCAL); resets token-page
+        fills to 1.0. No-op when the request is already active."""
+        self._activate(rid)
 
     def nonlocal_pages(self, rid: int) -> np.ndarray:
         """Per-plane pages of the request currently NOT in the LOCAL tier."""
@@ -333,11 +657,22 @@ class PagedStateRuntime:
                 self.planes[name].aqua.add_remote_lease(donor, n_slots)
 
     def evict_remote(self, donor: str) -> int:
+        """Honor a donor reclaim: evacuate every PHYSICAL page parked on the
+        donor's pools to the host tier and drop the lease (the paper's
+        iteration-boundary ``aqua.respond()``). A page shared by several
+        block tables moves once. Returns pages moved.
+
+        Raises:
+            MemoryError: the host tier cannot absorb the evacuation.
+        """
         return sum(p.aqua.evict_remote(donor)
                    for p in self.planes.values()
                    if donor in p.aqua.remote_pools)
 
     def stats(self) -> Dict:
+        """Tier occupancy per plane, transfer-meter totals, and the prefix-
+        sharing counters (hits, adopted tokens, copy-on-write clones,
+        physical vs logical page counts)."""
         tiers: Dict[str, int] = {}
         for p in self.planes.values():
             for k, v in p.aqua.tier_counts().items():
@@ -346,6 +681,12 @@ class PagedStateRuntime:
                 "planes": {n: p.aqua.tier_counts()
                            for n, p in self.planes.items()},
                 "page_tokens": self.page_tokens,
+                "sharing": {"enabled": self.sharing,
+                            "prefix_hits": self.prefix_hits,
+                            "adopted_tokens": self.adopted_tokens,
+                            "cow_copies": self.cow_copies,
+                            "physical_pages": self.physical_pages(),
+                            "logical_pages": self.logical_pages()},
                 "meter": {"bytes_fabric": self.meter.bytes_fabric,
                           "bytes_host": self.meter.bytes_host,
                           "messages_fabric": self.meter.messages_fabric,

@@ -12,6 +12,12 @@ shift state pages); a request fits only when EVERY plane fits. Scalars keep
 working for single-plane callers. Without cost/budget the plan degrades to
 slot counting.
 
+Budgets are PHYSICAL pages: a ``page_cost`` callback may accept a second
+argument — the run set chosen so far — and return the request's MARGINAL
+cost given it (the engine discounts pages shared copy-on-write with an
+already-chosen request), so two requests aliasing a prompt prefix cost the
+prefix once and shared prefixes directly raise admission capacity.
+
 Step execution is budgeted in TOKENS (``split_step_budget``): every step
 spends at most ``step_tokens`` tokens, split between the decode lanes (one
 each) and prompt-prefill CHUNKS of the run set's not-yet-prefilled requests.
@@ -21,6 +27,7 @@ tokens ride along (chunked continuous batching, Kossmann et al. 2024).
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
@@ -39,6 +46,8 @@ class ReqState:
     prefill_pos: int = 0                  # prompt POSITIONS whose state is written
     n_prefix: int = 0                     # VLM prefix-embedding positions
     prefix_embeds: object = None          # (1, n_prefix, d) array when VLM
+    shared_tokens: int = 0                # prompt prefix adopted from the
+    #                                       prefix index (CoW page sharing)
     ttft_step: Optional[int] = None
     finish_step: Optional[int] = None
     lora_id: Optional[int] = None
@@ -74,6 +83,9 @@ class ReqState:
 
 @dataclass
 class Decision:
+    """One step's plan: ``run`` is the set that should be resident, ``admit``
+    the subset of it still needing prefill, ``preempt`` the currently-
+    resident requests to page out (always empty for FCFS)."""
     run: List[ReqState]                   # the set that should be resident
     admit: List[ReqState]                 # subset of run needing prefill
     preempt: List[ReqState]               # currently-resident to page out
@@ -126,6 +138,22 @@ def bucket_tokens(n: int, *, lo: int = 8) -> int:
     return b
 
 
+def _cost_takes_chosen(page_cost) -> bool:
+    """True when a ``page_cost`` callback accepts ``(request, chosen)`` —
+    the marginal-cost form that lets the caller discount pages shared with
+    the run set picked so far. Single-argument callbacks keep working."""
+    if page_cost is None:
+        return False
+    try:
+        params = [p for p in inspect.signature(page_cost).parameters.values()
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD,
+                                p.VAR_POSITIONAL)]
+    except (TypeError, ValueError):      # builtins / odd callables
+        return False
+    return (any(p.kind == p.VAR_POSITIONAL for p in params)
+            or len(params) >= 2)
+
+
 class FCFSScheduler:
     """vLLM-like: admit in arrival order while slots (and, when page-aware,
     the LOCAL page budget) allow; never preempt. Under memory pressure,
@@ -134,20 +162,41 @@ class FCFSScheduler:
     def __init__(self, max_running: int, *,
                  page_cost: Optional[Callable[[ReqState], int]] = None,
                  page_budget: Optional[int] = None):
+        """Args:
+            max_running: batch-slot cap on the run set.
+            page_cost: pages a request needs LOCAL if scheduled — scalar or
+                per-plane vector; may take ``(request, chosen)`` to return
+                the marginal cost given the partially-built run set.
+            page_budget: LOCAL pool size(s) the run set must fit.
+        """
         self.max_running = max_running
         self.page_cost = page_cost
         self.page_budget = page_budget
+        self._marginal = _cost_takes_chosen(page_cost)
+
+    def _cost(self, r: ReqState, chosen: Sequence[ReqState]):
+        return (self.page_cost(r, chosen) if self._marginal
+                else self.page_cost(r))
 
     def plan(self, step: int, waiting: Sequence[ReqState],
              running: Sequence[ReqState]) -> Decision:
+        """Plan one step: keep everything running, admit waiters in arrival
+        order while the slot cap and the PHYSICAL page budget hold (shared
+        prefix pages are counted once across the run set via the marginal
+        ``page_cost``). Never preempts. Returns a :class:`Decision`."""
         run = list(running)
-        pages = sum(self.page_cost(r) for r in run) if self.page_cost else 0
+        pages = 0
+        if self.page_cost is not None:
+            chosen: List[ReqState] = []
+            for r in run:
+                pages = pages + self._cost(r, chosen)
+                chosen.append(r)
         admit = []
         for r in sorted(waiting, key=lambda r: (r.arrival, r.rid)):
             if len(run) >= self.max_running:
                 break
             if self.page_cost is not None and self.page_budget is not None:
-                c = self.page_cost(r)
+                c = self._cost(r, run)
                 if run and np.any(pages + c > self.page_budget):
                     break                     # strict FCFS: no skip-ahead
                 pages = pages + c
@@ -170,14 +219,33 @@ class CFSScheduler:
     def __init__(self, max_running: int, slice_tokens: int = 5, *,
                  page_cost: Optional[Callable[[ReqState], int]] = None,
                  page_budget: Optional[int] = None):
+        """Args:
+            max_running: batch-slot cap on the run set.
+            slice_tokens: tokens each resident request decodes between
+                fair-pick boundaries.
+            page_cost / page_budget: as in :class:`FCFSScheduler` —
+                ``page_cost`` may take ``(request, chosen)`` for marginal
+                (shared-prefix-discounted) physical-page costing.
+        """
         self.max_running = max_running
         self.slice_tokens = slice_tokens
         self.page_cost = page_cost
         self.page_budget = page_budget
+        self._marginal = _cost_takes_chosen(page_cost)
         self._since_switch = 0
+
+    def _cost(self, r: ReqState, chosen: Sequence[ReqState]):
+        return (self.page_cost(r, chosen) if self._marginal
+                else self.page_cost(r))
 
     def plan(self, step: int, waiting: Sequence[ReqState],
              running: Sequence[ReqState]) -> Decision:
+        """Plan one step. Off a slice boundary the current run set stands;
+        on one, the least-served requests that fit the slot cap and the
+        PHYSICAL page budget run next (a request whose pages alias an
+        already-picked sharer's prefix pays only its exclusive pages, so
+        shared prefixes admit strictly larger fair sets). Requests falling
+        out of the set are returned in ``Decision.preempt``."""
         self._since_switch += 1
         boundary = (self._since_switch >= self.slice_tokens) or not running
         if not boundary:
@@ -192,7 +260,7 @@ class CFSScheduler:
             for r in everyone:
                 if len(run) >= self.max_running:
                     break
-                c = self.page_cost(r)
+                c = self._cost(r, run)
                 if run and np.any(pages + c > self.page_budget):
                     continue                  # fair-pick the next that fits
                 run.append(r)

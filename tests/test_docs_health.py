@@ -1,0 +1,42 @@
+"""Docs-health gate in tier-1: README.md and docs/*.md must exist, every
+fenced python block must compile and import cleanly against src/, and every
+intra-repo link must resolve (the same check CI runs via
+scripts/check_docs.py)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_docs_exist():
+    assert (ROOT / "README.md").exists()
+    assert (ROOT / "docs" / "architecture.md").exists()
+    assert (ROOT / "docs" / "paged_runtime.md").exists()
+
+
+def test_docs_health_checker_passes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_docs.py")],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_docs_health_checker_catches_breakage(tmp_path):
+    """The checker is not vacuous: a broken link and a bad import fail."""
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    bad = tmp_path / "bad.md"
+    bad.write_text("[x](nope/missing.md)\n\n```python\n"
+                   "import repro.module_that_never_existed\n```\n")
+    errors = check_docs.check_file(bad)
+    assert len(errors) == 2
+    assert any("broken link" in e for e in errors)
+    assert any("import failed" in e for e in errors)

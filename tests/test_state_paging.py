@@ -144,6 +144,65 @@ def test_engine_mid_prefill_preemption_state_family_matches_greedy():
     assert m.preemptions > 0 and m.prefills > len(prompts)
 
 
+def test_shared_prefix_pair_roundtrip_moves_bytes_once():
+    """Eviction/offload under sharing: a parked shared prefix moves its
+    bytes ONCE however many block tables reference it, restore re-links
+    both requesters for free once the pages are back, and freeing one
+    requester never zeroes pages the other still reads."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b")).replace(
+        param_dtype="bfloat16", compute_dtype="bfloat16")
+    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=2)
+    kv.add_remote_lease("d0", 1 << 24)
+    plane = kv.planes["kv"]
+    prompt = list(range(100, 116))                    # 2 full pages
+
+    # A writes the prefix and registers it; B adopts every page
+    kv.adopt_prefix(0, prompt)
+    kv.ensure_capacity(0, 16)
+    shared_lps = [lp for row in plane.pages[0] for lp in row]
+    rng = np.random.default_rng(0)
+    payload = jnp.asarray(
+        rng.standard_normal((len(shared_lps),) + plane.aqua.page_shape),
+        jnp.bfloat16)
+    plane.aqua.write_local(shared_lps, payload)
+    kv.register_prefix(0, 16)
+    assert kv.adopt_prefix(1, prompt + [7, 8, 9]) == 16
+    kv.ensure_capacity(1, 17)                         # B's own tail page
+
+    # park A while B is active: the shared prefix is pinned, ZERO bytes move
+    before = kv.meter.bytes_fabric
+    kv.park(0, 16, prefer=REMOTE)
+    assert kv.meter.bytes_fabric - before == 0.0
+
+    # park B too: the whole physical set moves ONCE (2 shared pages/layer
+    # full + B's tail at 1/8 fill), not once per referencer
+    before = kv.meter.bytes_fabric
+    kv.park(1, 17, prefer=REMOTE)
+    n_layers = plane.n_layers
+    page_b = plane.aqua.page_bytes
+    assert kv.meter.bytes_fabric - before == pytest.approx(
+        n_layers * (2 + 1 / 8) * page_b)
+
+    # restore A: moves the shared pages back; restore B then re-links for
+    # only its exclusive tail
+    before = kv.meter.bytes_fabric
+    kv.restore(0)
+    assert kv.meter.bytes_fabric - before == pytest.approx(
+        n_layers * 2 * page_b)
+    before = kv.meter.bytes_fabric
+    kv.restore(1)
+    assert kv.meter.bytes_fabric - before == pytest.approx(
+        n_layers * (1 / 8) * page_b)                  # only the tail's fill
+
+    # freeing one requester never zeroes pages the other still reads
+    kv.release(0)
+    got = np.asarray(plane.aqua.read(shared_lps), np.float32)
+    np.testing.assert_array_equal(
+        got, np.asarray(payload, np.float32).astype(np.float32))
+    kv.release(1)
+    assert kv.physical_pages()["kv"] == 1             # scratch only
+
+
 def test_state_pages_zeroed_on_slot_reuse():
     """Regression hazard of the unified runtime: a freed state page's LOCAL
     slot still holds the previous occupant's recurrent state; a new request
