@@ -101,7 +101,8 @@ def run(results: Dict[str, Dict[str, float]] = None):
     for fam, m in (results or measure_all()).items():
         note = {"blob/blowup_x": "seed path: f32 repack vs native payload",
                 "paged/overhead_x": "<=1.0: native payload only, tail at fill",
-                "paged/preempt_messages": "1 coalesced msg per (plane,tier,donor)"}
+                "paged/preempt_messages":
+                    "1 coalesced msg per (tier,donor) across ALL planes"}
         for k, v in m.items():
             rows.append((f"ctxswitch/{fam}/{k}", v, note.get(k, "")))
     return rows

@@ -87,9 +87,8 @@ def measure_engine(arch: str = "qwen1.5-0.5b", long_len: int = 64,
             "restores": m.restores,
             "prefetched_restores": m.prefetched_restores,
             "overlap_hidden_s": float(m.overlap_hidden_s),
-            "jit_traces_prefill_wave1": traces_w1.get("prefill_chunk", 0),
-            "jit_traces_prefill_wave2": traces_w2.get("prefill_chunk", 0),
-            "jit_traces_decode": traces_w2.get("decode_step", 0),
+            "jit_traces_prefill_wave1": traces_w1.get("serve_step", 0),
+            "jit_traces_prefill_wave2": traces_w2.get("serve_step", 0),
         }
 
     return {

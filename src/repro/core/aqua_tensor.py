@@ -52,7 +52,15 @@ TIER_NAMES = {LOCAL: "local", REMOTE: "remote", HOST: "host"}
 
 @dataclass
 class TransferMeter:
-    """Accounting for every page movement; priced by the perf model."""
+    """Accounting for every page movement; priced by the perf model.
+
+    ``coalesce()`` opens a CROSS-PLANE transaction: every ``record`` inside
+    it accumulates bytes per ``(tier, group)`` key instead of emitting a
+    message, and the transaction emits ONE message per key on exit — the
+    multi-plane park/restore of a request (kv + ssm + conv pages, say)
+    rides one staging buffer per (tier, donor) instead of one message per
+    plane, which is the AQUA Fig. 3a small-message tax applied to hybrid
+    and SSM flips."""
     hw: HardwareProfile = TPU_V5E
     bytes_fabric: float = 0.0
     bytes_host: float = 0.0
@@ -60,8 +68,13 @@ class TransferMeter:
     messages_host: int = 0
     sim_time: float = 0.0
     coalesced: bool = True
+    _txn: Optional[Dict] = field(default=None, repr=False, compare=False)
 
-    def record(self, nbytes: float, tier: int, n_pages: int):
+    def record(self, nbytes: float, tier: int, n_pages: int, group=None):
+        if self._txn is not None:
+            b, p = self._txn.get((tier, group), (0.0, 0))
+            self._txn[(tier, group)] = (b + nbytes, p + n_pages)
+            return
         link = self.hw.fabric if tier == REMOTE else self.hw.host_link
         msgs = 1 if self.coalesced else max(1, n_pages)
         if tier == REMOTE:
@@ -71,6 +84,33 @@ class TransferMeter:
             self.bytes_host += nbytes
             self.messages_host += msgs
         self.sim_time += link.time(nbytes, n_messages=msgs)
+
+    def coalesce(self):
+        """Context manager fusing every ``record`` inside it into one
+        message per ``(tier, group)`` key (reentrant: the outermost
+        transaction wins)."""
+        return _MeterTxn(self)
+
+
+class _MeterTxn:
+    def __init__(self, meter: TransferMeter):
+        self.meter = meter
+        self.outer = False
+
+    def __enter__(self):
+        if self.meter._txn is not None:
+            self.outer = True           # nested: fold into the outer txn
+            return self.meter
+        self.meter._txn = {}
+        return self.meter
+
+    def __exit__(self, exc_type, exc, tb):
+        if self.outer:
+            return False
+        txn, self.meter._txn = self.meter._txn, None
+        for (tier, _group), (nbytes, n_pages) in txn.items():
+            self.meter.record(nbytes, tier, n_pages)
+        return False
 
 
 class AquaTensor:
@@ -343,14 +383,29 @@ class AquaTensor:
                 staging = jnp.asarray(self.host_pool[slots])
                 for s in slots:
                     self._free_host.append(int(s))
-            # valid payload only: a partial tail page moves (and is priced as)
-            # its live rows, not the whole page buffer
-            nbytes = float(self.page_fill[group].sum()) * self.page_bytes
-            # 2) one large message over the appropriate link (metered)
+            # valid payload only: a partial tail page moves (and is priced
+            # as) its live rows, not the whole page buffer
+            fills = self.page_fill[group] * self.page_bytes   # per-page bytes
+            # 2) message metering rides the placement below: the txn key is
+            # (src tier, src donor NAME, dst tier, dst donor NAME), so a
+            # cross-plane coalesce() transaction fuses every plane's leg of
+            # the same physical migration into one staging buffer per
+            # (tier, donor) — donor NAMES, not per-plane indices (two
+            # planes may hold different donor lists when a lease's share
+            # rounds to zero), and transfers touching different physical
+            # donors on EITHER end never fuse into one message
             transfer_tier = REMOTE if (src_tier == REMOTE or dst_tier == REMOTE) else HOST
-            if dst_tier != src_tier:
-                self.meter.record(nbytes, transfer_tier, len(group))
-            # 3) scatter into destination slots
+            src_name = self._donors[src_donor] if src_donor >= 0 else None
+
+            def meter(lo, hi, dst, dst_name):
+                if dst_tier == src_tier or hi <= lo:
+                    return
+                self.meter.record(float(fills[lo:hi].sum()), transfer_tier,
+                                  hi - lo,
+                                  group=(src_tier, src_name, dst, dst_name))
+
+            # 3) scatter into destination slots (metering per destination
+            # donor group)
             new_rows = []
             if dst_tier == LOCAL:
                 dst_slots = [self._pop_free(self._free_local, LOCAL, len(group))
@@ -358,6 +413,7 @@ class AquaTensor:
                 self.local_pool = kv_ops.scatter_pages(
                     self.local_pool, staging, jnp.asarray(dst_slots, jnp.int32))
                 new_rows = [(LOCAL, s, -1) for s in dst_slots]
+                meter(0, len(group), LOCAL, None)
             elif dst_tier == REMOTE:
                 placed = 0
                 for di, d in enumerate(self._donors):
@@ -370,6 +426,7 @@ class AquaTensor:
                         self.remote_pools[d], staging[placed:placed + take],
                         jnp.asarray(dst_slots, jnp.int32))
                     new_rows += [(REMOTE, s, di) for s in dst_slots]
+                    meter(placed, placed + take, REMOTE, d)
                     placed += take
                 if placed < len(group):          # remote full -> host fallback
                     rest = staging[placed:]
@@ -378,11 +435,13 @@ class AquaTensor:
                                  for _ in range(need)]
                     self.host_pool[np.asarray(dst_slots)] = np.asarray(rest)
                     new_rows += [(HOST, s, -1) for s in dst_slots]
+                    meter(placed, len(group), HOST, None)
             else:
                 dst_slots = [self._pop_free(self._free_host, HOST, len(group))
                              for _ in group]
                 self.host_pool[np.asarray(dst_slots)] = np.asarray(staging)
                 new_rows = [(HOST, s, -1) for s in dst_slots]
+                meter(0, len(group), HOST, None)
             for lp, row in zip(group, new_rows):
                 self.page_table[lp] = row
 

@@ -42,12 +42,20 @@ class HardwareProfile:
     host_link: LinkModel    # PCIe path to host DRAM
     mfu: float = 0.45       # achievable fraction of peak in serving kernels
     membw_util: float = 0.75
+    # per-kernel-launch dispatch overhead (CUDA launch + driver ~3-10 us;
+    # XLA dispatch on TPU is the same order). The serving loop's hidden tax:
+    # a step that issues one call PER ADMITTED REQUEST pays this once per
+    # request per layer, which is the between-launch idle regime of
+    # "Is the GPU Half-Empty or Half-Full?" (Kossmann et al. 2024).
+    launch_overhead: float = 4e-6
 
     def pod_slice(self, n: int) -> "HardwareProfile":
         """Aggregate n TP-sharded chips into one logical serving unit (a 34B
         model does not fit one 16 GB v5e chip; it is served by a TP group).
         Compute/HBM scale with n; each chip pages its own shard concurrently,
-        so aggregate fabric/host bandwidth scales too (latency does not)."""
+        so aggregate fabric/host bandwidth scales too (latency does not).
+        Launch overhead does NOT shrink: every chip dispatches the same
+        kernel sequence in lockstep."""
         if n == 1:
             return self
         return HardwareProfile(
@@ -57,7 +65,7 @@ class HardwareProfile:
                       self.fabric.latency),
             LinkModel(self.host_link.name, self.host_link.peak_bw * n,
                       self.host_link.latency),
-            self.mfu, self.membw_util)
+            self.mfu, self.membw_util, self.launch_overhead)
 
 
 # Paper testbed: A100-80G SXM. Fig. 3a calibration: 100 GB/s @ 2 MB, ~250 GB/s peak
@@ -96,6 +104,14 @@ class ModelCost:
     state_bytes: float = 0.0   # fixed recurrent state bytes per request
     #                            (RWKV wkv/shift, Mamba ssm/conv) — moved on
     #                            every context switch regardless of ctx_len
+    n_layers: int = 1          # layers in the stack: each jitted serving
+    #                            call issues ~one fused kernel launch per
+    #                            layer (the launch-count model's unit)
+    n_planes: int = 1          # page planes of the family's state layout
+    #                            (kv=1, mla=1, rwkv wkv+shift=2, jamba
+    #                            kv+ssm+conv=3) — the per-(tier,donor)
+    #                            message count of an UNCOALESCED multi-plane
+    #                            tier flip
 
     @staticmethod
     def from_config(cfg) -> "ModelCost":
@@ -109,12 +125,16 @@ class ModelCost:
             n_attn = sum(1 for i in range(cfg.n_layers) if cfg.is_attention_layer(i))
             kvtok = 2 * cfg.n_kv_heads * hd * n_attn * 2
         # fixed recurrent state (the state page planes): f32 ssm/wkv + native
-        # conv/shift leaves, per layer of the matching kind
+        # conv/shift leaves, per layer of the matching kind; n_planes mirrors
+        # models/lm.py:paged_layout (the message count of an uncoalesced
+        # multi-plane tier flip)
         state = 0.0
+        n_planes = 1
         if cfg.family == "ssm" and cfg.ssm is not None:
             rhd = cfg.ssm.rwkv_head_dim
             H = cfg.d_model // rhd
             state = cfg.n_layers * (H * rhd * rhd * 4 + 2 * cfg.d_model * 2)
+            n_planes = 2                          # wkv + shift
         elif cfg.family == "hybrid" and cfg.ssm is not None:
             s = cfg.ssm
             di = s.mamba_expand * cfg.d_model
@@ -122,6 +142,7 @@ class ModelCost:
                           if not cfg.is_attention_layer(i))
             state = n_mamba * (di * s.mamba_d_state * 4
                                + (s.mamba_d_conv - 1) * di * 2)
+            n_planes = 3                          # kv + ssm + conv
         n_active = cfg.param_count()
         if cfg.moe is not None:
             m = cfg.moe
@@ -130,15 +151,43 @@ class ModelCost:
             n_moe_layers = cfg.n_layers // m.moe_every
             inactive = (m.n_experts - m.top_k) * glu * cfg.d_model * fe * n_moe_layers
             n_active -= inactive
-        return ModelCost(float(n_active), float(kvtok), state_bytes=float(state))
+        return ModelCost(float(n_active), float(kvtok), state_bytes=float(state),
+                         n_layers=int(cfg.n_layers), n_planes=int(n_planes))
 
     def prefill_time(self, hw: HardwareProfile, n_tokens: int) -> float:
         return 2.0 * self.n_params * n_tokens / (hw.flops_peak * hw.mfu)
+
+    def launch_time(self, hw: HardwareProfile, n_calls: int) -> float:
+        """Dispatch overhead of ``n_calls`` jitted serving calls: each call
+        issues ~one fused kernel launch per layer of the stack. The
+        per-request engine paid one call per admitted request's chunk plus
+        one for decode — O(requests) launches per step; the fused step pays
+        exactly one call."""
+        return launch_overhead_time(hw, n_calls * self.n_layers)
 
     def decode_step_time(self, hw: HardwareProfile, batch: int,
                          ctx_tokens: float, weight_bytes: float) -> float:
         """One token for `batch` sequences with mean context `ctx_tokens`."""
         t_flops = 2.0 * self.n_params * batch / (hw.flops_peak * hw.mfu)
+        kv_read = self.kv_bytes_per_token * ctx_tokens * batch
+        t_mem = (weight_bytes + kv_read) / (hw.hbm_bw * hw.membw_util)
+        return max(t_flops, t_mem)
+
+    def fused_step_time(self, hw: HardwareProfile, batch: int,
+                        ctx_tokens: float, weight_bytes: float,
+                        chunk_tokens: int = 0) -> float:
+        """One FUSED engine step: ``batch`` decode lanes plus
+        ``chunk_tokens`` of prompt-chunk rows in the same launch per layer.
+
+        The launches share one weight read: a decode step is memory-bound
+        (weights + KV streaming dominate its roofline), so the chunk rows'
+        FLOPs hide under that stream until they exceed it — prompt chunks
+        PIGGYBACK on decode steps nearly for free instead of paying a
+        separate launch sequence with its own weight pass. With
+        ``chunk_tokens = 0`` this is exactly :meth:`decode_step_time`.
+        """
+        t_flops = (2.0 * self.n_params * (batch + chunk_tokens)
+                   / (hw.flops_peak * hw.mfu))
         kv_read = self.kv_bytes_per_token * ctx_tokens * batch
         t_mem = (weight_bytes + kv_read) / (hw.hbm_bw * hw.membw_util)
         return max(t_flops, t_mem)
@@ -180,6 +229,18 @@ def context_switch_time(hw: HardwareProfile, kv_bytes: float, *,
     msgs = max(1, n_fragments) if not coalesced else 1
     gather_overhead = kv_bytes / (hw.hbm_bw * hw.membw_util) if coalesced else 0.0
     return gather_overhead + link.time(kv_bytes, n_messages=msgs)
+
+
+def launch_overhead_time(hw: HardwareProfile, n_launches: int) -> float:
+    """Wall-time the host spends dispatching ``n_launches`` kernel launches.
+
+    This is the per-step serving tax the fused engine step collapses: the
+    per-request loop issued one jitted call per admitted request's chunk
+    (plus one for decode), each ~one launch per layer, so dispatch overhead
+    scaled with the number of admitted requests — the between-launch GPU
+    idle regime of Kossmann et al. 2024. One fused call keeps it O(1).
+    """
+    return max(0, n_launches) * hw.launch_overhead
 
 
 def overlapped_transfer_time(compute_s: float, transfer_s: float) -> float:

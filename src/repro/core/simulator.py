@@ -75,6 +75,9 @@ class ServingSimulator:
                  coalesced: bool = True, paging: str = "paged",
                  step_tokens: Optional[int] = None,
                  overlap_pagein: bool = False,
+                 fused_step: bool = True,
+                 spec_chunk_ahead: bool = False,
+                 coalesce_planes: bool = True,
                  lora_cache_bytes: float = 0.0,
                  lora_num_adapters: int = 200):
         self.hw = hw
@@ -94,6 +97,21 @@ class ServingSimulator:
         # overlap_pagein: price CFS page-ins as prefetched transfers hidden
         # up to the round's compute time (perfmodel.overlapped_transfer_time)
         self.overlap_pagein = overlap_pagein
+        # fused_step: the one-launch engine step — every decode iteration is
+        # ONE jitted call carrying all requests' chunks, so dispatch
+        # overhead per round is O(decode iterations); the per-request
+        # baseline adds one call per granted chunk (O(admitted requests),
+        # the Kossmann et al. between-launch idle regime). Priced by
+        # ModelCost.launch_time.
+        self.fused_step = fused_step
+        # spec_chunk_ahead: leftover step-token slack speculatively prefills
+        # the head-of-line waiting prompt (parked again right after) —
+        # mirrors the engine's speculative chunk-ahead.
+        self.spec_chunk_ahead = spec_chunk_ahead
+        # coalesce_planes: a multi-plane (SSM/hybrid) context switch fuses
+        # every plane into one message per (tier, donor); uncoalesced it
+        # pays ModelCost.n_planes messages (the pre-fusion runtime).
+        self.coalesce_planes = coalesce_planes
         # 'paged': decode KV lives on pages; a context switch is a page-table
         # tier flip (no repack gather — matches the paged ServingEngine).
         # 'blob': the seed path — gather every leaf into a staging blob first.
@@ -262,6 +280,8 @@ class ServingSimulator:
             # `slice_tokens` per lane), the rest is handed out as prompt
             # chunks (None = whole prompts, the seed behavior)
             compute_time = 0.0
+            n_chunk_calls = 0
+            piggyback_tokens = 0        # chunk FLOPs riding fused decode
             lanes = [r for r in running
                      if r.prefilled and r.generated < r.gen_len]
             pend = [r for r in running if not r.prefilled]
@@ -271,7 +291,15 @@ class ServingSimulator:
             for r, c in zip(pend, chunks):
                 if c <= 0:
                     continue
-                dt = self.model.prefill_time(self.hw, c)
+                n_chunk_calls += 1
+                if self.fused_step and lanes:
+                    # fused one-launch step: the chunk shares the decode
+                    # iteration's weight pass — its FLOPs fold into that
+                    # iteration's roofline max below
+                    piggyback_tokens += c
+                    dt = 0.0
+                else:
+                    dt = self.model.prefill_time(self.hw, c)
                 r.prefill_pos += c
                 if r.prefill_pos >= r.prompt_len:
                     r.prefilled = True
@@ -279,21 +307,73 @@ class ServingSimulator:
                 compute_time += dt
                 step_time += dt
 
-            # decode ntok tokens for the running batch
+            # speculative chunk-ahead: leftover budget slack prefills the
+            # head-of-line WAITING prompt (all but its last position), whose
+            # pages flip back out right after — mirrors the engine. The win
+            # is largest under FCFS admission, where a waiter can sit
+            # slot-blocked behind long decodes for many slack-rich rounds.
+            if self.spec_chunk_ahead and self.step_tokens is not None:
+                slack = (self.step_tokens - len(lanes) * ntok - sum(chunks))
+                spec = next((r for r in sorted(waiting,
+                                               key=lambda r: (r.arrival,
+                                                              r.rid))
+                             if not r.prefilled), None)
+                if slack > 0 and spec is not None:
+                    c = min(slack, spec.prompt_len - spec.prefill_pos - 1)
+                    if c > 0:
+                        n_groups = (1 if self.coalesce_planes
+                                    else self.model.n_planes)
+                        if spec.prefill_pos > 0:    # page its prefix back in
+                            step_time += page_flip_time(
+                                self.hw,
+                                self.model.context_bytes(spec.prefill_pos),
+                                tier=self.tier, n_groups=n_groups)
+                        if self.fused_step and lanes:
+                            # the speculative chunk rides the fused decode
+                            # launch too — its FLOPs hide under the
+                            # memory-bound stream below
+                            piggyback_tokens += c
+                        else:
+                            dt = self.model.prefill_time(self.hw, c)
+                            compute_time += dt
+                            step_time += dt
+                        spec.prefill_pos += c
+                        n_chunk_calls += 1
+                        step_time += page_flip_time(   # park it again
+                            self.hw,
+                            self.model.context_bytes(spec.prefill_pos),
+                            tier=self.tier, n_groups=n_groups)
+
+            # decode ntok tokens for the running batch; the first iteration
+            # of a fused round carries the piggybacked chunk FLOPs in its
+            # roofline max (one launch, one weight pass)
+            n_decode_iters = 0
             for _ in range(ntok):
                 live = [r for r in running
                         if r.prefilled and r.generated < r.gen_len]
                 if not live:
                     break
+                n_decode_iters += 1
                 ctx = sum(r.prompt_len + r.generated for r in live) / len(live)
-                dt = self.model.decode_step_time(
-                    self.hw, len(live), ctx, self.weight_bytes)
+                dt = self.model.fused_step_time(
+                    self.hw, len(live), ctx, self.weight_bytes,
+                    piggyback_tokens)
+                piggyback_tokens = 0
                 compute_time += dt
                 step_time += dt
                 for r in live:
                     r.generated += 1
                     if r.ttft is None:
                         r.ttft = t + step_time
+            # launch-count model: fused = one jitted call per engine step
+            # (chunks ride the decode iterations); per-request baseline adds
+            # one call per granted chunk — O(admitted requests) per round
+            if self.fused_step:
+                n_calls = max(n_decode_iters,
+                              1 if (n_chunk_calls or n_decode_iters) else 0)
+            else:
+                n_calls = n_chunk_calls + n_decode_iters
+            step_time += self.model.launch_time(self.hw, n_calls)
             if pagein_time:
                 # prefetched page-ins: transfer hidden up to the compute time
                 step_time += overlapped_transfer_time(compute_time,
@@ -326,9 +406,13 @@ class ServingSimulator:
                   if shared_pinned and self.prefix_sharing_ok else 0.0)
         kv = self.model.unique_context_bytes(ctx, shared)
         if self.paging == "paged" and self.coalesced:
-            # page-native runtime: tier flip of the page payload, one message
-            # per (tier, donor) group — no repack gather
-            return page_flip_time(self.hw, kv, tier=self.tier)
+            # page-native runtime: tier flip of the page payload. With
+            # cross-plane coalescing every plane of the request rides ONE
+            # message per (tier, donor); uncoalesced, a hybrid/SSM flip
+            # pays one message per plane (ModelCost.n_planes)
+            n_groups = 1 if self.coalesce_planes else self.model.n_planes
+            return page_flip_time(self.hw, kv, tier=self.tier,
+                                  n_groups=n_groups)
         # uncoalesced: one message per layer-page fragment (paper Fig. 3a pain)
         n_frag = 1 if self.coalesced else max(1, int(kv // (2 * 16 * 128 * 64)))
         return context_switch_time(self.hw, kv, tier=self.tier,

@@ -1,6 +1,6 @@
 """Paged attention Pallas TPU kernels (serving hot spot).
 
-Four entry points:
+Five entry points:
   * ``paged_attention``       — split K/V pools ``(K, P, page, hd)``
   * ``paged_attention_pool``  — fused page-major pool ``(P, 2, K, page, hd)``:
     the AquaTensor LOCAL pool IS the operand (batched block tables; the
@@ -11,6 +11,15 @@ Four entry points:
     page-iteration axis and online-softmax accumulators are identical to the
     decode variant, so a token's softmax reduction order is the same for any
     chunk split — chunked prefill is bit-identical across chunk sizes.
+  * ``paged_mixed_attention_pool`` — MIXED-MODE variant: one launch serves a
+    packed batch of decode lanes AND prefill chunk rows against the same
+    pool. Each row carries ``(q_start, n_real, is_decode)`` metadata: a
+    decode lane is a one-token row (``n_real = 1``) whose single query sits
+    at absolute position ``q_start``; a chunk row is ``n_real`` real tokens
+    at ``q_start + t``. The page loop and accumulators are the decode/chunk
+    kernels', so a fused engine step is bit-identical to the per-request
+    calls it replaces — while issuing ONE launch per layer instead of one
+    per admitted request.
   * ``append_kv``             — page-append writer: one decode token's K/V
     into each sequence's current page, in place via input-output aliasing
 
@@ -255,6 +264,116 @@ def paged_prefill_attention_pool(q, kv_pool, block_tables, q_starts, *,
     )(block_tables, q_starts, qg, kv_pool)
     return (out.reshape(B, K, Tc, G, hd).transpose(0, 2, 1, 3, 4)
             .reshape(B, Tc, H, hd))
+
+
+def _mixed_pool_kernel(block_tables_ref, starts_ref, n_reals_ref, decode_ref,
+                       q_ref, kv_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                       page: int, gsize: int, scale: float):
+    """Mixed-mode fused-pool kernel: every row of the packed batch is a
+    query block of Tc tokens with per-row ``(q_start, n_real, is_decode)``
+    metadata. A decode lane's single real token (row t = 0) attends to
+    ``k_pos <= q_start`` — exactly the decode kernel's ``pos < length``
+    mask with ``length = q_start + 1`` — and its tail rows (t >= n_real,
+    which is 1) are fully masked, degenerating to a finite uniform mean the
+    caller never reads. A chunk row's token t attends to
+    ``k_pos <= q_start + t`` at EVERY row, bucket-pad rows included:
+    garbage rows must stay bit-identical to the per-request chunk kernel's
+    because their K/V was written into the page window (positions later
+    chunks overwrite) and the next layer's writes are computed from their
+    outputs. The page loop and the online-softmax accumulators are shared
+    with the decode and chunk kernels — a row's reduction order never
+    depends on what else rides the launch."""
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (Tc*G, hd)
+    k = kv_ref[0, 0, 0].astype(jnp.float32)                # (page, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // gsize
+    dec = decode_ref[b] != 0
+    q_pos = starts_ref[b] + jnp.where(dec, 0, t)
+    valid = (k_pos <= q_pos) & (~dec | (t < n_reals_ref[b]))
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = kv_ref[0, 1, 0].astype(jnp.float32)                # (page, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == npages - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_mixed_attention_pool(q, kv_pool, block_tables, q_starts, n_reals,
+                               is_decode, *, scale: float | None = None,
+                               interpret: bool = False):
+    """Fused mixed-mode attention: decode lanes + prefill chunk rows in ONE
+    launch against the page-major pool.
+
+    q:            (R, Tc, H, hd)       packed rows — decode lanes carry their
+                                       single query token at t = 0
+    kv_pool:      (P, 2, K, page, hd)  [:,0]=K, [:,1]=V
+    block_tables: (R, pps) int32       physical page slots per row
+                                       (padding points at a resident dummy)
+    q_starts:     (R,) int32           absolute position of the row's first
+                                       token (decode: the token's position)
+    n_reals:      (R,) int32           real tokens in the row (decode: 1;
+                                       bucket-pad rows: 0 — fully masked)
+    is_decode:    (R,) int32           1 marks a decode lane
+    -> (R, Tc, H, hd)
+    """
+    R, Tc, H, hd = q.shape
+    P, _, K, page, _ = kv_pool.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = (q.reshape(R, Tc, K, G, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(R, K, Tc * G, hd))
+    kernel = functools.partial(_mixed_pool_kernel, page=page, gsize=G,
+                               scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,          # block_tables, q_starts, n_reals, dec
+        grid=(R, K, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, Tc * G, hd),
+                         lambda b, h, i, bt, st, nr, dc: (b, h, 0, 0)),
+            pl.BlockSpec((1, 2, 1, page, hd),
+                         lambda b, h, i, bt, st, nr, dc: (bt[b, i], 0, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Tc * G, hd),
+                               lambda b, h, i, bt, st, nr, dc: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Tc * G, hd), jnp.float32),
+            pltpu.VMEM((Tc * G, 1), jnp.float32),
+            pltpu.VMEM((Tc * G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, K, Tc * G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_starts, n_reals, is_decode, qg, kv_pool)
+    return (out.reshape(R, K, Tc, G, hd).transpose(0, 2, 1, 3, 4)
+            .reshape(R, Tc, H, hd))
 
 
 def _append_kernel(slots_ref, offs_ref, k_ref, v_ref, pool_ref, out_ref, *,

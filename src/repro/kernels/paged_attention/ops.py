@@ -15,6 +15,8 @@ from repro.kernels.paged_attention.kernel import paged_attention as _kernel
 from repro.kernels.paged_attention.kernel import \
     paged_attention_pool as _kernel_pool
 from repro.kernels.paged_attention.kernel import \
+    paged_mixed_attention_pool as _kernel_mixed
+from repro.kernels.paged_attention.kernel import \
     paged_prefill_attention_pool as _kernel_chunk
 
 
@@ -41,6 +43,16 @@ def paged_prefill_attention_pool(q, kv_pool, block_tables, q_starts):
     to every page written so far (the query-block fused-pool variant)."""
     return _kernel_chunk(q, kv_pool, block_tables, q_starts,
                          interpret=_on_cpu())
+
+
+@jax.jit
+def paged_mixed_attention_pool(q, kv_pool, block_tables, q_starts, n_reals,
+                               is_decode):
+    """Mixed-mode fused-pool attention: a packed batch of decode lanes and
+    prefill chunk rows — per-row (q_start, n_real, is_decode) metadata —
+    served in ONE launch per layer (the fused engine step's hot kernel)."""
+    return _kernel_mixed(q, kv_pool, block_tables, q_starts, n_reals,
+                         is_decode, interpret=_on_cpu())
 
 
 @jax.jit

@@ -79,6 +79,45 @@ def paged_prefill_attention_pool_ref(q, kv_pool, block_tables, q_starts,
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Tc, H, hd)
 
 
+def paged_mixed_attention_pool_ref(q, kv_pool, block_tables, q_starts,
+                                   n_reals, is_decode,
+                                   scale: float | None = None):
+    """Oracle for the mixed-mode (decode lanes + prefill chunk rows) variant.
+
+    q: (R,Tc,H,hd); kv_pool: (P,2,K,page,hd); block_tables: (R,pps);
+    q_starts/n_reals/is_decode: (R,) per-row metadata — a decode lane is a
+    one-token row (n_real 1) at absolute position q_start whose tail rows
+    are fully masked (finite uniform-mean garbage, never read); a chunk
+    row attends causally at every row INCLUDING bucket padding, matching
+    the per-request chunk kernel bit-exactly (garbage rows' K/V sits in
+    the page window until later chunks overwrite it).
+    """
+    R, Tc, H, hd = q.shape
+    _, _, K, page, _ = kv_pool.shape
+    G = H // K
+    pps = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    k_pages = jnp.moveaxis(kv_pool[:, 0], 1, 0)       # (K, P, page, hd)
+    v_pages = jnp.moveaxis(kv_pool[:, 1], 1, 0)
+    kg = jnp.moveaxis(k_pages[:, block_tables], 1, 0).reshape(R, K, pps * page, hd)
+    vg = jnp.moveaxis(v_pages[:, block_tables], 1, 0).reshape(R, K, pps * page, hd)
+
+    qg = q.reshape(R, Tc, K, G, hd)
+    scores = jnp.einsum("btkgd,bksd->bkgts", qg, kg).astype(jnp.float32) * scale
+    k_pos = jnp.arange(pps * page)[None, None, None, None, :]
+    t = jnp.arange(Tc)[None, :]
+    dec = is_decode[:, None] != 0
+    q_pos = (q_starts[:, None]
+             + jnp.where(dec, 0, t))[:, None, None, :, None]
+    valid = (k_pos <= q_pos) \
+        & (~dec | (t < n_reals[:, None]))[:, None, None, :, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bksd->bkgtd", probs, vg)
+    return out.transpose(0, 3, 1, 2, 4).reshape(R, Tc, H, hd)
+
+
 def append_kv_ref(kv_pool, k_new, v_new, slots, offsets):
     """Oracle for the page-append writer.
 

@@ -204,6 +204,73 @@ def attention_prefill_chunk(params, cfg: ModelConfig, x, kv_pool, block_table,
     return out, kv_pool
 
 
+def attention_mixed_paged(params, cfg: ModelConfig, x, kv_pool, block_table,
+                          q_starts, n_reals, *, n_decode: int,
+                          read_pps: Optional[int] = None,
+                          impl: str = "pallas"):
+    """Fused mixed-mode attention: decode lanes AND prefill chunk rows of a
+    packed engine step against the pool, in ONE kernel launch.
+
+    x: (R, Tc, d) packed rows — rows ``[:n_decode]`` are decode lanes (their
+    single real token at column 0, absolute position ``q_starts[r]``), the
+    rest prefill chunk rows (``n_reals[r]`` real tokens from absolute
+    position ``q_starts[r]``; ``n_real == 0`` marks a bucket-pad row whose
+    table points at the scratch page). kv_pool: (P,2,K,page,hd);
+    block_table: (R, pps_pad) int32 physical LOCAL slots from position 0,
+    scratch-padded.
+
+    Writes exactly what the per-request paths write — decode lanes through
+    the page-append writer, each chunk row through its read-modify-write
+    page window — then attends every row in one
+    ``paged_mixed_attention_pool`` launch. Row outputs are bit-identical to
+    ``attention_decode_paged`` / ``attention_prefill_chunk`` on the same
+    state: the kernel's page loop and accumulators are shared and a row's
+    reduction never sees its neighbors.
+    """
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention.ref import (
+        append_kv_ref, paged_mixed_attention_pool_ref)
+    R, Tc, _ = x.shape
+    page = kv_pool.shape[3]
+    q_starts = jnp.asarray(q_starts, jnp.int32).reshape(-1)
+    n_reals = jnp.asarray(n_reals, jnp.int32).reshape(-1)
+    positions = q_starts[:, None] + jnp.arange(Tc, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+
+    if n_decode:
+        # decode lanes: one-token page append (idle lanes target scratch)
+        pos = q_starts[:n_decode]
+        slot = jnp.take_along_axis(block_table[:n_decode],
+                                   (pos // page)[:, None], axis=1)[:, 0]
+        off = pos % page
+        kd, vd = k_new[:n_decode, 0], v_new[:n_decode, 0]
+        if impl == "pallas":
+            kv_pool = pa_ops.append_kv(kv_pool, kd, vd, slot, off)
+        else:
+            kv_pool = append_kv_ref(kv_pool, kd, vd, slot, off)
+    pps_win = Tc // page + (1 if Tc % page else 0) + 1
+    for r in range(n_decode, R):
+        # chunk rows: the same page-window read-modify-write as the
+        # per-request path (pad rows rewrite the scratch window — its
+        # content is never read unmasked)
+        win = jax.lax.dynamic_slice(block_table[r],
+                                    (q_starts[r] // page,), (pps_win,))
+        kv_pool = write_chunk_pages(kv_pool, k_new[r:r + 1], v_new[r:r + 1],
+                                    win, q_starts[r] % page, page_tokens=page)
+
+    is_decode = (jnp.arange(R, dtype=jnp.int32)
+                 < n_decode).astype(jnp.int32)
+    bt = block_table[:, :read_pps]
+    if impl == "pallas":
+        ctx = pa_ops.paged_mixed_attention_pool(q, kv_pool, bt, q_starts,
+                                                n_reals, is_decode)
+    else:
+        ctx = paged_mixed_attention_pool_ref(q, kv_pool, bt, q_starts,
+                                             n_reals, is_decode)
+    out = linear(params["wo"], ctx.reshape(R, Tc, -1))
+    return out, kv_pool
+
+
 def attention_decode_paged(params, cfg: ModelConfig, x, kv_pool, block_table,
                            pos, *, impl: str = "pallas"):
     """One-token decode reading/writing the paged KV pool (full attention).

@@ -105,18 +105,26 @@ def _chunked_ssm_scan(dt, Bm, Cm, x, A, h0):
 def _causal_conv(p, x, conv_prev, n_real=None):
     """Depthwise causal conv over time. x: (B,T,di); conv_prev: (B,dc-1,di).
 
-    ``n_real`` (traced scalar, default T) marks the last REAL row of a
-    bucket-padded chunk: the returned conv tail is the window of the last
-    ``dc-1`` inputs *ending at* that row, so padding rows never enter the
-    carried state. ``xp`` row ``j`` holds input ``j-(dc-1)``, hence the tail
-    window for ``n_real`` real tokens starts at ``xp`` row ``n_real``.
+    ``n_real`` (traced scalar or per-lane ``(B,)`` vector, default T) marks
+    the last REAL row of a bucket-padded chunk: the returned conv tail is
+    the window of the last ``dc-1`` inputs *ending at* that row, so padding
+    rows never enter the carried state. ``xp`` row ``j`` holds input
+    ``j-(dc-1)``, hence the tail window for ``n_real`` real tokens starts at
+    ``xp`` row ``n_real``. The vector form (the fused packed step, one
+    n_real per lane) gathers each lane's window; the scalar form keeps the
+    original dynamic slice bit-exactly.
     """
     dc = p["conv_w"].shape[0]
     xp = jnp.concatenate([conv_prev.astype(x.dtype), x], axis=1)  # (B,T+dc-1,di)
     w = p["conv_w"].astype(x.dtype)
     out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dc))
-    tail_start = x.shape[1] if n_real is None else n_real
-    tail = jax.lax.dynamic_slice_in_dim(xp, tail_start, dc - 1, axis=1)
+    if n_real is not None and jnp.ndim(n_real) > 0:
+        idx = (jnp.asarray(n_real, jnp.int32)[:, None]
+               + jnp.arange(dc - 1, dtype=jnp.int32)[None, :])   # (B, dc-1)
+        tail = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    else:
+        tail_start = x.shape[1] if n_real is None else n_real
+        tail = jax.lax.dynamic_slice_in_dim(xp, tail_start, dc - 1, axis=1)
     return out + p["conv_b"].astype(x.dtype), tail
 
 
@@ -124,11 +132,12 @@ def mamba_forward(p, cfg: ModelConfig, x, state: MambaState, shard_axes=None,
                   n_real=None) -> Tuple[jnp.ndarray, MambaState]:
     """Full-sequence forward. x: (B,T,d).
 
-    ``n_real`` (traced scalar) supports bucket-padded chunked prefill: rows
-    ``>= n_real`` are padding whose dt is zeroed, making their transition the
-    identity (``a = exp(0) = 1``, ``b = 0``) — the carried SSM state after the
-    chunk equals the state after the last real token, bit-exactly, and the
-    conv tail window ends at the last real row.
+    ``n_real`` (traced scalar, or a per-lane ``(B,)`` vector in the fused
+    packed step) supports bucket-padded chunked prefill: rows ``>= n_real``
+    are padding whose dt is zeroed, making their transition the identity
+    (``a = exp(0) = 1``, ``b = 0``) — the carried SSM state after the chunk
+    equals the state after the last real token, bit-exactly, and the conv
+    tail window ends at the last real row.
     """
     di, ds, dc, dtr = _dims(cfg)
     xz = linear(p["in_proj"], x)
@@ -142,8 +151,9 @@ def mamba_forward(p, cfg: ModelConfig, x, state: MambaState, shard_axes=None,
     xc = jax.nn.silu(xc)
     dt, Bm, Cm = _ssm_inputs(p, cfg, xc)
     if n_real is not None:
-        mask = jnp.arange(x.shape[1]) < n_real
-        dt = dt * mask[None, :, None]
+        nr = jnp.asarray(n_real, jnp.int32).reshape(-1, 1)     # (1|B, 1)
+        mask = jnp.arange(x.shape[1])[None, :] < nr
+        dt = dt * mask[:, :, None]
     A = -jnp.exp(p["A_log"])
     y, h = _chunked_ssm_scan(dt, Bm, Cm, xc, A, state.ssm)
     y = (y + p["D"][None, None] * xc.astype(jnp.float32)).astype(x.dtype)

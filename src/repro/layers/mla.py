@@ -188,6 +188,83 @@ def mla_prefill_chunk(params, cfg: ModelConfig, x, lat_pool, block_table,
     return out, lat_pool
 
 
+def mla_mixed_paged(params, cfg: ModelConfig, x, lat_pool, block_table,
+                    q_starts, n_reals, *, n_decode: int,
+                    read_pps: Optional[int] = None):
+    """Fused mixed-mode MLA: decode lanes and prefill chunk rows of a packed
+    engine step against the latent pool, in one jitted region.
+
+    x: (R, Tc, d) packed rows — rows ``[:n_decode]`` decode lanes (single
+    real token at column 0, absolute position ``q_starts[r]``), the rest
+    chunk rows (``n_reals[r]`` real tokens from ``q_starts[r]``; 0 marks a
+    bucket-pad row). lat_pool: (P, page, C); block_table: (R, pps_pad).
+
+    Per-plane row dispatch keeps each mode's exact math: decode rows run
+    the ABSORBED single-token path of ``mla_decode_paged`` (tail-page
+    append, latent-space scores), chunk rows the non-absorbed path of
+    ``mla_prefill_chunk`` batched over rows (window write, materialized
+    per-head K/V) — so every row is bit-identical to its per-request twin.
+    """
+    m = cfg.mla
+    R, Tc, _ = x.shape
+    H = cfg.n_heads
+    page = lat_pool.shape[1]
+    q_starts = jnp.asarray(q_starts, jnp.int32).reshape(-1)
+    n_reals = jnp.asarray(n_reals, jnp.int32).reshape(-1)
+    out_rows = []
+
+    if n_decode:
+        xd = x[:n_decode, :1]
+        pos = q_starts[:n_decode]
+        out_d, lat_pool = mla_decode_paged(params, cfg, xd, lat_pool,
+                                           block_table[:n_decode, :read_pps],
+                                           pos)
+        if Tc > 1:
+            out_d = jnp.concatenate(
+                [out_d, jnp.zeros((n_decode, Tc - 1, out_d.shape[-1]),
+                                  out_d.dtype)], axis=1)
+        out_rows.append(out_d)
+
+    if R > n_decode:
+        xc = x[n_decode:]
+        Rp = R - n_decode
+        starts = q_starts[n_decode:]
+        positions = starts[:, None] + jnp.arange(Tc, dtype=jnp.int32)[None, :]
+        c_kv, k_rope = _latents(params, cfg, xc, positions)
+        lat = jnp.concatenate([c_kv, k_rope], axis=-1)
+        pps_win = Tc // page + (1 if Tc % page else 0) + 1
+        for r in range(Rp):
+            win = jax.lax.dynamic_slice(block_table[n_decode + r],
+                                        (starts[r] // page,), (pps_win,))
+            lat_pool = write_chunk_latent_pages(
+                lat_pool, lat[r:r + 1], win, starts[r] % page,
+                page_tokens=page)
+
+        c_all, r_all = _gather_latents(cfg, lat_pool,
+                                       block_table[n_decode:, :read_pps])
+        S = c_all.shape[1]
+        k_nope = linear(params["wuk"], c_all).reshape(Rp, S, H,
+                                                      m.qk_nope_head_dim)
+        v = linear(params["wuv"], c_all).reshape(Rp, S, H, m.v_head_dim)
+        q_nope, q_rope = _queries(params, cfg, xc, positions)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(r_all[:, :, None, :],
+                                      (Rp, S, H, m.qk_rope_head_dim))],
+            axis=-1)
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+        mask = (jnp.arange(S)[None, None, :] <= positions[:, :, None])[:, None]
+        scores = jnp.where(mask, scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(xc.dtype)
+        ctx = jnp.einsum("bhts,bshd->bthd", probs, v)
+        out_rows.append(linear(params["wo"], ctx.reshape(Rp, Tc, -1)))
+
+    out = (out_rows[0] if len(out_rows) == 1
+           else jnp.concatenate(out_rows, axis=0))
+    return out, lat_pool
+
+
 def mla_decode_paged(params, cfg: ModelConfig, x, lat_pool, block_table, pos):
     """Absorbed single-token decode reading/writing the paged latent pool.
 

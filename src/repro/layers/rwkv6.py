@@ -158,9 +158,14 @@ def _tm_inputs(p, x, xx):
 
 def _last_real_row(x, n_real):
     """Row ``n_real - 1`` of (B,T,d) — the shift state a bucket-padded chunk
-    must carry (``x[:, -1]`` when n_real is None / the chunk is unpadded)."""
+    must carry (``x[:, -1]`` when n_real is None / the chunk is unpadded).
+    ``n_real`` may be a per-lane ``(B,)`` vector (the fused packed step):
+    each lane then carries its own last real row."""
     if n_real is None:
         return x[:, -1]
+    if jnp.ndim(n_real) > 0:
+        idx = (jnp.asarray(n_real, jnp.int32) - 1)[:, None, None]
+        return jnp.take_along_axis(x, jnp.maximum(idx, 0), axis=1)[:, 0]
     return jax.lax.dynamic_slice_in_dim(x, n_real - 1, 1, axis=1)[:, 0]
 
 
@@ -168,8 +173,9 @@ def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *,
                   use_kernel=False, n_real=None):
     """x: (B,T,d). shift_prev: (B,d) hidden state of last token from prev chunk.
 
-    ``n_real`` (traced scalar) marks the last real row of a bucket-padded
-    chunk: padded rows get ``w = 0`` (decay ``exp(0) = 1``) and ``k = 0`` (no
+    ``n_real`` (traced scalar, or per-lane ``(B,)`` vector in the fused
+    packed step) marks the last real row of a bucket-padded chunk: padded
+    rows get ``w = 0`` (decay ``exp(0) = 1``) and ``k = 0`` (no
     kv outer-product update), so the carried wkv state after the chunk is
     bit-exactly the state after the last real token; the returned shift state
     is that token's row rather than the padding tail.
@@ -190,7 +196,8 @@ def rwkv_time_mix(p, cfg: ModelConfig, x, shift_prev, wkv_state, *,
     g = jax.nn.silu(linear(p["wg"], xg))
     w = logw.reshape(B, T, H, hd)
     if n_real is not None:
-        m = (jnp.arange(T) < n_real)[None, :, None, None]
+        nr = jnp.asarray(n_real, jnp.int32).reshape(-1, 1)     # (1|B, 1)
+        m = (jnp.arange(T)[None, :] < nr)[:, :, None, None]
         k = k * m
         w = w * m
 

@@ -79,6 +79,21 @@ def decode_step_paged(params, cfg: ModelConfig, pools, block_tables,
                                     tokens, pos, impl=impl)
 
 
+def serve_step_paged(params, cfg: ModelConfig, tokens, pools, block_tables,
+                     q_starts, n_reals, *, n_decode: int, prefix_embeds=None,
+                     read_pps=None, impl: str = "pallas"):
+    """One FUSED engine step: every decode lane and every request's prompt
+    chunk packed into a (R, Tc) row batch served by a single jitted call
+    (one attention launch per layer) -> (logits (R,V), pools). Row logits
+    are bit-identical to the per-request ``decode_step_paged`` /
+    ``prefill_chunk_paged`` calls the packed rows replace. Jit'd; the trace
+    count is bounded by the (rows x tokens) bucket ladder."""
+    return lm.serve_step_paged_jit(params, cfg, tokens, pools, block_tables,
+                                   q_starts, n_reals, n_decode=n_decode,
+                                   prefix_embeds=prefix_embeds,
+                                   read_pps=read_pps, impl=impl)
+
+
 # ---------------------------------------------------------------------------
 # Inputs per (arch, shape)
 # ---------------------------------------------------------------------------

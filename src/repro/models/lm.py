@@ -636,6 +636,190 @@ def decode_step_paged_jit(params, cfg: ModelConfig, pools, block_tables,
                                        pos)
 
 
+def _group_fwd_mixed(gp, cfg: ModelConfig, x, pools, tables_g, *,
+                     q_starts, n_reals, n_decode: int,
+                     read_pps: Optional[int], impl: str):
+    """One layer group of a PACKED engine step: rows ``[:n_decode]`` are
+    decode lanes (single real token at column 0), the rest prefill chunk
+    rows — every plane dispatches per row REGION so each mode keeps its
+    per-request math bit-exactly (absorbed MLA decode, batched recurrent
+    decode steps, per-lane ``n_real`` identity transitions for chunk rows),
+    while the attention plane serves every row in ONE fused kernel launch.
+
+    tables_g: token planes ``(n_sub, R, pps_pad)``, state planes
+    ``(n_sub, R)`` — one row per packed lane, scratch for idle/pad rows.
+    """
+    R, Tc, _ = x.shape
+    nd, Rp = n_decode, x.shape[0] - n_decode
+    idx: Counter = Counter()
+
+    def merge(h_dec, h_chunk, d):
+        if h_dec is not None and Tc > 1:
+            h_dec = jnp.concatenate(
+                [h_dec, jnp.zeros((nd, Tc - 1, d), h_dec.dtype)], axis=1)
+        parts = [h for h in (h_dec, h_chunk) if h is not None]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+    for i in range(group_size(cfg)):
+        p = gp[f"sub{i}"]
+        kind = mixer_kind(cfg, i)
+        if kind == "rwkv":
+            j = idx["wkv"]
+            idx["wkv"] += 1
+            ws, ss = tables_g["wkv"][j], tables_g["shift"][j]
+            norms = {"n1": p["n1"], "n2": p["n2"]}
+            x_dec = x_chunk = None
+            if nd:
+                st = rwkv_mod.RWKVState(pools["wkv"][ws[:nd]],
+                                        pools["shift"][ss[:nd]][:, 0],
+                                        pools["shift"][ss[:nd]][:, 1])
+                x_dec, nst = rwkv_mod.rwkv_block(p["mix"], cfg, x[:nd, :1],
+                                                 st, norms)
+                shift = jnp.stack([nst.tm_shift, nst.cm_shift],
+                                  axis=-2).astype(pools["shift"].dtype)
+                pools["wkv"] = pools["wkv"].at[ws[:nd]].set(nst.wkv)
+                pools["shift"] = pools["shift"].at[ss[:nd]].set(shift)
+            if Rp:
+                st = rwkv_mod.RWKVState(pools["wkv"][ws[nd:]],
+                                        pools["shift"][ss[nd:]][:, 0],
+                                        pools["shift"][ss[nd:]][:, 1])
+                x_chunk, nst = rwkv_mod.rwkv_block(p["mix"], cfg, x[nd:], st,
+                                                   norms, n_real=n_reals[nd:])
+                shift = jnp.stack([nst.tm_shift, nst.cm_shift],
+                                  axis=-2).astype(pools["shift"].dtype)
+                pools["wkv"] = pools["wkv"].at[ws[nd:]].set(nst.wkv)
+                pools["shift"] = pools["shift"].at[ss[nd:]].set(shift)
+            # the rwkv block carries its own residual: decode rows keep
+            # their garbage tail columns unchanged
+            if x_dec is not None and Tc > 1:
+                x_dec = jnp.concatenate([x_dec, x[:nd, 1:]], axis=1)
+            parts = [h for h in (x_dec, x_chunk) if h is not None]
+            x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+            continue
+        h = rms_norm(p["n1"], x, cfg.rmsnorm_eps)
+        if kind == "mamba":
+            j = idx["ssm"]
+            idx["ssm"] += 1
+            ss, cs = tables_g["ssm"][j], tables_g["conv"][j]
+            h_dec = h_chunk = None
+            if nd:
+                st = mamba_mod.MambaState(pools["ssm"][ss[:nd]],
+                                          pools["conv"][cs[:nd]])
+                h_dec, nst = mamba_mod.mamba_decode(p["mix"], cfg,
+                                                    h[:nd, :1], st)
+                pools["ssm"] = pools["ssm"].at[ss[:nd]].set(nst.ssm)
+                pools["conv"] = pools["conv"].at[cs[:nd]].set(
+                    nst.conv.astype(pools["conv"].dtype))
+            if Rp:
+                st = mamba_mod.MambaState(pools["ssm"][ss[nd:]],
+                                          pools["conv"][cs[nd:]])
+                h_chunk, nst = mamba_mod.mamba_forward(p["mix"], cfg, h[nd:],
+                                                       st,
+                                                       n_real=n_reals[nd:])
+                pools["ssm"] = pools["ssm"].at[ss[nd:]].set(nst.ssm)
+                pools["conv"] = pools["conv"].at[cs[nd:]].set(
+                    nst.conv.astype(pools["conv"].dtype))
+            h = merge(h_dec, h_chunk, h.shape[-1])
+        elif kind == "mla":
+            j = idx["mla"]
+            idx["mla"] += 1
+            h, pools["mla"] = mla_mod.mla_mixed_paged(
+                p["mix"], cfg, h, pools["mla"], tables_g["mla"][j],
+                q_starts, n_reals, n_decode=nd, read_pps=read_pps)
+        else:
+            j = idx["kv"]
+            idx["kv"] += 1
+            h, pools["kv"] = attn.attention_mixed_paged(
+                p["mix"], cfg, h, pools["kv"], tables_g["kv"][j],
+                q_starts, n_reals, n_decode=nd, read_pps=read_pps, impl=impl)
+        x = x + h
+        x = _ffn_apply(p, cfg, x, i, dropless=True)
+    return x, pools
+
+
+def serve_step_paged(params, cfg: ModelConfig, tokens, pools, block_tables,
+                     q_starts, n_reals, *, n_decode: int, prefix_embeds=None,
+                     read_pps: Optional[int] = None, impl: str = "pallas"):
+    """ONE fused engine step: every scheduled decode token and every
+    request's prompt chunk in a single jitted call — any family.
+
+    tokens: (R, Tc) packed rows. Rows ``[:n_decode]`` are decode lanes
+    (``Tc`` is 1 on all-decode steps): the lane's next token at column 0,
+    ``q_starts[r]`` its position, ``n_reals[r] = 1``; idle lanes hold token
+    0 at position 0 against the scratch page. Rows ``[n_decode:]`` are
+    prefill chunk rows: ``n_reals[r]`` prompt tokens from absolute position
+    ``q_starts[r]``, bucket-padded in both axes (``n_real == 0`` marks a
+    pad row pointing at scratch).
+    pools: {plane: pool} LOCAL pools; block_tables: token planes
+    ``(G, n_sub, R, pps_pad)`` int32 physical slots from position 0, state
+    planes ``(G, n_sub, R)`` bare slots — one row per packed lane.
+    prefix_embeds: (R, P, d) VLM prefix rows (zeros for non-VLM rows) —
+    chunk rows covering absolute positions < P take these embeddings.
+    -> (logits (R, V) of each row's last real token, updated pools)
+
+    Row r's logits are bit-identical to the per-request entry point that
+    row replaces (``decode_step_paged`` / ``prefill_chunk_paged``): each
+    plane dispatches decode and chunk row regions through its per-request
+    math, and the fused attention kernel's per-row reduction order is the
+    per-request kernels'. What changes is the launch count: one jitted
+    dispatch and one attention launch per layer for the WHOLE step, instead
+    of one call per admitted request's chunk plus one more for decode.
+    """
+    assert supports_paged(cfg), f"{cfg.name}: not paged-servable"
+    TRACE_COUNTS["serve_step"] += 1
+    R, Tc = tokens.shape
+    q_starts = jnp.asarray(q_starts, jnp.int32).reshape(-1)
+    n_reals = jnp.asarray(n_reals, jnp.int32).reshape(-1)
+    x = embed(params["embed"], cfg, tokens)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        rows = q_starts[:, None] + jnp.arange(Tc, dtype=jnp.int32)[None, :]
+        pre = jnp.take_along_axis(prefix_embeds,
+                                  jnp.clip(rows, 0, P - 1)[:, :, None],
+                                  axis=1)
+        x = jnp.where((rows < P)[:, :, None], pre.astype(x.dtype), x)
+
+    def scan_body(carry, xs):
+        x, pools = carry
+        gp, tg = xs
+        x, pools = _group_fwd_mixed(gp, cfg, x, dict(pools), tg,
+                                    q_starts=q_starts, n_reals=n_reals,
+                                    n_decode=n_decode, read_pps=read_pps,
+                                    impl=impl)
+        return (x, pools), None
+
+    (x, pools), _ = jax.lax.scan(scan_body, (x, pools),
+                                 (params["blocks"], block_tables))
+    x = rms_norm(params["final_norm"], x, cfg.rmsnorm_eps)
+    last = jnp.take_along_axis(x, jnp.clip(n_reals - 1, 0, Tc - 1)
+                               [:, None, None], axis=1)
+    logits = unembed(params["embed"], cfg, last)[:, 0]
+    return logits, pools
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_step_jit(cfg: ModelConfig, impl: str, read_pps: Optional[int],
+                    n_decode: int):
+    """One compiled program per (config, impl, n_decode, shape bucket)."""
+    return jax.jit(lambda params, tokens, pools, bt, q_starts, n_reals, pre:
+                   serve_step_paged(params, cfg, tokens, pools, bt, q_starts,
+                                    n_reals, n_decode=n_decode,
+                                    prefix_embeds=pre, read_pps=read_pps,
+                                    impl=impl))
+
+
+def serve_step_paged_jit(params, cfg: ModelConfig, tokens, pools,
+                         block_tables, q_starts, n_reals, *, n_decode: int,
+                         prefix_embeds=None, read_pps: Optional[int] = None,
+                         impl: str = "pallas"):
+    """Jit'd fused step: callers pass bucket-padded row counts and chunk
+    lengths, so the trace count is bounded by the (rows x tokens) bucket
+    ladder — flat in the number of admitted requests."""
+    return _serve_step_jit(cfg, impl, read_pps, n_decode)(
+        params, tokens, pools, block_tables, q_starts, n_reals,
+        prefix_embeds)
+
+
 def _group_decode(gp, cfg: ModelConfig, x, cache, pos, shard_axes=None):
     new_cache = {}
     for i in range(group_size(cfg)):

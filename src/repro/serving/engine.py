@@ -21,12 +21,29 @@ with the longest prompt. Recurrent planes stay exact across chunk
 boundaries (masked identity transitions for the bucket padding). A VLM
 prompt's ``prefix_embeds`` occupy its first ``n_prefix`` positions and are
 injected into the chunks that cover them (the ``q_start == 0`` side of the
-prompt). All paged entry points go through shape buckets — chunk lengths
-pad to a power-of-two ladder, block tables and decode lanes to fixed sizes
-— so the jit cache holds a constant number of traces regardless of the
-prompt-length mix. Page restores for the NEXT step's scheduled requests are
-prefetched during the current step and priced with the transfer hidden up
-to the step's compute time (``perfmodel.overlapped_transfer_time``).
+prompt).
+
+The whole step is ONE JITTED CALL (``api.serve_step_paged``): every decode
+lane and every scheduled prompt chunk is packed into a single (rows x
+chunk-bucket) token batch with per-row ``(q_start, n_real, is_decode)``
+metadata, and each layer serves all rows in one fused mixed-mode attention
+launch. The per-request chunk loop and the separate decode call are GONE
+from the engine — dispatch overhead per step is O(1) in the number of
+admitted requests instead of O(requests) (the between-launch idle regime
+of Kossmann et al. 2024), priced by ``perfmodel.launch_overhead_time``.
+Row logits are bit-identical to the per-request entry points the packed
+rows replace. When ``split_step_budget`` leaves token-budget slack (every
+admitted prefill fully granted), the head-of-line WAITING prefill gets the
+slack as a speculative chunk riding the same call (parked again right
+after), so admission finds its prompt partially prefilled.
+
+All paged entry points go through shape buckets — chunk lengths and packed
+row counts pad to power-of-two ladders, block tables and decode lanes to
+fixed sizes — so the jit cache holds a constant number of traces
+regardless of the prompt-length mix or the number of admitted requests.
+Page restores for the NEXT step's scheduled requests are prefetched during
+the current step and priced with the transfer hidden up to the step's
+compute time (``perfmodel.overlapped_transfer_time``).
 
 The engine runs REAL model numerics (any paged-servable family in the zoo)
 on tiny configs in CI; its per-step wall-times are additionally priced by
@@ -71,16 +88,30 @@ class SchedulingInvariantError(RuntimeError):
 class EngineMetrics:
     sim_time: float = 0.0
     steps: int = 0
-    prefills: int = 0                     # prefill chunk executions
+    prefills: int = 0                     # prefill chunk rows executed
     preemptions: int = 0
     restores: int = 0
     prefetched_restores: int = 0          # restores overlapped with compute
     overlap_hidden_s: float = 0.0         # transfer time hidden by overlap
+    spec_chunks: int = 0                  # speculative chunk-ahead grants
+    spec_tokens: int = 0                  # tokens prefilled speculatively
+    # speculative tier flips ride OUTSIDE preemptions/restores: each spec
+    # chunk parks once after running (spec_chunks parks) and pages its
+    # prior speculated prefix back in first (spec_restores); the admission
+    # restore of a spec-parked request still counts in `restores`. The
+    # preemptions == restores symmetry therefore only holds when
+    # speculation never fired (spec_chunks == 0).
+    spec_restores: int = 0
     ttft: Dict[int, float] = field(default_factory=dict)
     rct: Dict[int, float] = field(default_factory=dict)
     fairness_trace: List[int] = field(default_factory=list)
     step_times: List[float] = field(default_factory=list)
     prefill_tokens_trace: List[int] = field(default_factory=list)
+    # kernel launches per step: fused (what the engine issues — one call,
+    # ~n_layers launches) vs the per-request baseline it replaced (one call
+    # per chunk row + one for decode, each ~n_layers launches)
+    launch_trace: List[int] = field(default_factory=list)
+    baseline_launch_trace: List[int] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -95,6 +126,7 @@ class ServingEngine:
                  paged_impl: str = "pallas",
                  step_tokens: Optional[int] = None,
                  prefetch: bool = True,
+                 spec_chunk_ahead: bool = True,
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
                  want_remote_bytes: float = 0.0, respond_every: int = 4):
@@ -117,6 +149,12 @@ class ServingEngine:
             step_tokens: per-step token budget for chunked prefill
                 (``None`` = whole-prompt chunks); must be >= 8.
             prefetch: overlap next-step page restores with compute.
+            spec_chunk_ahead: when the step's token budget has slack after
+                every admitted prefill is fully granted, speculatively
+                prefill the head-of-line WAITING request's next chunk
+                (page-headroom guarded, parked right after) instead of
+                idling the slack. Effective only with a ``step_tokens``
+                budget.
             coordinator/want_remote_bytes/respond_every: AQUA-LIB consumer
                 wiring — lease donor HBM at construction, poll reclaims
                 every ``respond_every`` steps.
@@ -148,6 +186,7 @@ class ServingEngine:
             raise ValueError("step_tokens must be >= 8 (one chunk bucket)")
         self.step_tokens = step_tokens
         self.prefetch = prefetch
+        self.spec_chunk_ahead = spec_chunk_ahead
 
         self.kv = kv or PagedStateRuntime(
             cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
@@ -297,18 +336,22 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self):
-        """Run ONE engine step: plan the run set, execute the plan, decode.
+        """Run ONE engine step: plan the run set, execute the plan as a
+        single fused call.
 
         In order: (1) poll coordinator reclaims every ``respond_every``
         steps; (2) ``sched.plan`` picks the run set under the physical-page
         budget; (3) ``_place`` parks preempted requests (page-table tier
-        flips), slots + restores scheduled ones, and runs this step's
-        prompt chunks under the ``step_tokens`` budget; (4) one decode token
-        for every resident prefilled request; (5) finished requests retire
-        (pages released — shared prefix pages survive while any sharer
-        lives); (6) next step's restores are prefetched, priced as hidden
-        up to this step's compute time. Metrics (TTFT/RCT on the simulated
-        clock, step times, fairness spread) accrue on ``self.metrics``.
+        flips) and slots + restores scheduled ones; (4) the WHOLE step's
+        work — one decode token per resident prefilled request plus every
+        pending prefill's fair-share chunk under the ``step_tokens`` budget
+        (plus one speculative chunk for the head-of-line waiter when the
+        budget has slack) — is packed into ONE ``api.serve_step_paged``
+        call; (5) finished requests retire (pages released — shared prefix
+        pages survive while any sharer lives); (6) next step's restores are
+        prefetched, priced as hidden up to this step's compute time.
+        Metrics (TTFT/RCT on the simulated clock, step times, launches per
+        step, fairness spread) accrue on ``self.metrics``.
 
         Raises:
             SchedulingInvariantError: the planned run set needs more batch
@@ -331,18 +374,21 @@ class ServingEngine:
             self.step_tokens, len(lanes),
             [r.prompt_positions - r.prefill_pos for r in pending])
 
-        compute_time, transfer_time = self._place(decision,
-                                                  list(zip(pending, chunks)))
+        transfer_time = self._place(decision)
 
         self.running = [r for r in decision.run if r.slot is not None]
         self.waiting = [r for r in self.waiting + decision.preempt
                         if r.slot is None and not r.done]
 
-        # one decode step for every resident request past its prefill
+        # all the step's model work — decode lanes + prompt chunks (+ a
+        # speculative chunk-ahead when the budget has slack) — in ONE call
         live = [r for r in self.running if not r.done and r.prefilled]
-        if live:
-            compute_time += self._decode(live)
-        step_time = compute_time + transfer_time
+        chunk_plan = [(r, n) for r, n in zip(pending, chunks)
+                      if n > 0 and r.slot is not None]
+        spec = self._pick_speculative(decision, len(lanes), chunks)
+        compute_time, fused_transfer = self._fused_step(live, chunk_plan,
+                                                        spec)
+        step_time = compute_time + transfer_time + fused_transfer
 
         # retire bookkeeping first: freed slots/pages raise the odds the
         # prefetch below fits (times are stamped after the prefetch)
@@ -377,13 +423,11 @@ class ServingEngine:
             fairness_spread(self.waiting + self.running))
 
     # ------------------------------------------------------------------
-    # placement: park preempted requests, slot + restore the scheduled set,
-    # run this step's prefill chunks
+    # placement: park preempted requests, slot + restore the scheduled set
     # ------------------------------------------------------------------
-    def _place(self, decision: Decision,
-               chunk_plan: List) -> tuple:
-        """Execute a plan. Returns ``(prefill_compute_time,
-        metered_transfer_time)``."""
+    def _place(self, decision: Decision) -> float:
+        """Execute a plan's page-table moves (park the preempted, slot and
+        restore the scheduled). Returns the metered transfer time."""
         m = self.metrics
         t_before = self.pager.meter.sim_time
         if self._prefetched:
@@ -419,16 +463,7 @@ class ServingEngine:
                 self.kv.restore(r.rid)       # ensure_local: coalesced page-in
                 r.parked = None
                 m.restores += 1
-        prefill_time = 0.0
-        ptoks = 0
-        for r, n in chunk_plan:
-            if n <= 0 or r.slot is None:
-                continue
-            prefill_time += self._prefill_chunk(r, n)
-            ptoks += n
-            m.prefills += 1
-        m.prefill_tokens_trace.append(ptoks)
-        return prefill_time, self.pager.meter.sim_time - t_before
+        return self.pager.meter.sim_time - t_before
 
     # ------------------------------------------------------------------
     # prefetch: restore next step's scheduled requests DURING this step,
@@ -455,65 +490,195 @@ class ServingEngine:
         return visible
 
     # ------------------------------------------------------------------
-    # runtime primitives
+    # the fused step: ALL model work in one jitted call
     # ------------------------------------------------------------------
-    def _prefill_chunk(self, r: ReqState, n_tokens: int) -> float:
-        """Run one prompt chunk: allocate its pages, write every plane's
-        state in place, produce the first token when the chunk completes the
-        prompt. ``n_tokens`` counts prompt POSITIONS — a VLM request's first
-        chunks cover its prefix-embedding rows, whose token ids are dummies
-        and whose residual rows come from ``prefix_embeds`` instead."""
-        start = r.prefill_pos
-        self.kv.ensure_capacity(r.rid, start + n_tokens)
-        # copy-on-write: a fully-matched prompt recomputes its final
-        # position INTO the shared tail page — clone it first
-        self.kv.make_writable(r.rid, start, start + n_tokens)
-        Tb = bucket_tokens(n_tokens)         # shape bucket, not exact length
-        toks = np.zeros((1, Tb), np.int32)
-        idx = np.arange(n_tokens) + start - r.n_prefix
-        text = idx >= 0
-        toks[0, :n_tokens][text] = np.asarray(r.prompt_tokens,
-                                              np.int32)[idx[text]]
-        bt = self.kv.block_tables_prefill(r.rid, pad_to=self._pps_pad)
-        logits, self.kv.pools = api.prefill_chunk_paged(
-            self.params, self.cfg, jnp.asarray(toks), self.kv.pools, bt,
-            jnp.int32(start), jnp.int32(n_tokens - 1),
-            prefix_embeds=r.prefix_embeds,
-            read_pps=self.kv.pps, impl=self.paged_impl)
-        r.prefill_pos = start + n_tokens
-        if not r.n_prefix:
-            # publish completed full prompt pages into the prefix index so
-            # later arrivals with the same prefix adopt them
-            self.kv.register_prefix(r.rid, r.prefill_pos)
-        if r.prefilled:
-            r.generated.append(int(jnp.argmax(logits[0])))
-        return self.cost.prefill_time(self.hw, n_tokens)
+    def _pick_speculative(self, decision: Decision, n_lanes: int,
+                          chunks: List[int]):
+        """Speculative chunk-ahead: when ``split_step_budget`` left slack
+        (every admitted prefill fully granted this step), hand it to the
+        head-of-line WAITING prefill as an extra chunk riding the same
+        fused call. The grant is capped at ``remaining - 1`` positions (the
+        final position — and the first token — stays for admission), must
+        be worth at least one page (a sub-page grant would pay the chunk's
+        park/restore flips for almost no prefill progress), skips requests
+        preempted THIS step (re-restoring them immediately would turn the
+        optimization into pure tier-flip thrash), and is page-headroom
+        guarded: the whole speculative context must fit the free LOCAL
+        slots of every plane. Returns ``(request, n_tokens)`` or ``None``.
 
-    def _decode(self, live: List[ReqState]) -> float:
-        tokens = np.zeros((self.max_running,), np.int32)
-        pos = np.zeros((self.max_running,), np.int32)
-        lanes: List[Optional[int]] = [None] * self.max_running
-        for r in live:
-            # the new token's position may cross into a fresh page: grow the
-            # block tables (allocation guarantees LOCAL; parked requests
-            # were already restored in _place). A decode append landing in
-            # a still-shared page copies it first (CoW).
-            self.kv.ensure_capacity(r.rid, r.ctx_len)
-            self.kv.make_writable(r.rid, r.ctx_len - 1, r.ctx_len)
-            lanes[r.slot] = r.rid
-            tokens[r.slot] = (r.generated[-1] if r.generated
-                              else r.prompt_tokens[-1])
-            pos[r.slot] = r.ctx_len - 1
-        bts = self.kv.block_tables(lanes)
-        logits, self.kv.pools = api.decode_step_paged(
-            self.params, self.cfg, self.kv.pools, bts,
-            jnp.asarray(tokens), jnp.asarray(pos), impl=self.paged_impl)
+        The headroom check is advisory — the run set's own same-step
+        growth (fresh decode pages, CoW clones) allocates first, so
+        ``_fused_step`` still treats the speculative allocation as
+        fallible and drops the row on ``MemoryError``."""
+        if not self.spec_chunk_ahead or self.step_tokens is None:
+            return None
+        slack = self.step_tokens - n_lanes - sum(chunks)
+        if slack < self.kv.page_tokens:
+            return None
+        skip = {r.rid for r in decision.run}
+        skip.update(r.rid for r in decision.preempt)
+        cands = sorted((r for r in self.waiting
+                        if r.rid not in skip and not r.prefilled
+                        and not r.done and r.slot is None),
+                       key=lambda r: (r.arrival, r.rid))
+        free = np.asarray([p.aqua.local_free
+                           for p in self.kv.planes.values()], np.int64)
+        for r in cands:
+            n = min(slack, r.prompt_positions - 1 - r.prefill_pos)
+            if n < self.kv.page_tokens:
+                continue
+            if np.all(self.kv.pages_per_request(r.prefill_pos + n) <= free):
+                return (r, n)
+        return None
+
+    def _fused_step(self, live: List[ReqState], chunk_plan: List,
+                    spec) -> tuple:
+        """Pack the step's work into one ``api.serve_step_paged`` call.
+
+        Rows ``[0, max_running)`` are the decode lanes (present whenever
+        any resident request decodes; idle lanes point at scratch), the
+        following rows one prompt chunk each — the run set's fair-share
+        chunks plus the optional speculative chunk — bucket-padded in both
+        axes. Returns ``(compute_time, metered_transfer_time)`` on the
+        analytic clock, including the O(1) per-step launch overhead
+        (``ModelCost.launch_time``)."""
+        m = self.metrics
+        rows_chunk = list(chunk_plan)
+        if spec is not None:
+            rows_chunk.append(spec)
+        if not live and not rows_chunk:
+            m.prefill_tokens_trace.append(0)
+            m.launch_trace.append(0)
+            m.baseline_launch_trace.append(0)
+            return 0.0, 0.0
+        t_before = self.pager.meter.sim_time
+        n_dec = self.max_running if live else 0
+        # packed shapes: with a step budget, the chunk region is FIXED at
+        # (max_running + 1 rows) x (budget bucket) whenever any chunk runs,
+        # so the jit cache is provably flat in the number of admitted
+        # requests (chunk rows are capped by the run set + one speculative
+        # row); the all-decode steady state stays at Tc = 1 with no chunk
+        # region. Unbudgeted (step_tokens=None) chunks are whole prompts,
+        # so their shapes ride the prompt-length bucket ladder instead.
+        if not rows_chunk:
+            Tc, Rp = 1, 0
+        elif self.step_tokens is not None:
+            Tc = bucket_tokens(self.step_tokens)
+            Rp = bucket_tokens(self.max_running + 1, lo=1)
+        else:
+            Tc = bucket_tokens(max(n for _, n in rows_chunk))
+            Rp = bucket_tokens(len(rows_chunk), lo=1)
+        R = n_dec + Rp
+        tokens = np.zeros((R, Tc), np.int32)
+        q_starts = np.zeros((R,), np.int32)
+        n_reals = np.zeros((R,), np.int32)
+        row_rids: List[Optional[int]] = [None] * R
+        prefix_rows = None
+        if self.cfg.n_prefix_embeds:
+            prefix_rows = [None] * R
+        if live:
+            n_reals[:n_dec] = 1              # idle lanes: token 0 at pos 0
+            ctx_mean = float(np.mean([r.ctx_len for r in live]))
+            for r in live:
+                # the new token's position may cross into a fresh page: grow
+                # the block tables (allocation guarantees LOCAL; parked
+                # requests were already restored in _place). A decode append
+                # landing in a still-shared page copies it first (CoW).
+                self.kv.ensure_capacity(r.rid, r.ctx_len)
+                self.kv.make_writable(r.rid, r.ctx_len - 1, r.ctx_len)
+                row_rids[r.slot] = r.rid
+                tokens[r.slot, 0] = (r.generated[-1] if r.generated
+                                     else r.prompt_tokens[-1])
+                q_starts[r.slot] = r.ctx_len - 1
+        for j, (r, n) in enumerate(rows_chunk):
+            row = n_dec + j
+            start = r.prefill_pos
+            if spec is not None and r is spec[0]:
+                if r.parked:
+                    m.spec_restores += 1    # its prior prefix pages page in
+                try:
+                    self.kv.ensure_capacity(r.rid, start + n)
+                except MemoryError:
+                    # the run set's own same-step growth (fresh decode
+                    # pages, CoW clones) beat _pick_speculative's advisory
+                    # headroom check — speculation is opportunistic: hand
+                    # back whatever the attempt pulled LOCAL and leave the
+                    # row as scratch padding
+                    self.kv.park(r.rid, r.prefill_pos,
+                                 prefer=self.offload_tier)
+                    r.parked = True
+                    rows_chunk = rows_chunk[:j]     # spec is always last
+                    spec = None
+                    break
+            else:
+                self.kv.ensure_capacity(r.rid, start + n)
+            # copy-on-write: a fully-matched prompt recomputes its final
+            # position INTO the shared tail page — clone it first
+            self.kv.make_writable(r.rid, start, start + n)
+            row_rids[row] = r.rid
+            # a VLM request's first chunks cover its prefix-embedding rows,
+            # whose token ids are dummies and whose residual rows come from
+            # prefix_embeds instead
+            idx = np.arange(n) + start - r.n_prefix
+            text = idx >= 0
+            tokens[row, :n][text] = np.asarray(r.prompt_tokens,
+                                               np.int32)[idx[text]]
+            q_starts[row] = start
+            n_reals[row] = n
+            if prefix_rows is not None:
+                prefix_rows[row] = r.prefix_embeds
+        pre = None
+        if prefix_rows is not None:
+            P, d = self.cfg.n_prefix_embeds, self.cfg.d_model
+            zero = jnp.zeros((1, P, d), self.cfg.dtype())
+            pre = jnp.concatenate([p if p is not None else zero
+                                   for p in prefix_rows], axis=0)
+        bt = self.kv.block_tables(row_rids, pad_to=self._pps_pad)
+        logits, self.kv.pools = api.serve_step_paged(
+            self.params, self.cfg, jnp.asarray(tokens), self.kv.pools, bt,
+            jnp.asarray(q_starts), jnp.asarray(n_reals), n_decode=n_dec,
+            prefix_embeds=pre, read_pps=self.kv.pps, impl=self.paged_impl)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        ctx_mean = float(np.mean([r.ctx_len for r in live]))
-        for r in live:
-            r.generated.append(int(nxt[r.slot]))
-        return self.cost.decode_step_time(self.hw, len(live), ctx_mean,
-                                          self.weight_bytes)
+
+        compute = 0.0
+        ptoks = 0
+        for j, (r, n) in enumerate(rows_chunk):
+            r.prefill_pos += n
+            if not r.n_prefix:
+                # publish completed full prompt pages into the prefix index
+                # so later arrivals with the same prefix adopt them
+                self.kv.register_prefix(r.rid, r.prefill_pos)
+            if r.prefilled:
+                r.generated.append(int(nxt[n_dec + j]))
+            m.prefills += 1
+            ptoks += n
+        if spec is not None:
+            r, n = spec
+            m.spec_chunks += 1
+            m.spec_tokens += n
+            # hand the pages straight back: the speculative request is not
+            # in the planned run set, and LOCAL must only hold that set
+            self.kv.park(r.rid, r.prefill_pos, prefer=self.offload_tier)
+            r.parked = True
+        if live:
+            for r in live:
+                r.generated.append(int(nxt[r.slot]))
+            # mixed step: the chunk rows share the decode launch's weight
+            # pass, so their FLOPs hide under the memory-bound decode
+            # stream (ModelCost.fused_step_time) instead of paying a
+            # separate per-request launch sequence
+            compute += self.cost.fused_step_time(self.hw, len(live),
+                                                 ctx_mean,
+                                                 self.weight_bytes, ptoks)
+        elif ptoks:
+            compute += self.cost.prefill_time(self.hw, ptoks)
+        # ONE jitted call per step: launches stay O(1) in admitted requests
+        compute += self.cost.launch_time(self.hw, 1)
+        m.prefill_tokens_trace.append(ptoks)
+        m.launch_trace.append(self.cost.n_layers)
+        m.baseline_launch_trace.append(
+            (len(rows_chunk) + (1 if live else 0)) * self.cost.n_layers)
+        return compute, self.pager.meter.sim_time - t_before
 
     # ------------------------------------------------------------------
     def run(self, max_steps: int = 1000):

@@ -21,8 +21,8 @@ directly inside the jit'd whole-step programs (attention through the
 shape-stable jnp gathers/scatters), so preemption is a *page-table tier
 flip* for every family:
 
-    park    = offload(pages)      one coalesced message per
-    restore = ensure_local(pages) (plane, tier, donor) group
+    park    = offload(pages)      one coalesced message per (tier, donor)
+    restore = ensure_local(pages) group across ALL planes of the request
 
 — no gather of cache leaves, no float32 blob, no repacking, for ANY family.
 Partial token-plane tails are metered at their valid fraction, so a parked
@@ -274,18 +274,20 @@ class PagedStateRuntime:
     def _activate(self, rid: int):
         """Mark the request active: pull every page it references LOCAL
         (adopted prefix pages may sit on another tier) and pin them there —
-        a pinned page is never offloaded by another sharer's park."""
+        a pinned page is never offloaded by another sharer's park. All
+        planes' page-ins ride ONE coalesced message per (tier, donor)."""
         if rid in self._active:
             return
         self._active.add(rid)
-        for plane in self.planes.values():
-            lps = plane.flat(rid)
-            if len(lps):
-                plane.aqua.ensure_local(lps)
-                plane.aqua.set_page_fill(lps, 1.0)
-                for lp in lps:
-                    lp = int(lp)
-                    plane.pin[lp] = plane.pin.get(lp, 0) + 1
+        with self.meter.coalesce():
+            for plane in self.planes.values():
+                lps = plane.flat(rid)
+                if len(lps):
+                    plane.aqua.ensure_local(lps)
+                    plane.aqua.set_page_fill(lps, 1.0)
+                    for lp in lps:
+                        lp = int(lp)
+                        plane.pin[lp] = plane.pin.get(lp, 0) + 1
 
     # -- allocation -------------------------------------------------------
     def ensure_capacity(self, rid: int, n_tokens: int):
@@ -550,12 +552,16 @@ class PagedStateRuntime:
                 out[name] = jnp.asarray(bt.reshape(self.G, plane.n_sub))
         return out
 
-    def block_tables(self, lane_rids: Sequence[Optional[int]]
-                     ) -> Dict[str, jnp.ndarray]:
-        """Batched decode query: token planes as (G, n_sub, B, pps) physical
-        LOCAL slots, state planes as (G, n_sub, B); empty lanes and padding
+    def block_tables(self, lane_rids: Sequence[Optional[int]],
+                     pad_to: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+        """Batched row query (decode lanes, or the fused step's packed
+        decode+chunk rows): token planes as (G, n_sub, B, pad_to) physical
+        LOCAL slots (``pad_to`` defaults to ``pps``; the fused step passes
+        ``pps`` plus the chunk write-window spill so every row shares one
+        shape), state planes as (G, n_sub, B); empty lanes and padding
         point at each plane's scratch page."""
         B = len(lane_rids)
+        tok_pad = pad_to or self.pps
         out = {}
         for name, plane in self.planes.items():
             rows: List[List[int]] = []
@@ -563,10 +569,10 @@ class PagedStateRuntime:
                 for rid in lane_rids:
                     rows.append(plane.pages[rid][l] if rid is not None else [])
             if plane.kind == "tokens":
-                bt = plane.aqua.block_tables(rows, pad_to=self.pps,
+                bt = plane.aqua.block_tables(rows, pad_to=tok_pad,
                                              pad_slot=plane.scratch_slot)
                 out[name] = jnp.asarray(
-                    bt.reshape(self.G, plane.n_sub, B, self.pps))
+                    bt.reshape(self.G, plane.n_sub, B, tok_pad))
             else:
                 bt = plane.aqua.block_tables(rows, pad_to=1,
                                              pad_slot=plane.scratch_slot)
@@ -575,9 +581,11 @@ class PagedStateRuntime:
 
     # -- tier migration (preempt / restore as page-table flips) ------------
     def park(self, rid: int, n_tokens: int, *, prefer: int = REMOTE):
-        """Preempt: flip the request's pages out of LOCAL — one coalesced
-        message per (plane, tier, donor) group, token pages metered at their
-        fill, state pages whole (they are always fully live).
+        """Preempt: flip the request's pages out of LOCAL — ALL planes fused
+        into one coalesced message per (tier, donor) group (a hybrid's kv +
+        ssm + conv pages ride one staging buffer, not one message per
+        plane), token pages metered at their fill, state pages whole (they
+        are always fully live).
 
         ``n_tokens`` is the context actually RESIDENT in the pools (for an
         engine request at ctx_len that is ctx_len-1: the newest token's
@@ -590,28 +598,29 @@ class PagedStateRuntime:
         referencer parks, and is metered full (its payload is complete
         whatever this request's own resident prefix is).
         """
-        for plane in self.planes.values():
-            if rid not in plane.pages:
-                continue
-            if plane.kind == "tokens":
-                for row in plane.pages[rid]:
-                    fills = np.clip(
-                        n_tokens - np.arange(len(row)) * self.page_tokens,
-                        0, self.page_tokens) / self.page_tokens
-                    # shared prefix pages are always fully written (only
-                    # full prompt pages enter the index)
-                    fills = np.where(plane.aqua.refcounts(row) > 1,
-                                     1.0, fills)
-                    plane.aqua.set_page_fill(row, fills)
-            lps = plane.flat(rid)
-            if rid in self._active:
-                for lp in lps:
-                    self._unpin(plane, int(lp))
-            victims = [int(lp) for lp in lps
-                       if plane.pin.get(int(lp), 0) == 0]
-            if victims:
-                plane.aqua.offload(np.asarray(victims, np.int64),
-                                   prefer=prefer)
+        with self.meter.coalesce():
+            for plane in self.planes.values():
+                if rid not in plane.pages:
+                    continue
+                if plane.kind == "tokens":
+                    for row in plane.pages[rid]:
+                        fills = np.clip(
+                            n_tokens - np.arange(len(row)) * self.page_tokens,
+                            0, self.page_tokens) / self.page_tokens
+                        # shared prefix pages are always fully written (only
+                        # full prompt pages enter the index)
+                        fills = np.where(plane.aqua.refcounts(row) > 1,
+                                         1.0, fills)
+                        plane.aqua.set_page_fill(row, fills)
+                lps = plane.flat(rid)
+                if rid in self._active:
+                    for lp in lps:
+                        self._unpin(plane, int(lp))
+                victims = [int(lp) for lp in lps
+                           if plane.pin.get(int(lp), 0) == 0]
+                if victims:
+                    plane.aqua.offload(np.asarray(victims, np.int64),
+                                       prefer=prefer)
         self._active.discard(rid)
 
     def restore(self, rid: int):
@@ -665,9 +674,10 @@ class PagedStateRuntime:
         Raises:
             MemoryError: the host tier cannot absorb the evacuation.
         """
-        return sum(p.aqua.evict_remote(donor)
-                   for p in self.planes.values()
-                   if donor in p.aqua.remote_pools)
+        with self.meter.coalesce():
+            return sum(p.aqua.evict_remote(donor)
+                       for p in self.planes.values()
+                       if donor in p.aqua.remote_pools)
 
     def stats(self) -> Dict:
         """Tier occupancy per plane, transfer-meter totals, and the prefix-

@@ -313,9 +313,8 @@ def test_retrace_guard_trace_count_flat_across_family_mix():
     c1 = lm.trace_counts()
     serve([6, 11, 15])                                # all-new lengths
     c2 = lm.trace_counts()
-    assert c2.get("prefill_chunk", 0) == c1.get("prefill_chunk", 0)
-    assert c2.get("decode_step", 0) == c1.get("decode_step", 0)
-    # chunk shapes live on the bucket ladder (<= 8-token chunks here):
-    # one prefill bucket + one decode trace per family
-    assert c2.get("prefill_chunk", 0) <= 2 * len(cfgs)
-    assert c2.get("decode_step", 0) <= len(cfgs)
+    # the fused step is the engine's sole entry point: trace count flat
+    # across a second wave of all-new distinct lengths, for every family
+    assert c2.get("serve_step", 0) == c1.get("serve_step", 0)
+    # packed shapes live on the (chunk-bucket x row-bucket) ladder
+    assert c2.get("serve_step", 0) <= 8 * len(cfgs)
