@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the committed BENCH_*.json trajectories.
+
+Compares the working tree's BENCH files against the same files at a base
+commit (default ``HEAD~1``, i.e. the previous PR tip on a linear history)
+and FAILS when a gated metric regressed by more than the threshold:
+
+  * step-time tail latency   — leaf keys containing ``step_time_p99``
+  * kernel-launch pressure   — leaf keys containing ``launches_per_step``
+
+Only INCREASES fail (these metrics are all lower-is-better), only beyond
+``--threshold`` (default 15%) relative, and only above a small absolute
+floor so sub-microsecond jitter near zero can't trip the gate. Paths
+holding the per-request BASELINE trajectories (``per_request`` /
+``baseline`` segments) are exempt: the baseline growing while the fused
+numbers hold is the fused path getting MORE work for the same launches,
+not a regression. Wall-clock keys (``wall_`` prefix) are never gated —
+shared-CI wall time is not a perf surface.
+
+A file or base commit that does not exist yet passes with a note (first
+PR that introduces a trajectory has nothing to diff against).
+
+    python scripts/check_bench_regression.py [--base HEAD~1] [--threshold 0.15]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+GATED_SUBSTRINGS = ("step_time_p99", "launches_per_step")
+EXEMPT_SEGMENTS = ("per_request", "baseline", "no_speculation")
+ABS_FLOOR = 1e-9          # seconds / launches below this never gate
+
+
+def flatten(obj, prefix=""):
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            out.update(flatten(v, f"{prefix}{k}/"))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix.rstrip("/")] = float(obj)
+    return out
+
+
+def gated(path: str) -> bool:
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf.startswith("wall_"):
+        return False
+    if any(seg in path for seg in EXEMPT_SEGMENTS):
+        return False
+    return any(s in leaf for s in GATED_SUBSTRINGS)
+
+
+def base_blob(base: str, name: str, repo: str):
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{base}:{name}"], cwd=repo,
+            capture_output=True, text=True, check=True).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="HEAD~1",
+                    help="git rev holding the reference BENCH files")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed relative increase on gated metrics")
+    ap.add_argument("files", nargs="*",
+                    help="BENCH files to check (default: BENCH_*.json)")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = args.files or sorted(
+        os.path.relpath(p, repo)
+        for p in glob.glob(os.path.join(repo, "BENCH_*.json")))
+    failures = []
+    checked = 0
+    for name in files:
+        with open(os.path.join(repo, name)) as f:
+            head = flatten(json.load(f))
+        base = base_blob(args.base, name, repo)
+        if base is None:
+            print(f"  {name}: no base at {args.base} (new trajectory) -- ok")
+            continue
+        base = flatten(base)
+        for path, new in sorted(head.items()):
+            if not gated(path) or path not in base:
+                continue
+            old = base[path]
+            checked += 1
+            if old <= ABS_FLOOR or new <= old:
+                continue
+            rel = (new - old) / old
+            status = "FAIL" if rel > args.threshold else "ok"
+            if rel > args.threshold:
+                failures.append((name, path, old, new, rel))
+            if rel > 0.02 or status == "FAIL":
+                print(f"  {name}:{path}: {old:.6g} -> {new:.6g} "
+                      f"(+{100 * rel:.1f}%) {status}")
+    print(f"bench gate: {checked} gated metrics vs {args.base}, "
+          f"{len(failures)} over the {100 * args.threshold:.0f}% threshold")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

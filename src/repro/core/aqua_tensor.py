@@ -26,12 +26,24 @@ metered at its valid fraction only.
 Elasticity: the remote tier is backed by *leases* from the coordinator; a
 donor can reclaim its memory at any iteration boundary via ``evict_remote``.
 
-On this CPU container every tier is a real buffer on the single device, so
-all data paths (gather -> transfer -> scatter) execute and are testable
-bit-exactly; on a multi-chip mesh the remote pool is resident on the donor
-and the staging transfer is one ppermute. Every movement is metered
-(bytes, messages, tier) and priced by core/perfmodel.py — that is the
-simulated clock the benchmarks report.
+Two REMOTE backends share one data path:
+
+  single-device (mesh=None)   every tier is a real buffer on the serving
+      device; transfers are gather -> staging -> scatter on one chip. Always
+      available, bit-exact, and the reference the mesh backend is tested
+      against.
+  mesh-real (mesh=MeshTierDomain)   a donor lease is an actual slab of a
+      PEER device's memory (distributed/mesh_tiers.py): the pool is sharded
+      over the domain's 1-D mesh with the donor's rows resident on the donor
+      device, and each (tier, donor) leg of offload/ensure_local/evict_remote
+      lowers to ONE ``ppermute`` collective — physically matching the
+      TransferMeter's one-message-per-leg pricing. Host staging exists only
+      on the HOST leg.
+
+Every movement is metered (bytes, messages, tier) and priced by
+core/perfmodel.py — that is the simulated clock the benchmarks report; on a
+mesh the clock is additionally CALIBRATED against measured collective times
+(``MeshTierDomain.calibrated_profile``).
 """
 from __future__ import annotations
 
@@ -118,8 +130,12 @@ class AquaTensor:
 
     def __init__(self, *, n_logical: int, page_shape: Tuple[int, ...],
                  local_slots: int, host_slots: int, dtype=jnp.bfloat16,
-                 meter: Optional[TransferMeter] = None, name: str = "kv"):
+                 meter: Optional[TransferMeter] = None, name: str = "kv",
+                 mesh=None):
         self.name = name
+        # optional MeshTierDomain: REMOTE pools become donor-device slabs and
+        # remote legs become collectives (duck-typed; None = single-device)
+        self.mesh = mesh
         self.page_shape = tuple(page_shape)
         self.dtype = jnp.dtype(dtype)
         self.page_bytes = int(np.prod(page_shape)) * self.dtype.itemsize
@@ -148,11 +164,22 @@ class AquaTensor:
     # lease management (driven by the coordinator)
     # ------------------------------------------------------------------
     def add_remote_lease(self, donor: str, slots: int):
-        """Donor offered `slots` pages of its HBM (coordinator /lease)."""
+        """Donor offered `slots` pages of its HBM (coordinator /lease).
+
+        A donor evicted earlier may re-lease: its ``_donors`` entry is
+        REUSED, never duplicated — a second append would leave the old
+        index resolvable to the new pool for any stale ``donor_idx`` and
+        split one physical donor across two bookkeeping identities."""
         assert donor not in self.remote_pools
-        self.remote_pools[donor] = jnp.zeros((slots,) + self.page_shape, self.dtype)
+        if self.mesh is not None:
+            self.remote_pools[donor] = self.mesh.alloc_pool(
+                donor, slots, self.page_shape, self.dtype)
+        else:
+            self.remote_pools[donor] = jnp.zeros(
+                (slots,) + self.page_shape, self.dtype)
         self._remote_free[donor] = list(range(slots))[::-1]
-        self._donors.append(donor)
+        if donor not in self._donors:
+            self._donors.append(donor)
 
     def evict_remote(self, donor: str) -> int:
         """Donor reclaims its lease: evacuate pages to host, drop the pool."""
@@ -246,6 +273,30 @@ class AquaTensor:
         raise MemoryError(f"{self.name}: all tiers full")
 
     # ------------------------------------------------------------------
+    # remote-pool transfer legs (mesh-aware)
+    # ------------------------------------------------------------------
+    def _remote_gather(self, donor: str, slots) -> jnp.ndarray:
+        """Pull `slots` out of a donor pool as one contiguous staging batch.
+        Mesh backend: one ``ppermute`` donor -> serving device."""
+        pool = self.remote_pools[donor]
+        slots = np.asarray(slots, np.int32)
+        if self.mesh is not None:
+            return self.mesh.pull(pool, donor, slots)
+        return kv_ops.gather_pages(pool, jnp.asarray(slots))
+
+    def _remote_scatter(self, donor: str, slots, data: jnp.ndarray):
+        """Push a contiguous staging batch into a donor pool at `slots`.
+        Mesh backend: one ``ppermute`` serving device -> donor."""
+        pool = self.remote_pools[donor]
+        slots = np.asarray(slots, np.int32)
+        data = data.astype(self.dtype)
+        if self.mesh is not None:
+            self.remote_pools[donor] = self.mesh.push(pool, donor, slots, data)
+        else:
+            self.remote_pools[donor] = kv_ops.scatter_pages(
+                pool, data, jnp.asarray(slots))
+
+    # ------------------------------------------------------------------
     # data access
     # ------------------------------------------------------------------
     def write_local(self, lps: Sequence[int], data: jnp.ndarray):
@@ -274,9 +325,7 @@ class AquaTensor:
                 for di in np.unique(rows[idx, 2]):
                     sub = idx[rows[idx, 2] == di]
                     d = self._donors[int(di)]
-                    self.remote_pools[d] = kv_ops.scatter_pages(
-                        self.remote_pools[d], data[sub],
-                        jnp.asarray(rows[sub, 1].astype(np.int32)))
+                    self._remote_scatter(d, rows[sub, 1], data[sub])
                     if meter:
                         self.meter.record(data[sub].nbytes, REMOTE, len(sub))
             else:
@@ -286,26 +335,45 @@ class AquaTensor:
 
     def read(self, lps: Sequence[int], *, meter: bool = False) -> jnp.ndarray:
         """Gather page payloads regardless of tier (does not migrate).
-        meter=True prices the non-local groups as coalesced page-in
-        transfers (the restore leg of a context switch)."""
-        rows = self.page_table[np.asarray(lps, np.int64)]
-        out = []
-        for lp in lps:
-            tier, slot, donor = self.page_table[lp]
+        Batched per (tier, donor) group — one gather (one collective, on a
+        mesh) per group, reassembled into request order. meter=True prices
+        the non-local groups as coalesced page-in transfers (the restore leg
+        of a context switch)."""
+        lps = np.asarray(lps, np.int64)
+        rows = self.page_table[lps]
+        if len(lps) == 0:
+            return jnp.zeros((0,) + self.page_shape, self.dtype)
+        parts: List[jnp.ndarray] = []
+        order: List[np.ndarray] = []
+        for tier in (LOCAL, REMOTE, HOST):
+            idx = np.nonzero(rows[:, 0] == tier)[0]
+            if not len(idx):
+                continue
             if tier == LOCAL:
-                out.append(self.local_pool[slot])
-            elif tier == REMOTE:
-                out.append(self.remote_pools[self._donors[donor]][slot])
+                parts.append(self.local_pool[jnp.asarray(
+                    rows[idx, 1].astype(np.int32))])
+                order.append(idx)
+            elif tier == HOST:
+                parts.append(jnp.asarray(
+                    self.host_pool[rows[idx, 1].astype(np.int64)]))
+                order.append(idx)
             else:
-                out.append(jnp.asarray(self.host_pool[slot]))
+                for di in np.unique(rows[idx, 2]):
+                    sub = idx[rows[idx, 2] == di]
+                    parts.append(self._remote_gather(
+                        self._donors[int(di)], rows[sub, 1]))
+                    order.append(sub)
+        combined = jnp.concatenate(parts, axis=0)
+        positions = np.concatenate(order)
+        out = combined[jnp.asarray(np.argsort(positions, kind="stable"))]
         if meter:
-            fills = self.page_fill[np.asarray(lps, np.int64)]
+            fills = self.page_fill[lps]
             for tier in (REMOTE, HOST):
                 idx = np.nonzero(rows[:, 0] == tier)[0]
                 if len(idx):
                     self.meter.record(float(fills[idx].sum()) * self.page_bytes,
                                       tier, len(idx))
-        return jnp.stack(out)
+        return out
 
     def local_slots_of(self, lps: Sequence[int]) -> np.ndarray:
         return self._slots_of(lps, LOCAL)
@@ -375,8 +443,7 @@ class AquaTensor:
                     self._free_local.append(int(s))
             elif src_tier == REMOTE:
                 donor_name = self._donors[src_donor]
-                staging = kv_ops.gather_pages(self.remote_pools[donor_name],
-                                              jnp.asarray(slots))
+                staging = self._remote_gather(donor_name, slots)
                 for s in slots:
                     self._remote_free[donor_name].append(int(s))
             else:
@@ -422,9 +489,8 @@ class AquaTensor:
                     if take <= 0:
                         continue
                     dst_slots = [free.pop() for _ in range(take)]
-                    self.remote_pools[d] = kv_ops.scatter_pages(
-                        self.remote_pools[d], staging[placed:placed + take],
-                        jnp.asarray(dst_slots, jnp.int32))
+                    self._remote_scatter(d, dst_slots,
+                                         staging[placed:placed + take])
                     new_rows += [(REMOTE, s, di) for s in dst_slots]
                     meter(placed, placed + take, REMOTE, d)
                     placed += take

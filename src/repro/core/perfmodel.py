@@ -16,7 +16,11 @@ quantitative basis of the AQUA TENSORS coalescing requirement.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -192,6 +196,24 @@ class ModelCost:
         t_mem = (weight_bytes + kv_read) / (hw.hbm_bw * hw.membw_util)
         return max(t_flops, t_mem)
 
+    def piggyback_tokens(self, hw: HardwareProfile, batch: int,
+                         ctx_tokens: float, weight_bytes: float) -> int:
+        """How many prompt-chunk tokens ride a decode launch FOR FREE.
+
+        A decode step is memory-bound: its roofline floor is the weight +
+        KV stream time ``t_mem``, while each token of compute costs only
+        ``t_tok`` of FLOPs. Chunk tokens added to the fused launch hide
+        under that stream until total FLOPs reach ``t_mem`` — the roofline
+        crossover. This is the scheduler's slack budget: sizing
+        ``split_step_budget`` chunks to it keeps mixed steps exactly AT the
+        roofline instead of spilling past it (each extra token beyond the
+        window extends the step linearly).
+        """
+        t_tok = 2.0 * self.n_params / (hw.flops_peak * hw.mfu)
+        kv_read = self.kv_bytes_per_token * ctx_tokens * batch
+        t_mem = (weight_bytes + kv_read) / (hw.hbm_bw * hw.membw_util)
+        return max(int(t_mem / t_tok) - batch, 0)
+
     def kv_bytes(self, n_tokens: float) -> float:
         return self.kv_bytes_per_token * n_tokens
 
@@ -267,3 +289,59 @@ def page_flip_time(hw: HardwareProfile, payload_bytes: float, *,
     """
     link = hw.fabric if tier == "fabric" else hw.host_link
     return link.time(payload_bytes, n_messages=max(1, n_groups))
+
+
+# ---------------------------------------------------------------------------
+# Clock calibration: fit the alpha/beta link model to MEASURED transfers
+# ---------------------------------------------------------------------------
+def fit_link_model(samples: Sequence[Tuple[float, float]],
+                   name: str) -> Optional[LinkModel]:
+    """Least-squares fit of ``t = latency + nbytes / peak_bw`` to measured
+    ``(nbytes, seconds)`` samples — the closing of the analytic clock's loop:
+    ``page_flip_time`` and the ``TransferMeter`` keep their alpha + s/B form,
+    but alpha and B become properties of THIS machine's fabric (MeshTierDomain
+    wall-clocks every warm collective leg) instead of datasheet constants.
+
+    Returns None when the samples cannot identify both parameters (fewer
+    than 2 samples, or a single distinct message size — a vertical line fits
+    any latency). Fitted latency is clamped to >= 0; a non-positive fitted
+    slope (noise on a tiny size range) falls back to the effective bandwidth
+    of the largest sample.
+    """
+    if len(samples) < 2:
+        return None
+    xs = np.asarray([s[0] for s in samples], np.float64)
+    ys = np.asarray([s[1] for s in samples], np.float64)
+    if len(np.unique(xs)) < 2:
+        return None
+    slope, alpha = np.polyfit(xs, ys, 1)
+    if slope <= 0:
+        big = int(np.argmax(xs))
+        slope = ys[big] / xs[big] if xs[big] > 0 else None
+        if not slope or slope <= 0:
+            return None
+    return LinkModel(name, float(1.0 / slope), float(max(alpha, 0.0)))
+
+
+def calibrate_profile(hw: HardwareProfile, *,
+                      fabric_samples: Optional[Sequence[Tuple[float, float]]] = None,
+                      host_samples: Optional[Sequence[Tuple[float, float]]] = None,
+                      min_samples: int = 4) -> HardwareProfile:
+    """``hw`` with its link models replaced by fits to measured transfers.
+
+    Each link is refit only when its sample set has at least ``min_samples``
+    points AND the fit identifies both parameters; otherwise that link keeps
+    its datasheet constants. With nothing to fit, returns ``hw`` unchanged
+    (identity — callers can test ``is``-ness to detect calibration)."""
+    fabric = hw.fabric
+    host = hw.host_link
+    if fabric_samples is not None and len(fabric_samples) >= min_samples:
+        fabric = fit_link_model(fabric_samples,
+                                f"{hw.fabric.name}-measured") or fabric
+    if host_samples is not None and len(host_samples) >= min_samples:
+        host = fit_link_model(host_samples,
+                              f"{hw.host_link.name}-measured") or host
+    if fabric is hw.fabric and host is hw.host_link:
+        return hw
+    return dataclasses.replace(hw, name=f"{hw.name}-calibrated",
+                               fabric=fabric, host_link=host)

@@ -285,9 +285,22 @@ class ServingSimulator:
             lanes = [r for r in running
                      if r.prefilled and r.generated < r.gen_len]
             pend = [r for r in running if not r.prefilled]
+            # roofline-aware chunk cap (mirrors the engine): piggybacked
+            # chunk FLOPs spread across the round's ntok fused decode
+            # iterations, each hiding up to its memory-bound FLOPs slack,
+            # so the round's chunk budget is capped at the per-iteration
+            # window times the planned iterations — tokens beyond it would
+            # extend the round linearly instead of riding the stream free
+            flops_slack = None
+            if self.fused_step and lanes and self.step_tokens is not None:
+                ctx0 = (sum(r.prompt_len + r.generated for r in lanes)
+                        / len(lanes))
+                flops_slack = ntok * self.model.piggyback_tokens(
+                    self.hw, len(lanes), ctx0, self.weight_bytes)
             chunks = split_step_budget(self.step_tokens, len(lanes) * ntok,
                                        [r.prompt_len - r.prefill_pos
-                                        for r in pend])
+                                        for r in pend],
+                                       flops_slack=flops_slack)
             for r, c in zip(pend, chunks):
                 if c <= 0:
                     continue
@@ -307,46 +320,56 @@ class ServingSimulator:
                 compute_time += dt
                 step_time += dt
 
-            # speculative chunk-ahead: leftover budget slack prefills the
-            # head-of-line WAITING prompt (all but its last position), whose
-            # pages flip back out right after — mirrors the engine. The win
-            # is largest under FCFS admission, where a waiter can sit
-            # slot-blocked behind long decodes for many slack-rich rounds.
+            # speculative chunk-ahead: leftover budget slack prefills
+            # WAITING prompts (all but each one's last position) — arrival
+            # order, extending PAST the head-of-line waiter while slack
+            # lasts — whose pages flip back out right after; mirrors the
+            # engine. The win is largest under FCFS admission, where
+            # waiters can sit slot-blocked behind long decodes for many
+            # slack-rich rounds. The slack is capped by the same FLOPs
+            # piggyback window as the granted chunks.
             if self.spec_chunk_ahead and self.step_tokens is not None:
                 slack = (self.step_tokens - len(lanes) * ntok - sum(chunks))
-                spec = next((r for r in sorted(waiting,
-                                               key=lambda r: (r.arrival,
-                                                              r.rid))
-                             if not r.prefilled), None)
-                if slack > 0 and spec is not None:
+                if flops_slack is not None:
+                    slack = min(slack, max(flops_slack - sum(chunks), 0))
+                n_groups = (1 if self.coalesce_planes
+                            else self.model.n_planes)
+                for spec in sorted(waiting,
+                                   key=lambda r: (r.arrival, r.rid)):
+                    if slack <= 0:
+                        break
+                    if spec.prefilled:
+                        continue
                     c = min(slack, spec.prompt_len - spec.prefill_pos - 1)
-                    if c > 0:
-                        n_groups = (1 if self.coalesce_planes
-                                    else self.model.n_planes)
-                        if spec.prefill_pos > 0:    # page its prefix back in
-                            step_time += page_flip_time(
-                                self.hw,
-                                self.model.context_bytes(spec.prefill_pos),
-                                tier=self.tier, n_groups=n_groups)
-                        if self.fused_step and lanes:
-                            # the speculative chunk rides the fused decode
-                            # launch too — its FLOPs hide under the
-                            # memory-bound stream below
-                            piggyback_tokens += c
-                        else:
-                            dt = self.model.prefill_time(self.hw, c)
-                            compute_time += dt
-                            step_time += dt
-                        spec.prefill_pos += c
-                        n_chunk_calls += 1
-                        step_time += page_flip_time(   # park it again
+                    if c <= 0:
+                        continue
+                    if spec.prefill_pos > 0:        # page its prefix back in
+                        step_time += page_flip_time(
                             self.hw,
                             self.model.context_bytes(spec.prefill_pos),
                             tier=self.tier, n_groups=n_groups)
+                    if self.fused_step and lanes:
+                        # the speculative chunk rides the fused decode
+                        # launch too — its FLOPs hide under the
+                        # memory-bound stream below
+                        piggyback_tokens += c
+                    else:
+                        dt = self.model.prefill_time(self.hw, c)
+                        compute_time += dt
+                        step_time += dt
+                    spec.prefill_pos += c
+                    n_chunk_calls += 1
+                    slack -= c
+                    step_time += page_flip_time(   # park it again
+                        self.hw,
+                        self.model.context_bytes(spec.prefill_pos),
+                        tier=self.tier, n_groups=n_groups)
 
-            # decode ntok tokens for the running batch; the first iteration
-            # of a fused round carries the piggybacked chunk FLOPs in its
-            # roofline max (one launch, one weight pass)
+            # decode ntok tokens for the running batch; each fused
+            # iteration carries piggybacked chunk FLOPs up to its own
+            # memory-bound window in its roofline max (one launch, one
+            # weight pass per iteration) — leftovers beyond every window
+            # pay linear prefill time after the loop
             n_decode_iters = 0
             for _ in range(ntok):
                 live = [r for r in running
@@ -355,16 +378,25 @@ class ServingSimulator:
                     break
                 n_decode_iters += 1
                 ctx = sum(r.prompt_len + r.generated for r in live) / len(live)
+                take = min(piggyback_tokens,
+                           self.model.piggyback_tokens(
+                               self.hw, len(live), ctx, self.weight_bytes))
                 dt = self.model.fused_step_time(
-                    self.hw, len(live), ctx, self.weight_bytes,
-                    piggyback_tokens)
-                piggyback_tokens = 0
+                    self.hw, len(live), ctx, self.weight_bytes, take)
+                piggyback_tokens -= take
                 compute_time += dt
                 step_time += dt
                 for r in live:
                     r.generated += 1
                     if r.ttft is None:
                         r.ttft = t + step_time
+            if piggyback_tokens > 0:
+                # chunk FLOPs no decode window absorbed (decode drained
+                # early, or grants exceeded the round's windows)
+                dt = self.model.prefill_time(self.hw, piggyback_tokens)
+                piggyback_tokens = 0
+                compute_time += dt
+                step_time += dt
             # launch-count model: fused = one jitted call per engine step
             # (chunks ride the decode iterations); per-request baseline adds
             # one call per granted chunk — O(admitted requests) per round

@@ -30,7 +30,12 @@ from repro.configs.base import ModelConfig, ShapeConfig
 def shard_map_compat(f, mesh, in_specs, out_specs, *, check: bool = True):
     """``shard_map`` across jax versions: it lived in
     ``jax.experimental.shard_map`` (kwarg ``check_rep``) before being
-    promoted to ``jax.shard_map`` (kwarg ``check_vma``)."""
+    promoted to ``jax.shard_map`` (kwarg ``check_vma``).
+
+    Serving-side consumer: ``distributed/mesh_tiers.py`` wraps every
+    mesh-tier transfer leg (one ``ppermute`` each) in this, with
+    ``check=False`` — the legs are deliberately non-replicated (only the
+    serving/donor shard carries real data)."""
     import inspect
     sm = getattr(jax, "shard_map", None)
     if sm is None:

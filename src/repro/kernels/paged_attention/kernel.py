@@ -35,6 +35,19 @@ a resident dummy, so no out-of-bounds access happens).
 VMEM working set per step: q (G, hd) + k,v (page, hd) + acc (G, hd) f32
 ≈ 0.3 MB at page=64, hd=256 — far below the ~16 MB VMEM budget, leaving room
 for the double-buffered page DMAs Mosaic inserts automatically.
+
+COMPILED pass: every attention entry point declares its grid semantics to
+the Mosaic compiler — the batch/packed-row axis and the kv-head axis are
+``parallel`` (rows are independent; the compiler may partition them across
+the two TPU megacores), while the page-iteration axis is ``arbitrary`` (the
+online-softmax accumulators in VMEM scratch carry across it, a sequential
+reduction). Megacore partitioning splits whole rows, never a row's page
+loop, so each row's reduction order — and therefore its output — is
+bit-identical to the interpret path and the per-request references. The
+one-launch engine step (``paged_mixed_attention_pool``) thus runs as a real
+partitioned kernel on TPU; on the CPU backend the same programs execute in
+interpret mode (``ops._on_cpu``), where the declared semantics are carried
+but unused.
 """
 from __future__ import annotations
 
@@ -47,6 +60,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+# grid = (rows, kv heads, pages-per-sequence): rows/heads partition across
+# megacores, the page axis is the online-softmax reduction
+_POOL_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
+def _compiler_params(dimension_semantics):
+    """Mosaic compiler params, tolerant of the class name moving between
+    jax releases (``TPUCompilerParams`` -> ``CompilerParams``); None when
+    neither exists so ``pallas_call`` falls back to default semantics."""
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=tuple(dimension_semantics))
+    except TypeError:
+        return None
 
 
 def _paged_kernel(block_tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
@@ -164,6 +195,7 @@ def paged_attention_pool(q, kv_pool, block_tables, lengths, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=_compiler_params(_POOL_SEMANTICS),
         interpret=interpret,
     )(block_tables, lengths, qg, kv_pool)
     return out.reshape(B, H, hd)
@@ -260,6 +292,7 @@ def paged_prefill_attention_pool(q, kv_pool, block_tables, q_starts, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, Tc * G, hd), q.dtype),
+        compiler_params=_compiler_params(_POOL_SEMANTICS),
         interpret=interpret,
     )(block_tables, q_starts, qg, kv_pool)
     return (out.reshape(B, K, Tc, G, hd).transpose(0, 2, 1, 3, 4)
@@ -370,6 +403,7 @@ def paged_mixed_attention_pool(q, kv_pool, block_tables, q_starts, n_reals,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, K, Tc * G, hd), q.dtype),
+        compiler_params=_compiler_params(_POOL_SEMANTICS),
         interpret=interpret,
     )(block_tables, q_starts, n_reals, is_decode, qg, kv_pool)
     return (out.reshape(R, K, Tc, G, hd).transpose(0, 2, 1, 3, 4)
@@ -448,6 +482,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=_compiler_params(_POOL_SEMANTICS),
         interpret=interpret,
     )(block_tables, lengths, qg, k_pages, v_pages)
     return out.reshape(B, H, hd)

@@ -1,7 +1,18 @@
 """Jit'd public wrappers for paged decode attention + page writers.
 
-These are the ops the serving hot path calls: on CPU the Pallas kernels run
-in interpret mode (bit-exact vs the TPU lowering for these access patterns);
+These are the ops the serving hot path calls. Backend policy — enforced by
+a CI grep-guard (no hard-coded interpreter pin anywhere under ``src/``):
+
+  * On TPU the kernels run COMPILED, with megacore/grid partitioning
+    declared over the packed row and kv-head axes
+    (``kernel._POOL_SEMANTICS``) — partitioning splits whole rows, never a
+    row's page loop, so compiled outputs are bit-identical to interpret
+    mode and the per-request references.
+  * On the CPU backend the same programs run in interpret mode. The ONLY
+    sanctioned way to request it on an engine-path call is this module's
+    ``interpret=_on_cpu()`` — hard-coding the flag to ``True`` would
+    silently pin the compiled pass back to the interpreter on hardware.
+
 ``impl='xla'`` callers can use the jnp oracles in ``ref.py`` instead.
 """
 from __future__ import annotations

@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for paged decode attention."""
+"""Pure-jnp oracles for paged attention.
+
+These are the correctness anchors for BOTH kernel passes: the interpret-mode
+path the CPU CI runs AND the compiled TPU pass (megacore-partitioned grid,
+``kernel._POOL_SEMANTICS``) must match these references bit-for-bit — the
+kernels' page-loop reduction order deliberately mirrors the f32 online
+softmax written here, and megacore partitioning only ever splits whole
+rows, so no legal lowering may reassociate a row's reduction.
+"""
 from __future__ import annotations
 
 import math

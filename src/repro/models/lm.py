@@ -403,6 +403,12 @@ def _ffn_apply(p, cfg: ModelConfig, x, i: int, *, dropless: bool = False,
     return x + h
 
 
+# One representative arch per paged state family — attention (qwen), MLA
+# (deepseek), hybrid attention+Mamba (jamba), RWKV6 — the cross-family axis
+# the paging/mesh bit-exactness suites sweep.
+PAGED_FAMILY_ARCHS = ("qwen1.5-0.5b", "deepseek-v2-lite-16b",
+                      "jamba-v0.1-52b", "rwkv6-3b")
+
 # Traces of the serving entry points, keyed by name. The counter bumps as a
 # Python side effect INSIDE the traced function body, so it advances once per
 # jit trace (shape bucket), not per call — the CI retrace guard asserts it
@@ -763,7 +769,11 @@ def serve_step_paged(params, cfg: ModelConfig, tokens, pools, block_tables,
     math, and the fused attention kernel's per-row reduction order is the
     per-request kernels'. What changes is the launch count: one jitted
     dispatch and one attention launch per layer for the WHOLE step, instead
-    of one call per admitted request's chunk plus one more for decode.
+    of one call per admitted request's chunk plus one more for decode. On
+    TPU that launch is the COMPILED ``paged_mixed_attention_pool`` pass —
+    megacore-partitioned across the packed row axis (still bit-identical:
+    partitioning splits whole rows, never a row's page loop); interpret
+    mode is CPU-only (``ops._on_cpu``).
     """
     assert supports_paged(cfg), f"{cfg.name}: not paged-servable"
     TRACE_COUNTS["serve_step"] += 1

@@ -32,10 +32,14 @@ from the engine — dispatch overhead per step is O(1) in the number of
 admitted requests instead of O(requests) (the between-launch idle regime
 of Kossmann et al. 2024), priced by ``perfmodel.launch_overhead_time``.
 Row logits are bit-identical to the per-request entry points the packed
-rows replace. When ``split_step_budget`` leaves token-budget slack (every
-admitted prefill fully granted), the head-of-line WAITING prefill gets the
-slack as a speculative chunk riding the same call (parked again right
-after), so admission finds its prompt partially prefilled.
+rows replace. With decode lanes present, the chunk budget is additionally
+capped by the launch's memory-bound FLOPs slack
+(``ModelCost.piggyback_tokens``) so mixed steps stay AT the roofline. When
+``split_step_budget`` leaves slack (every admitted prefill fully granted),
+WAITING prefills get it as speculative chunks riding the same call — in
+arrival order, PAST the head-of-line waiter while page headroom allows —
+each parked again right after, so admission finds their prompts partially
+prefilled.
 
 All paged entry points go through shape buckets — chunk lengths and packed
 row counts pad to power-of-two ladders, block tables and decode lanes to
@@ -129,7 +133,8 @@ class ServingEngine:
                  spec_chunk_ahead: bool = True,
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
-                 want_remote_bytes: float = 0.0, respond_every: int = 4):
+                 want_remote_bytes: float = 0.0, respond_every: int = 4,
+                 mesh=None):
         """Build a serving engine on the unified paged state runtime.
 
         Args:
@@ -151,15 +156,21 @@ class ServingEngine:
             prefetch: overlap next-step page restores with compute.
             spec_chunk_ahead: when the step's token budget has slack after
                 every admitted prefill is fully granted, speculatively
-                prefill the head-of-line WAITING request's next chunk
-                (page-headroom guarded, parked right after) instead of
-                idling the slack. Effective only with a ``step_tokens``
-                budget.
+                prefill WAITING requests' next chunks — arrival order,
+                extending past the head-of-line waiter while page headroom
+                allows (each grant page-headroom guarded, parked right
+                after) — instead of idling the slack. Effective only with
+                a ``step_tokens`` budget.
             coordinator/want_remote_bytes/respond_every: AQUA-LIB consumer
                 wiring — lease donor HBM at construction, poll reclaims
                 every ``respond_every`` steps.
             name: engine id used in coordinator bookkeeping and errors.
             hw: hardware profile pricing the simulated clock.
+            mesh: optional ``MeshTierDomain`` — REMOTE parks become real
+                collective page moves to peer-device donor slabs, and
+                :meth:`calibrate_clock` can refit ``hw``'s fabric link to
+                the measured transfer times. Ignored when ``kv`` is given
+                (the runtime's own mesh wins).
 
         Raises:
             ValueError: the family is not paged-servable, or
@@ -191,7 +202,8 @@ class ServingEngine:
         self.kv = kv or PagedStateRuntime(
             cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
             local_pages=kv_local_pages, host_pages=kv_host_pages,
-            max_running=max_running, prefix_sharing=prefix_sharing)
+            max_running=max_running, prefix_sharing=prefix_sharing,
+            mesh=mesh)
         self.pager = self.kv
         # the scheduler plans in PAGES (a per-plane cost vector). CFS
         # revisits the run set every slice, so it budgets one slice of
@@ -335,6 +347,28 @@ class ServingEngine:
                     self._grants.remove((d, nbytes))
 
     # ------------------------------------------------------------------
+    def calibrate_clock(self, *, min_samples: int = 4) -> bool:
+        """Refit the analytic clock against MEASURED mesh transfers.
+
+        On a mesh-backed runtime every warm collective leg was wall-clocked
+        (``MeshTierDomain.samples``); this fits the latency+bandwidth link
+        model to those samples (``perfmodel.calibrate_profile``) and swaps
+        the calibrated profile into both pricing paths — ``self.hw`` (step
+        compute / page-flip times) and the runtime's ``TransferMeter`` — so
+        every simulator and benchmark number downstream inherits real
+        fabric costs. Returns True when the clock actually changed (False
+        without a mesh or with too few samples to fit)."""
+        dom = getattr(self.kv, "mesh", None)
+        if dom is None:
+            return False
+        hw2 = dom.calibrated_profile(self.hw, min_samples=min_samples)
+        if hw2 is self.hw:
+            return False
+        self.hw = hw2
+        self.pager.meter.hw = hw2
+        return True
+
+    # ------------------------------------------------------------------
     def step(self):
         """Run ONE engine step: plan the run set, execute the plan as a
         single fused call.
@@ -345,8 +379,8 @@ class ServingEngine:
         flips) and slots + restores scheduled ones; (4) the WHOLE step's
         work — one decode token per resident prefilled request plus every
         pending prefill's fair-share chunk under the ``step_tokens`` budget
-        (plus one speculative chunk for the head-of-line waiter when the
-        budget has slack) — is packed into ONE ``api.serve_step_paged``
+        (plus speculative chunks for waiting prefills when the budget has
+        slack) — is packed into ONE ``api.serve_step_paged``
         call; (5) finished requests retire (pages released — shared prefix
         pages survive while any sharer lives); (6) next step's restores are
         prefetched, priced as hidden up to this step's compute time.
@@ -367,12 +401,22 @@ class ServingEngine:
         decision = self.sched.plan(m.steps, self.waiting, self.running)
 
         # the step's token budget: one token per decode lane, the remainder
-        # handed out as prompt chunks (several requests' chunks per step)
+        # handed out as prompt chunks (several requests' chunks per step).
+        # With decode lanes present the chunk budget is additionally capped
+        # by the launch's memory-bound FLOPs slack (the roofline piggyback
+        # window): chunk tokens beyond it stop riding the decode stream for
+        # free and extend the step linearly.
         lanes = [r for r in decision.run if r.prefilled and not r.done]
         pending = [r for r in decision.run if not r.prefilled]
+        flops_slack = None
+        if self.step_tokens is not None and lanes:
+            ctx_mean = float(np.mean([r.ctx_len for r in lanes]))
+            flops_slack = self.cost.piggyback_tokens(
+                self.hw, len(lanes), ctx_mean, self.weight_bytes)
         chunks = split_step_budget(
             self.step_tokens, len(lanes),
-            [r.prompt_positions - r.prefill_pos for r in pending])
+            [r.prompt_positions - r.prefill_pos for r in pending],
+            flops_slack=flops_slack)
 
         transfer_time = self._place(decision)
 
@@ -385,9 +429,10 @@ class ServingEngine:
         live = [r for r in self.running if not r.done and r.prefilled]
         chunk_plan = [(r, n) for r, n in zip(pending, chunks)
                       if n > 0 and r.slot is not None]
-        spec = self._pick_speculative(decision, len(lanes), chunks)
+        specs = self._pick_speculative(decision, len(lanes), chunks,
+                                       len(chunk_plan), flops_slack)
         compute_time, fused_transfer = self._fused_step(live, chunk_plan,
-                                                        spec)
+                                                        specs)
         step_time = compute_time + transfer_time + fused_transfer
 
         # retire bookkeeping first: freed slots/pages raise the odds the
@@ -493,28 +538,38 @@ class ServingEngine:
     # the fused step: ALL model work in one jitted call
     # ------------------------------------------------------------------
     def _pick_speculative(self, decision: Decision, n_lanes: int,
-                          chunks: List[int]):
+                          chunks: List[int], n_chunk_rows: int = 0,
+                          flops_slack: Optional[int] = None) -> List:
         """Speculative chunk-ahead: when ``split_step_budget`` left slack
-        (every admitted prefill fully granted this step), hand it to the
-        head-of-line WAITING prefill as an extra chunk riding the same
-        fused call. The grant is capped at ``remaining - 1`` positions (the
-        final position — and the first token — stays for admission), must
-        be worth at least one page (a sub-page grant would pay the chunk's
-        park/restore flips for almost no prefill progress), skips requests
-        preempted THIS step (re-restoring them immediately would turn the
-        optimization into pure tier-flip thrash), and is page-headroom
-        guarded: the whole speculative context must fit the free LOCAL
-        slots of every plane. Returns ``(request, n_tokens)`` or ``None``.
+        (every admitted prefill fully granted this step), hand it to
+        WAITING prefills — arrival order, PAST the head-of-line waiter
+        while slack and page headroom allow — as extra chunks riding the
+        same fused call. Each grant is capped at ``remaining - 1``
+        positions (the final position — and the first token — stays for
+        admission), must be worth at least one page (a sub-page grant
+        would pay the chunk's park/restore flips for almost no prefill
+        progress), skips requests preempted THIS step (re-restoring them
+        immediately would turn the optimization into pure tier-flip
+        thrash), and is page-headroom guarded: the whole speculative
+        context must fit the free LOCAL slots of every plane, net of
+        earlier grants. The slack is also capped by the decode launch's
+        FLOPs piggyback window (``flops_slack``) and the fixed packed row
+        budget (specs never widen the fused call's row bucket). Returns a
+        list of ``(request, n_tokens)`` grants, possibly empty.
 
         The headroom check is advisory — the run set's own same-step
         growth (fresh decode pages, CoW clones) allocates first, so
-        ``_fused_step`` still treats the speculative allocation as
-        fallible and drops the row on ``MemoryError``."""
+        ``_fused_step`` still treats every speculative allocation as
+        fallible and drops the row (and the grants after it) on
+        ``MemoryError``."""
         if not self.spec_chunk_ahead or self.step_tokens is None:
-            return None
+            return []
         slack = self.step_tokens - n_lanes - sum(chunks)
+        if flops_slack is not None:
+            slack = min(slack, max(int(flops_slack) - sum(chunks), 0))
         if slack < self.kv.page_tokens:
-            return None
+            return []
+        max_rows = bucket_tokens(self.max_running + 1, lo=1) - n_chunk_rows
         skip = {r.rid for r in decision.run}
         skip.update(r.rid for r in decision.preempt)
         cands = sorted((r for r in self.waiting
@@ -523,29 +578,34 @@ class ServingEngine:
                        key=lambda r: (r.arrival, r.rid))
         free = np.asarray([p.aqua.local_free
                            for p in self.kv.planes.values()], np.int64)
+        picks: List = []
         for r in cands:
+            if len(picks) >= max_rows or slack < self.kv.page_tokens:
+                break
             n = min(slack, r.prompt_positions - 1 - r.prefill_pos)
             if n < self.kv.page_tokens:
                 continue
-            if np.all(self.kv.pages_per_request(r.prefill_pos + n) <= free):
-                return (r, n)
-        return None
+            need = self.kv.pages_per_request(r.prefill_pos + n)
+            if np.all(need <= free):
+                picks.append((r, n))
+                slack -= n
+                free = free - need
+        return picks
 
     def _fused_step(self, live: List[ReqState], chunk_plan: List,
-                    spec) -> tuple:
+                    specs: List) -> tuple:
         """Pack the step's work into one ``api.serve_step_paged`` call.
 
         Rows ``[0, max_running)`` are the decode lanes (present whenever
         any resident request decodes; idle lanes point at scratch), the
         following rows one prompt chunk each — the run set's fair-share
-        chunks plus the optional speculative chunk — bucket-padded in both
-        axes. Returns ``(compute_time, metered_transfer_time)`` on the
-        analytic clock, including the O(1) per-step launch overhead
+        chunks plus the speculative chunk-ahead grants — bucket-padded in
+        both axes. Returns ``(compute_time, metered_transfer_time)`` on
+        the analytic clock, including the O(1) per-step launch overhead
         (``ModelCost.launch_time``)."""
         m = self.metrics
-        rows_chunk = list(chunk_plan)
-        if spec is not None:
-            rows_chunk.append(spec)
+        rows_chunk = list(chunk_plan) + list(specs)
+        spec_rids = {r.rid for r, _ in specs}
         if not live and not rows_chunk:
             m.prefill_tokens_trace.append(0)
             m.launch_trace.append(0)
@@ -556,8 +616,9 @@ class ServingEngine:
         # packed shapes: with a step budget, the chunk region is FIXED at
         # (max_running + 1 rows) x (budget bucket) whenever any chunk runs,
         # so the jit cache is provably flat in the number of admitted
-        # requests (chunk rows are capped by the run set + one speculative
-        # row); the all-decode steady state stays at Tc = 1 with no chunk
+        # requests (chunk rows — run-set chunks plus speculative grants —
+        # are capped at that fixed row bucket by _pick_speculative);
+        # the all-decode steady state stays at Tc = 1 with no chunk
         # region. Unbudgeted (step_tokens=None) chunks are whole prompts,
         # so their shapes ride the prompt-length bucket ladder instead.
         if not rows_chunk:
@@ -593,7 +654,7 @@ class ServingEngine:
         for j, (r, n) in enumerate(rows_chunk):
             row = n_dec + j
             start = r.prefill_pos
-            if spec is not None and r is spec[0]:
+            if r.rid in spec_rids:
                 if r.parked:
                     m.spec_restores += 1    # its prior prefix pages page in
                 try:
@@ -602,13 +663,14 @@ class ServingEngine:
                     # the run set's own same-step growth (fresh decode
                     # pages, CoW clones) beat _pick_speculative's advisory
                     # headroom check — speculation is opportunistic: hand
-                    # back whatever the attempt pulled LOCAL and leave the
-                    # row as scratch padding
+                    # back whatever the attempt pulled LOCAL and drop this
+                    # grant and every later one (specs are the trailing
+                    # rows; the later grants haven't allocated yet)
                     self.kv.park(r.rid, r.prefill_pos,
                                  prefer=self.offload_tier)
                     r.parked = True
-                    rows_chunk = rows_chunk[:j]     # spec is always last
-                    spec = None
+                    specs = specs[:j - len(chunk_plan)]
+                    rows_chunk = rows_chunk[:j]
                     break
             else:
                 self.kv.ensure_capacity(r.rid, start + n)
@@ -652,11 +714,10 @@ class ServingEngine:
                 r.generated.append(int(nxt[n_dec + j]))
             m.prefills += 1
             ptoks += n
-        if spec is not None:
-            r, n = spec
+        for r, n in specs:
             m.spec_chunks += 1
             m.spec_tokens += n
-            # hand the pages straight back: the speculative request is not
+            # hand the pages straight back: a speculative request is not
             # in the planned run set, and LOCAL must only hold that set
             self.kv.park(r.rid, r.prefill_pos, prefer=self.offload_tier)
             r.parked = True

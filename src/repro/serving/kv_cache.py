@@ -107,7 +107,7 @@ class PagedStateRuntime:
                  page_tokens: int = 8, local_pages: Optional[int] = None,
                  host_pages: int = 8192, n_logical: int = 16384,
                  max_running: int = 4, meter: Optional[TransferMeter] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, mesh=None):
         """Build one AquaTensor pool per page plane of ``cfg``'s family.
 
         Args:
@@ -124,6 +124,9 @@ class PagedStateRuntime:
             meter: shared ``TransferMeter``; a fresh one by default.
             prefix_sharing: enable the copy-on-write prefix index. Forced
                 off when any plane is not ``shareable`` (recurrent state).
+            mesh: optional ``MeshTierDomain`` — every plane's REMOTE pools
+                become real peer-device slabs and remote transfer legs
+                become collectives; None keeps the single-device backend.
 
         Raises:
             ValueError: the family has a sub-layer with no page plane
@@ -141,6 +144,7 @@ class PagedStateRuntime:
         self.max_seq = max_seq
         self.pps = math.ceil(max_seq / page_tokens)
         self.meter = meter or TransferMeter()
+        self.mesh = mesh
         self.planes: Dict[str, _Plane] = {}
         layout = lm.paged_layout(cfg)
         # prefix sharing requires every plane to be position-addressed and
@@ -187,7 +191,7 @@ class PagedStateRuntime:
             aqua = AquaTensor(n_logical=n_logical, page_shape=page_shape,
                               local_slots=slots, host_slots=host_pages,
                               dtype=spec["dtype"], meter=self.meter,
-                              name=f"{cfg.name}/{name}")
+                              name=f"{cfg.name}/{name}", mesh=mesh)
             plane = _Plane(name, spec["kind"], aqua, n_layers, n_sub,
                            token_bytes=spec.get("token_bytes", 0))
             # pinned LOCAL dummy page: idle batch lanes and block-table

@@ -92,7 +92,8 @@ class Decision:
 
 
 def split_step_budget(step_tokens: Optional[int], decode_lanes: int,
-                      prefill_remaining: Sequence[int]) -> List[int]:
+                      prefill_remaining: Sequence[int], *,
+                      flops_slack: Optional[int] = None) -> List[int]:
     """Split one step's token budget into prefill chunk sizes.
 
     ``decode_lanes`` tokens are reserved for the resident decoding requests
@@ -104,15 +105,25 @@ def split_step_budget(step_tokens: Optional[int], decode_lanes: int,
     full remaining prompt in one chunk (the unchunked baseline).
     Returns one chunk size (possibly 0) per entry of ``prefill_remaining``.
 
-    When the decode lanes alone consume the whole budget, one token is still
-    granted (progress floor): an admitted prefill holding a batch slot must
-    never starve behind a saturated decode batch, so a step may exceed the
-    budget by at most one token.
+    ``flops_slack`` (``ModelCost.piggyback_tokens``) additionally caps the
+    chunk budget at the decode launch's memory-bound FLOPs slack: a mixed
+    step is priced at ``max(t_flops, t_mem)``, so chunk tokens inside the
+    window ride the decode launch's weight/KV stream FOR FREE while every
+    token beyond it extends the step linearly — the roofline-aware sizing
+    keeps mixed steps exactly AT the crossover instead of past it.
+
+    When the decode lanes alone consume the whole budget (or the FLOPs
+    window is empty), one token is still granted (progress floor): an
+    admitted prefill holding a batch slot must never starve behind a
+    saturated decode batch, so a step may exceed the budget by at most one
+    token.
     """
     rem = [max(r, 0) for r in prefill_remaining]
     if step_tokens is None:
         return rem
     left = max(step_tokens - decode_lanes, 1 if any(rem) else 0)
+    if flops_slack is not None:
+        left = max(min(left, int(flops_slack)), 1 if any(rem) else 0)
     chunks = [0] * len(rem)
     while left > 0:
         active = [i for i in range(len(rem)) if chunks[i] < rem[i]]

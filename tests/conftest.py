@@ -7,6 +7,15 @@ memory'. Clearing jax caches between modules keeps the peak bounded without
 affecting test semantics.
 """
 import gc
+import os
+
+# Give the suite a multi-device host-platform mesh BEFORE jax initialises:
+# the mesh-tier tests (tests/test_mesh_tiers.py) need >= 2 devices so a
+# donor lease can live on a real peer device even on the CPU CI box.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
 
 import jax
 import pytest
