@@ -1,0 +1,116 @@
+"""Fault-recovery benchmark: serving under transfer-leg faults and donor loss.
+
+Prices what the fault-tolerance layer costs on the paper-scale analytic
+clock (CodeLlama-34B on A100, CFS over fabric offload): the same request
+trace runs at 0 / 5 / 20 % transfer-leg fault rates, each with ONE
+donor-loss event fired at 30 % of the fault-free makespan (the donor dies
+holding its fraction of the parked contexts, which recompute from the
+prompt). Reports per scenario:
+
+  * step-time p99 (scheduler-round durations — retries and recompute work
+    land here; gated by scripts/check_bench_regression.py),
+  * TTFT p99 and RCT p99 over all requests,
+  * RCT p99 of the RECOVERED requests alone (the degrade-to-host tail),
+  * leg retries absorbed and contexts reset.
+
+Writes ``BENCH_fault_recovery.json`` next to the repo root so the perf
+trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.fault_recovery
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import codellama_sim, make_requests, pct as _pct
+
+LEG_RATES = (0.0, 0.05, 0.20)
+N_REQ = 48
+RATE = 40.0          # arrivals/s: enough pressure that CFS parks contexts
+
+
+def _run(faults):
+    from repro.core.perfmodel import A100_NVLINK
+    sim = codellama_sim(A100_NVLINK, "cfs", "fabric", step_tokens=256,
+                        max_running=8, faults=faults)
+    res = sim.run(make_requests(rate=RATE, n=N_REQ, seed=3,
+                                prompt=(300, 1200), gen=(60, 200)))
+    assert all(r.finish is not None for r in res.requests)
+    return sim, res
+
+
+def _scenario(sim, res) -> Dict:
+    ttfts = [r.ttft - r.arrival for r in res.requests]
+    rcts = [r.finish - r.arrival for r in res.requests]
+    rec = [r.finish - r.arrival for r in res.requests if r.recovered]
+    steps = np.diff([0.0] + [e["t"] for e in res.timeline])
+    return {
+        "step_time_p99_s": _pct(list(steps), 0.99),
+        "ttft_p99_s": _pct(ttfts, 0.99),
+        "rct_p99_s": _pct(rcts, 0.99),
+        "rct_recovered_p99_s": _pct(rec, 0.99) if rec else 0.0,
+        "recovered_requests": int(sum(r.recovered for r in res.requests)),
+        "leg_retries": int(sim.leg_retries),
+        "donor_losses": int(sim.donor_losses),
+        "makespan_s": float(max(r.finish for r in res.requests)),
+    }
+
+
+def measure() -> Dict:
+    from repro.core.faults import FaultEvent, FaultInjector
+
+    sim0, res0 = _run(None)
+    t_loss = 0.3 * max(r.finish for r in res0.requests)
+
+    out: Dict[str, Dict] = {"fault_free": _scenario(sim0, res0)}
+    for rate in LEG_RATES:
+        fi = FaultInjector(seed=7, leg_fault_rate=rate, events=[
+            FaultEvent(kind="donor_loss", donor="d0", frac=0.5,
+                       at_time=t_loss)])
+        sim, res = _run(fi)
+        out[f"leg_rate_{int(rate * 100)}pct"] = _scenario(sim, res)
+
+    base = out["fault_free"]
+    worst = out[f"leg_rate_{int(LEG_RATES[-1] * 100)}pct"]
+    out["derived"] = {
+        "makespan_overhead_at_20pct_x":
+            worst["makespan_s"] / base["makespan_s"],
+        "rct_p99_overhead_at_20pct_x":
+            worst["rct_p99_s"] / base["rct_p99_s"],
+        "all_requests_complete_under_faults": True,
+    }
+    return out
+
+
+def run(m: Dict | None = None):
+    m = m or measure()
+    rows = []
+    for scenario, vals in m.items():
+        if scenario == "derived" or not isinstance(vals, dict):
+            continue
+        for k, v in vals.items():
+            rows.append((f"fault_recovery/{scenario}/{k}", float(v), ""))
+    for k, v in m["derived"].items():
+        rows.append((f"fault_recovery/{k}", float(v),
+                     "faulted vs fault-free"))
+    return rows
+
+
+def main():
+    m = measure()
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_fault_recovery.json")
+    with open(out, "w") as f:
+        json.dump(m, f, indent=2, sort_keys=True)
+    print(f"# wrote {os.path.normpath(out)}")
+    print("name,value,derived")
+    for name, val, derived in run(m):
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

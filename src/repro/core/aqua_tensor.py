@@ -55,11 +55,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.perfmodel import HardwareProfile, TPU_V5E
+from repro.core.errors import (LeaseRevokedError, PageLossError,
+                               TransferFaultError)
+from repro.core.perfmodel import (HardwareProfile, TPU_V5E,
+                                  retry_backoff_time)
 from repro.kernels.kv_gather import ops as kv_ops
 
 LOCAL, REMOTE, HOST = 0, 1, 2
-TIER_NAMES = {LOCAL: "local", REMOTE: "remote", HOST: "host"}
+# LOST: the page's only copy was on a donor that died (``fail_donor``).
+# Lost pages keep their refcounts (the auditor still sees the referencers)
+# but any read/migration raises PageLossError — the engine's recovery path
+# releases the victims and recomputes their context from the prompt.
+LOST = 3
+TIER_NAMES = {LOCAL: "local", REMOTE: "remote", HOST: "host", LOST: "lost"}
 
 
 @dataclass
@@ -78,6 +86,11 @@ class TransferMeter:
     bytes_host: float = 0.0
     messages_fabric: int = 0
     messages_host: int = 0
+    # failed-then-retried leg attempts (fault injection): priced like
+    # messages plus backoff, but counted apart — a retry never issued a
+    # physical collective
+    retries_fabric: int = 0
+    retries_host: int = 0
     sim_time: float = 0.0
     coalesced: bool = True
     _txn: Optional[Dict] = field(default=None, repr=False, compare=False)
@@ -96,6 +109,24 @@ class TransferMeter:
             self.bytes_host += nbytes
             self.messages_host += msgs
         self.sim_time += link.time(nbytes, n_messages=msgs)
+
+    def record_retry(self, nbytes: float, tier: int, n_pages: int,
+                     attempt: int):
+        """Price one FAILED transfer-leg attempt: the wasted message time
+        plus exponential backoff before the retry. Retries bypass any open
+        ``coalesce`` transaction (their time is real whatever the batching)
+        and are counted in ``retries_*``, never ``messages_*`` — a failed
+        attempt never issued a physical collective, so the mesh domain's
+        ``collectives`` counter and the priced message count stay in
+        lockstep."""
+        link = self.hw.fabric if tier == REMOTE else self.hw.host_link
+        msgs = 1 if self.coalesced else max(1, n_pages)
+        if tier == REMOTE:
+            self.retries_fabric += msgs
+        else:
+            self.retries_host += msgs
+        self.sim_time += (link.time(nbytes, n_messages=msgs)
+                          + retry_backoff_time(self.hw, attempt))
 
     def coalesce(self):
         """Context manager fusing every ``record`` inside it into one
@@ -131,11 +162,15 @@ class AquaTensor:
     def __init__(self, *, n_logical: int, page_shape: Tuple[int, ...],
                  local_slots: int, host_slots: int, dtype=jnp.bfloat16,
                  meter: Optional[TransferMeter] = None, name: str = "kv",
-                 mesh=None):
+                 mesh=None, faults=None):
         self.name = name
         # optional MeshTierDomain: REMOTE pools become donor-device slabs and
         # remote legs become collectives (duck-typed; None = single-device)
         self.mesh = mesh
+        # optional core/faults.FaultInjector, consulted at every transfer
+        # leg (bounded retry-with-backoff on transient failures) and lease
+        # boundary (lost donors are never addressed again)
+        self.faults = faults
         self.page_shape = tuple(page_shape)
         self.dtype = jnp.dtype(dtype)
         self.page_bytes = int(np.prod(page_shape)) * self.dtype.itemsize
@@ -158,6 +193,10 @@ class AquaTensor:
         self._free_local = list(range(local_slots))[::-1]
         self._free_host = list(range(host_slots))[::-1]
         self._donors: List[str] = []
+        # leased slots per live donor (shrinks under ``shrink_lease``) — the
+        # capacity the auditor checks the free-list/occupancy partition
+        # against
+        self.remote_capacity: Dict[str, int] = {}
         self.meter = meter or TransferMeter()
 
     # ------------------------------------------------------------------
@@ -169,8 +208,19 @@ class AquaTensor:
         A donor evicted earlier may re-lease: its ``_donors`` entry is
         REUSED, never duplicated — a second append would leave the old
         index resolvable to the new pool for any stale ``donor_idx`` and
-        split one physical donor across two bookkeeping identities."""
-        assert donor not in self.remote_pools
+        split one physical donor across two bookkeeping identities.
+
+        Raises:
+            ValueError: the donor already holds a live lease here.
+            LeaseRevokedError: the donor was marked permanently lost.
+        """
+        if donor in self.remote_pools:
+            raise ValueError(f"{self.name}: donor {donor} already holds a "
+                             "live lease (evict before re-leasing)")
+        if self.faults is not None and self.faults.donor_lost(donor):
+            raise LeaseRevokedError(
+                f"{self.name}: donor {donor} is permanently lost and cannot "
+                "offer a lease", donor=donor)
         if self.mesh is not None:
             self.remote_pools[donor] = self.mesh.alloc_pool(
                 donor, slots, self.page_shape, self.dtype)
@@ -178,6 +228,7 @@ class AquaTensor:
             self.remote_pools[donor] = jnp.zeros(
                 (slots,) + self.page_shape, self.dtype)
         self._remote_free[donor] = list(range(slots))[::-1]
+        self.remote_capacity[donor] = int(slots)
         if donor not in self._donors:
             self._donors.append(donor)
 
@@ -191,8 +242,70 @@ class AquaTensor:
             moved = len(victims)
         del self.remote_pools[donor]
         del self._remote_free[donor]
+        del self.remote_capacity[donor]
         # donor stays in _donors so indices of others remain stable
         return moved
+
+    def shrink_lease(self, donor: str, n_slots: int) -> int:
+        """Donor reclaims its TOP ``n_slots`` slots under its own memory
+        pressure (the dynamic-lease gap: eviction's partial form). Occupied
+        reclaimed slots LIVE-MIGRATE to the remaining remote donors or the
+        HOST tier — never back onto the shrinking donor (it wants the HBM
+        back, re-placing there would hand it straight out again). Reclaimed
+        free slots just leave the free list. A shrink to zero drops the
+        lease entirely (like ``evict_remote``). Returns pages migrated.
+
+        Raises:
+            LeaseRevokedError: no live lease from this donor.
+            MemoryError: the surviving tiers cannot absorb the migration.
+        """
+        if donor not in self.remote_pools:
+            raise LeaseRevokedError(
+                f"{self.name}: shrink of donor {donor} without a live lease",
+                donor=donor)
+        cap = self.remote_capacity[donor]
+        n = int(min(max(n_slots, 0), cap))
+        if n == 0:
+            return 0
+        lo = cap - n
+        di = self._donors.index(donor)
+        victims = np.nonzero((self.page_table[:, 0] == REMOTE)
+                             & (self.page_table[:, 2] == di)
+                             & (self.page_table[:, 1] >= lo))[0]
+        moved = 0
+        if len(victims):
+            self._move(victims, REMOTE, exclude_donor=donor)
+            moved = len(victims)
+        self._remote_free[donor] = [s for s in self._remote_free[donor]
+                                    if s < lo]
+        self.remote_capacity[donor] = lo
+        if lo == 0:
+            del self.remote_pools[donor]
+            del self._remote_free[donor]
+            del self.remote_capacity[donor]
+        return moved
+
+    def fail_donor(self, donor: str) -> np.ndarray:
+        """Permanent donor loss: the peer died holding its slab, so every
+        page resident there is gone — no evacuation leg exists to run. The
+        pages flip to the LOST tier (refcounts intact: the auditor still
+        sees every referencer until recovery releases them) and the lease
+        is dropped. Returns the lost logical page ids; reading, migrating,
+        or building block tables over them raises ``PageLossError`` — the
+        engine's cue to re-queue the victims and recompute from the
+        prompt."""
+        if donor not in self.remote_pools:
+            return np.zeros((0,), np.int64)
+        di = self._donors.index(donor)
+        lost = np.nonzero((self.page_table[:, 0] == REMOTE)
+                          & (self.page_table[:, 2] == di))[0]
+        self.page_table[lost, 0] = LOST
+        del self.remote_pools[donor]
+        del self._remote_free[donor]
+        del self.remote_capacity[donor]
+        if self.faults is not None:
+            self.faults.mark_donor_lost(donor)
+        return lost
 
     # ------------------------------------------------------------------
     # allocation
@@ -211,12 +324,37 @@ class AquaTensor:
         if len(free_lp) < n:
             raise MemoryError(f"{self.name}: out of logical pages")
         lps = free_lp[:n]
-        for lp in lps:
-            tier, slot, donor = self._take_slot(prefer)
-            self.page_table[lp] = (tier, slot, donor)
+        taken: List[int] = []
+        try:
+            for lp in lps:
+                tier, slot, donor = self._take_slot(prefer)
+                self.page_table[lp] = (tier, slot, donor)
+                taken.append(int(lp))
+        except MemoryError:
+            # all-or-nothing: hand back every slot this call already took —
+            # a partial multi-page allocation must not leak pages when the
+            # pool runs dry mid-way
+            self._release_slots(taken)
+            raise
         self.page_fill[lps] = 1.0
         self.page_refs[lps] = 1
         return lps
+
+    def _release_slots(self, lps: Sequence[int]):
+        """Return the physical slots of not-yet-reffed pages to their free
+        lists (allocation-rollback helper: the pages were taken in a failing
+        call and never exposed to a caller)."""
+        for lp in lps:
+            tier, slot, donor = self.page_table[lp]
+            if tier == LOCAL:
+                self._free_local.append(int(slot))
+            elif tier == HOST:
+                self._free_host.append(int(slot))
+            elif tier == REMOTE:
+                self._remote_free[self._donors[donor]].append(int(slot))
+            self.page_table[lp] = (-1, -1, -1)
+            self.page_fill[lp] = 1.0
+            self.page_refs[lp] = 0
 
     def retain(self, lps: Sequence[int]):
         """Add one reference to each listed page (copy-on-write sharing): the
@@ -248,6 +386,7 @@ class AquaTensor:
                 self._free_host.append(int(slot))
             elif tier == REMOTE:
                 self._remote_free[self._donors[donor]].append(int(slot))
+            # LOST: the slot's pool is gone — nothing to hand back
             self.page_table[lp] = (-1, -1, -1)
             self.page_fill[lp] = 1.0
             self.page_refs[lp] = 0
@@ -273,11 +412,51 @@ class AquaTensor:
         raise MemoryError(f"{self.name}: all tiers full")
 
     # ------------------------------------------------------------------
-    # remote-pool transfer legs (mesh-aware)
+    # remote-pool transfer legs (mesh-aware, fault-guarded)
     # ------------------------------------------------------------------
+    def _leg_guard(self, tier: int, donor: Optional[str], n_pages: int):
+        """Consult the fault injector BEFORE issuing a transfer leg.
+
+        Transient failures retry with exponential backoff, each failed
+        attempt priced as a full wasted message (``record_retry``); the
+        injector's ``max_consecutive`` streak cap guarantees convergence
+        below the retry budget for any seed. Because the consult precedes
+        the collective, a failed attempt never reaches the wire — the mesh
+        ``collectives`` counter stays in lockstep with priced messages.
+
+        Raises:
+            LeaseRevokedError: the addressed donor is permanently lost.
+            TransferFaultError: the leg failed past ``max_leg_retries``
+                (unreachable with a streak-capped injector).
+        """
+        f = self.faults
+        if f is None:
+            return
+        if f.donor_lost(donor):
+            raise LeaseRevokedError(
+                f"{self.name}: transfer leg addressed lost donor {donor}",
+                donor=donor)
+        nbytes = float(n_pages) * self.page_bytes
+        attempt = 0
+        while f.leg_fails(tier, donor):
+            attempt += 1
+            self.meter.record_retry(nbytes, tier, n_pages, attempt)
+            if attempt >= f.max_leg_retries:
+                raise TransferFaultError(
+                    f"{self.name}: {TIER_NAMES[tier]} leg"
+                    f"{' to ' + donor if donor else ''} failed "
+                    f"{attempt} consecutive attempts (retry budget "
+                    f"{f.max_leg_retries})", tier=tier, donor=donor,
+                    attempts=attempt)
+
     def _remote_gather(self, donor: str, slots) -> jnp.ndarray:
         """Pull `slots` out of a donor pool as one contiguous staging batch.
         Mesh backend: one ``ppermute`` donor -> serving device."""
+        if donor not in self.remote_pools:
+            raise LeaseRevokedError(
+                f"{self.name}: gather from donor {donor} without a live "
+                "lease", donor=donor)
+        self._leg_guard(REMOTE, donor, len(slots))
         pool = self.remote_pools[donor]
         slots = np.asarray(slots, np.int32)
         if self.mesh is not None:
@@ -287,6 +466,11 @@ class AquaTensor:
     def _remote_scatter(self, donor: str, slots, data: jnp.ndarray):
         """Push a contiguous staging batch into a donor pool at `slots`.
         Mesh backend: one ``ppermute`` serving device -> donor."""
+        if donor not in self.remote_pools:
+            raise LeaseRevokedError(
+                f"{self.name}: scatter to donor {donor} without a live "
+                "lease", donor=donor)
+        self._leg_guard(REMOTE, donor, len(slots))
         pool = self.remote_pools[donor]
         slots = np.asarray(slots, np.int32)
         data = data.astype(self.dtype)
@@ -329,6 +513,7 @@ class AquaTensor:
                     if meter:
                         self.meter.record(data[sub].nbytes, REMOTE, len(sub))
             else:
+                self._leg_guard(HOST, None, len(idx))
                 self.host_pool[slots] = np.asarray(part)
                 if meter:
                     self.meter.record(part.nbytes, HOST, len(idx))
@@ -343,6 +528,7 @@ class AquaTensor:
         rows = self.page_table[lps]
         if len(lps) == 0:
             return jnp.zeros((0,) + self.page_shape, self.dtype)
+        self._check_not_lost(lps, rows, "read")
         parts: List[jnp.ndarray] = []
         order: List[np.ndarray] = []
         for tier in (LOCAL, REMOTE, HOST):
@@ -354,6 +540,7 @@ class AquaTensor:
                     rows[idx, 1].astype(np.int32))])
                 order.append(idx)
             elif tier == HOST:
+                self._leg_guard(HOST, None, len(idx))
                 parts.append(jnp.asarray(
                     self.host_pool[rows[idx, 1].astype(np.int64)]))
                 order.append(idx)
@@ -394,6 +581,7 @@ class AquaTensor:
                                  f" > pad_to={pad_to}")
             rows = self.page_table[np.asarray(lps, np.int64)]
             if not (rows[:, 0] == LOCAL).all():
+                self._check_not_lost(lps, rows, "block-table build")
                 bad = [int(l) for l, r in zip(lps, rows) if r[0] != LOCAL]
                 raise ValueError(f"{self.name}: pages {bad} not LOCAL; "
                                  "ensure_local before building block tables")
@@ -411,26 +599,57 @@ class AquaTensor:
     # migration (the AQUA mechanism)
     # ------------------------------------------------------------------
     def ensure_local(self, lps: Sequence[int]):
-        """Page-in: make all listed logical pages LOCAL (coalesced per tier)."""
+        """Page-in: make all listed logical pages LOCAL (coalesced per tier).
+
+        Raises:
+            PageLossError: a listed page is in the LOST tier (its donor died
+                holding the only copy) — there is nothing to page in.
+        """
         lps = np.asarray(lps, np.int64)
         rows = self.page_table[lps]
+        self._check_not_lost(lps, rows, "ensure_local")
         for tier in (REMOTE, HOST):
             sel = lps[rows[:, 0] == tier]
             if len(sel):
                 self._move(sel, LOCAL)
 
     def offload(self, lps: Sequence[int], *, prefer: int = REMOTE):
-        """Page-out LOCAL pages to the fast remote tier (host as fallback)."""
+        """Page-out LOCAL pages to the fast remote tier (host as fallback).
+
+        Raises:
+            PageLossError: a listed page is LOST — silently skipping it
+                (like the already-remote pages below) would mask a donor
+                death from the park path.
+        """
         lps = np.asarray(lps, np.int64)
         rows = self.page_table[lps]
+        self._check_not_lost(lps, rows, "offload")
         sel = lps[rows[:, 0] == LOCAL]
         if len(sel):
             self._move(sel, prefer)
 
-    def _move(self, lps: np.ndarray, dst_tier: int):
-        """Coalesced migration of a batch of pages between tiers."""
+    def _check_not_lost(self, lps, rows, op: str):
+        """Touching a LOST page is unrecoverable here — surface the typed
+        loss so the engine's recompute-from-prompt path takes over."""
+        lost = [int(l) for l, r in zip(lps, rows) if r[0] == LOST]
+        if lost:
+            raise PageLossError(
+                f"{self.name}: {op} of page(s) {lost[:8]} whose donor died "
+                "holding the only copy", plane=self.name, pages=lost)
+
+    def _move(self, lps: np.ndarray, dst_tier: int,
+              exclude_donor: Optional[str] = None):
+        """Coalesced migration of a batch of pages between tiers.
+
+        ``exclude_donor`` removes one donor from the REMOTE destination set
+        (a shrinking donor must not receive the pages it is reclaiming).
+
+        Raises:
+            PageLossError: a listed page is in the LOST tier.
+        """
         # group by (source tier, donor) so each group is ONE gather + transfer
         rows = self.page_table[lps]
+        self._check_not_lost(lps, rows, "migration")
         groups: Dict[Tuple[int, int], List[int]] = {}
         for lp, (tier, slot, donor) in zip(lps, rows):
             groups.setdefault((int(tier), int(donor)), []).append(int(lp))
@@ -447,6 +666,7 @@ class AquaTensor:
                 for s in slots:
                     self._remote_free[donor_name].append(int(s))
             else:
+                self._leg_guard(HOST, None, len(slots))
                 staging = jnp.asarray(self.host_pool[slots])
                 for s in slots:
                     self._free_host.append(int(s))
@@ -484,6 +704,8 @@ class AquaTensor:
             elif dst_tier == REMOTE:
                 placed = 0
                 for di, d in enumerate(self._donors):
+                    if d == exclude_donor:
+                        continue
                     free = self._remote_free.get(d, [])
                     take = min(len(free), len(group) - placed)
                     if take <= 0:
@@ -497,12 +719,14 @@ class AquaTensor:
                 if placed < len(group):          # remote full -> host fallback
                     rest = staging[placed:]
                     need = len(group) - placed
+                    self._leg_guard(HOST, None, need)
                     dst_slots = [self._pop_free(self._free_host, HOST, need)
                                  for _ in range(need)]
                     self.host_pool[np.asarray(dst_slots)] = np.asarray(rest)
                     new_rows += [(HOST, s, -1) for s in dst_slots]
                     meter(placed, len(group), HOST, None)
             else:
+                self._leg_guard(HOST, None, len(group))
                 dst_slots = [self._pop_free(self._free_host, HOST, len(group))
                              for _ in group]
                 self.host_pool[np.asarray(dst_slots)] = np.asarray(staging)
@@ -524,7 +748,12 @@ class AquaTensor:
     # ------------------------------------------------------------------
     def tier_counts(self) -> Dict[str, int]:
         t = self.page_table[:, 0]
-        return {TIER_NAMES[k]: int((t == k).sum()) for k in (LOCAL, REMOTE, HOST)}
+        out = {TIER_NAMES[k]: int((t == k).sum())
+               for k in (LOCAL, REMOTE, HOST)}
+        n_lost = int((t == LOST).sum())
+        if n_lost:                    # only surfaced while a loss is live
+            out["lost"] = n_lost
+        return out
 
     @property
     def local_free(self) -> int:

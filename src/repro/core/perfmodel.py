@@ -52,6 +52,10 @@ class HardwareProfile:
     # request per layer, which is the between-launch idle regime of
     # "Is the GPU Half-Empty or Half-Full?" (Kossmann et al. 2024).
     launch_overhead: float = 4e-6
+    # base delay before re-issuing a FAILED transfer leg (fault injection):
+    # detecting the failure (timeout / NACK) plus requeueing the collective.
+    # Doubles per consecutive retry (retry_backoff_time).
+    retry_backoff: float = 25e-6
 
     def pod_slice(self, n: int) -> "HardwareProfile":
         """Aggregate n TP-sharded chips into one logical serving unit (a 34B
@@ -69,7 +73,8 @@ class HardwareProfile:
                       self.fabric.latency),
             LinkModel(self.host_link.name, self.host_link.peak_bw * n,
                       self.host_link.latency),
-            self.mfu, self.membw_util, self.launch_overhead)
+            self.mfu, self.membw_util, self.launch_overhead,
+            self.retry_backoff)
 
 
 # Paper testbed: A100-80G SXM. Fig. 3a calibration: 100 GB/s @ 2 MB, ~250 GB/s peak
@@ -263,6 +268,15 @@ def launch_overhead_time(hw: HardwareProfile, n_launches: int) -> float:
     idle regime of Kossmann et al. 2024. One fused call keeps it O(1).
     """
     return max(0, n_launches) * hw.launch_overhead
+
+
+def retry_backoff_time(hw: HardwareProfile, attempt: int) -> float:
+    """Backoff before re-issuing a failed transfer leg: exponential in the
+    consecutive-failure count (attempt 1 waits ``retry_backoff``, attempt 2
+    twice that, ...). Charged by ``TransferMeter.record_retry`` on top of
+    the wasted message time; with the ``FaultInjector``'s streak cap the
+    total per-leg penalty is bounded by a small constant."""
+    return hw.retry_backoff * (2 ** max(int(attempt) - 1, 0))
 
 
 def overlapped_transfer_time(compute_s: float, transfer_s: float) -> float:

@@ -266,7 +266,10 @@ def place(models: Sequence[ModelSpec], n_servers: int, gpus_per_server: int,
     if solver == "milp":
         try:
             assign = _solve_milp(models, n_servers, gpus_per_server, gpu_mem)
-        except Exception:
+        except (ImportError, ValueError, RuntimeError):
+            # scipy missing, MILP infeasible, or solver failure: fall back
+            # to the exact branch-and-bound — never swallow KeyboardInterrupt
+            # or genuine bugs under a blanket handler
             solver = "bnb"
             assign = _solve_bnb(models, n_servers, gpus_per_server, gpu_mem, time_limit)
     elif solver == "bnb":

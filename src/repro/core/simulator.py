@@ -22,9 +22,11 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core.errors import CapacityError
 from repro.core.perfmodel import (HardwareProfile, ModelCost,
                                   context_switch_time,
-                                  overlapped_transfer_time, page_flip_time)
+                                  overlapped_transfer_time, page_flip_time,
+                                  retry_backoff_time)
 from repro.serving.scheduler import split_step_budget
 
 
@@ -49,6 +51,8 @@ class Request:
     ttft: Optional[float] = None
     finish: Optional[float] = None
     resident: bool = False           # context currently in local HBM
+    recovered: bool = False          # lost its parked pages to a donor loss
+    #                                  and recomputed from the prompt
 
 
 @dataclass
@@ -79,7 +83,8 @@ class ServingSimulator:
                  spec_chunk_ahead: bool = False,
                  coalesce_planes: bool = True,
                  lora_cache_bytes: float = 0.0,
-                 lora_num_adapters: int = 200):
+                 lora_num_adapters: int = 200,
+                 faults=None):
         self.hw = hw
         self.model = model
         self.weight_bytes = weight_bytes
@@ -118,6 +123,17 @@ class ServingSimulator:
         self.paging = paging
         self.lora_cache = lora_cache_bytes
         self.lora_num_adapters = lora_num_adapters
+        # faults: optional core/faults.FaultInjector on the ANALYTIC clock —
+        # transfer legs pay Bernoulli retry+backoff time, and time-scheduled
+        # FaultEvents (at_time) fire at round boundaries: a donor_loss resets
+        # its fraction of parked contexts to recompute from the prompt, a
+        # lease_shrink degrades that fraction of future fabric flip bytes to
+        # the host link (the reclaimed donor slots' pages now live on host)
+        self.faults = faults
+        self.leg_retries = 0
+        self.donor_losses = 0
+        self.lease_shrinks = 0
+        self._host_spill = 0.0
         # prefix sharing only exists for all-token-plane families: a
         # recurrent state page summarizes the whole prefix and cannot be
         # aliased (PagedStateRuntime forces sharing off when state_bytes>0),
@@ -162,10 +178,33 @@ class ServingSimulator:
             return {r.prefix_group for r in running
                     if r.resident and r.prefix_group is not None}
 
-        assert self.kv_cap > 0, "model does not fit this serving unit " \
-            "(use HardwareProfile.pod_slice for TP-sharded serving)"
+        if self.kv_cap <= 0:
+            raise CapacityError(
+                "model does not fit this serving unit (use "
+                "HardwareProfile.pod_slice for TP-sharded serving)")
         stall = 0
         while (pending or waiting or running) and t < horizon:
+            # fire time-scheduled fault events due on the analytic clock
+            if self.faults is not None:
+                for ev in self.faults.due_events(now=t):
+                    if ev.kind == "donor_loss":
+                        self.donor_losses += 1
+                        victims = [r for r in waiting
+                                   if not r.resident and r.finish is None
+                                   and (r.prefill_pos > 0 or r.generated > 0)]
+                        n = math.ceil(ev.frac * len(victims))
+                        for r in victims[:n]:
+                            # parked pages died with the donor: recompute
+                            # from the prompt (TTFT stands — the first token
+                            # was already served; only remaining work re-runs)
+                            r.generated = 0
+                            r.prefill_pos = 0
+                            r.prefilled = False
+                            r.recovered = True
+                    elif ev.kind == "lease_shrink":
+                        self.lease_shrinks += 1
+                        self._host_spill = min(
+                            1.0, self._host_spill + ev.frac)
             # admit arrivals. Prefix sharing adopts at arrival (mirroring
             # the engine's submit-time index lookup): an arriving member of
             # a prefix group whose shared prefix some member already wrote
@@ -443,12 +482,37 @@ class ServingSimulator:
             # message per (tier, donor); uncoalesced, a hybrid/SSM flip
             # pays one message per plane (ModelCost.n_planes)
             n_groups = 1 if self.coalesce_planes else self.model.n_planes
-            return page_flip_time(self.hw, kv, tier=self.tier,
-                                  n_groups=n_groups)
-        # uncoalesced: one message per layer-page fragment (paper Fig. 3a pain)
-        n_frag = 1 if self.coalesced else max(1, int(kv // (2 * 16 * 128 * 64)))
-        return context_switch_time(self.hw, kv, tier=self.tier,
-                                   coalesced=self.coalesced, n_fragments=n_frag)
+            spill = self._host_spill if self.tier == "fabric" else 0.0
+            base = page_flip_time(self.hw, kv * (1.0 - spill),
+                                  tier=self.tier, n_groups=n_groups)
+            if spill > 0.0:
+                # lease-shrunk donor fleet: the reclaimed slots' share of
+                # the flip degrades to the PCIe host link
+                base += page_flip_time(self.hw, kv * spill, tier="host",
+                                       n_groups=n_groups)
+        else:
+            # uncoalesced: one message per layer-page fragment (Fig. 3a pain)
+            n_frag = (1 if self.coalesced
+                      else max(1, int(kv // (2 * 16 * 128 * 64))))
+            base = context_switch_time(self.hw, kv, tier=self.tier,
+                                       coalesced=self.coalesced,
+                                       n_fragments=n_frag)
+        return base + self._retry_time(base)
+
+    def _retry_time(self, leg_time: float) -> float:
+        """Transient transfer-leg faults under the injector: each failed
+        attempt re-pays the leg plus exponential backoff, bounded by the
+        injector's retry cap (its consecutive-failure cap guarantees the
+        bound is reachable)."""
+        if self.faults is None:
+            return 0.0
+        extra, attempt = 0.0, 0
+        while (attempt < self.faults.max_leg_retries
+               and self.faults.leg_fails(self.tier, None)):
+            attempt += 1
+            self.leg_retries += 1
+            extra += leg_time + retry_backoff_time(self.hw, attempt)
+        return extra
 
     def _lora_load_time(self, r: Request) -> float:
         """Paper setup: N adapters, random per request, LRU cache holding

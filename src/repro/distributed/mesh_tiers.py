@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.errors import LeaseRevokedError
 from repro.distributed.sharding import shard_map_compat
 
 
@@ -88,6 +89,11 @@ class MeshTierDomain:
         self.n_dev = len(devices)
         self.mesh = Mesh(np.array(devices), (axis,))
         self._donor_dev: Dict[str, int] = {}
+        # optional core/faults.FaultInjector shared with the AquaTensors of
+        # this domain: the domain double-checks lost donors at its own
+        # boundary (a collective addressed to a dead peer must never be
+        # issued, whatever the caller's bookkeeping says)
+        self.faults = None
         # one entry per physical collective issued (one per (plane, tier,
         # donor) leg) — the wire-message counterpart of the TransferMeter's
         # priced messages
@@ -110,6 +116,18 @@ class MeshTierDomain:
         except RuntimeError:
             return False
 
+    def attach_faults(self, faults) -> None:
+        """Share a ``FaultInjector`` with the domain (lease-boundary checks
+        on every collective leg; the AquaTensors consult the same injector
+        for transient-leg retries BEFORE reaching these entry points)."""
+        self.faults = faults
+
+    def _guard_donor(self, donor: str, op: str) -> None:
+        if self.faults is not None and self.faults.donor_lost(donor):
+            raise LeaseRevokedError(
+                f"mesh {op} addressed lost donor {donor} — its device left "
+                "the domain", donor=donor)
+
     def donor_device(self, donor: str) -> int:
         """Mesh index of the device backing ``donor``'s leases. Assigned on
         first use, cycling over the peers (device 0 serves), and STABLE for
@@ -129,6 +147,7 @@ class MeshTierDomain:
         — the only row ever read or written — is resident on the donor
         device. Slot ``slots`` is the scatter scratch row bucket padding
         targets."""
+        self._guard_donor(donor, "lease")
         self.donor_device(donor)              # pin the mapping at lease time
         shape = (self.n_dev, slots + 1) + tuple(page_shape)
         sharding = NamedSharding(self.mesh, P(self.axis))
@@ -139,6 +158,7 @@ class MeshTierDomain:
         """Offload leg: move ``data`` (a coalesced page batch on the serving
         device) into ``pool``'s donor slab at ``slots`` — ONE ppermute.
         Returns the updated pool."""
+        self._guard_donor(donor, "push")
         dst = self.donor_device(donor)
         n = len(slots)
         S = pool.shape[1] - 1
@@ -162,6 +182,7 @@ class MeshTierDomain:
         """Restore leg: gather ``slots`` from the donor slab and move them to
         the serving device — ONE ppermute. Returns the ``(n, *page)`` staging
         batch committed to the serving device."""
+        self._guard_donor(donor, "pull")
         src = self.donor_device(donor)
         n = len(slots)
         S = pool.shape[1] - 1

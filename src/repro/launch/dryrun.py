@@ -149,7 +149,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
             with gzip.open(os.path.join(out_dir, stem + ".hlo.gz"),
                            "wt") as f:
                 f.write(compiled.as_text())
-    except Exception as e:
+    except (ValueError, TypeError, KeyError, RuntimeError, MemoryError,
+            NotImplementedError) as e:
+        # the failure modes AOT lowering/compilation actually raises; a
+        # blanket handler would also swallow KeyboardInterrupt/SystemExit
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    trace=traceback.format_exc()[-2000:])
         print(f"[dryrun] {mesh_name} {arch} {shape_name} FAILED: {e}")

@@ -73,6 +73,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.aqua_tensor import REMOTE
 from repro.core.coordinator import Coordinator
+# re-exported for backward compatibility: SchedulingInvariantError predates
+# the typed hierarchy in core/errors.py and callers import it from here
+from repro.core.errors import SchedulingInvariantError  # noqa: F401
+from repro.core.faults import InvariantAuditor
 from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E,
                                   overlapped_transfer_time)
 from repro.models import api
@@ -80,12 +84,6 @@ from repro.serving.kv_cache import PagedStateRuntime
 from repro.serving.scheduler import (CFSScheduler, Decision, FCFSScheduler,
                                      ReqState, bucket_tokens, fairness_spread,
                                      split_step_budget)
-
-
-class SchedulingInvariantError(RuntimeError):
-    """The planned run set violated an engine invariant (e.g. more requests
-    than free batch slots) — a scheduler bug that must fail loudly instead of
-    silently skipping placement and serving the request never."""
 
 
 @dataclass
@@ -116,6 +114,16 @@ class EngineMetrics:
     # per chunk row + one for decode, each ~n_layers launches)
     launch_trace: List[int] = field(default_factory=list)
     baseline_launch_trace: List[int] = field(default_factory=list)
+    # fault-tolerance accounting (zero on a fault-free run): transfer-leg
+    # retries absorbed by bounded backoff, donor losses / lease shrinks
+    # applied, pages live-migrated off shrinking donors, and the requests
+    # whose pages died with a donor and were recomputed from the prompt
+    leg_retries: int = 0
+    donor_losses: int = 0
+    lease_shrinks: int = 0
+    migrated_pages: int = 0
+    recomputes: int = 0
+    recovered_rids: List[int] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -134,7 +142,7 @@ class ServingEngine:
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
                  want_remote_bytes: float = 0.0, respond_every: int = 4,
-                 mesh=None):
+                 mesh=None, faults=None, audit: bool = False):
         """Build a serving engine on the unified paged state runtime.
 
         Args:
@@ -171,6 +179,17 @@ class ServingEngine:
                 :meth:`calibrate_clock` can refit ``hw``'s fabric link to
                 the measured transfer times. Ignored when ``kv`` is given
                 (the runtime's own mesh wins).
+            faults: optional ``core/faults.FaultInjector`` — attached to
+                every plane and the mesh so transfer legs and lease
+                boundaries consult it; its step-scheduled ``FaultEvent``\\s
+                (donor loss, lease shrink) are applied at the top of each
+                engine step, with live migration / recompute-from-prompt
+                recovery and scheduler budget re-planning.
+            audit: run a full ``InvariantAuditor`` pass after EVERY step
+                (refcounts vs block tables vs tier occupancy vs meter and
+                collective counters) — a debug mode that fails loudly on
+                state corruption instead of letting it surface as wrong
+                logits later.
 
         Raises:
             ValueError: the family is not paged-servable, or
@@ -240,6 +259,11 @@ class ServingEngine:
         self._prefetched: List[ReqState] = []
         self.metrics = EngineMetrics()
         self._rid = itertools.count()
+
+        self.faults = faults
+        if faults is not None:
+            self.kv.attach_faults(faults)
+        self.auditor = InvariantAuditor() if audit else None
 
     def _shared_discount(self, r: ReqState,
                          chosen: Sequence[ReqState]) -> np.ndarray:
@@ -339,12 +363,86 @@ class ServingEngine:
     def _respond(self):
         """The paper's aqua.respond(): honor donor reclaims at an iteration
         boundary — evacuate their pools and release the grants."""
+        reclaimed = False
         for donor in self.coord.pending_reclaims(self.name):
             self.pager.evict_remote(donor)
+            reclaimed = True
             for d, nbytes in list(getattr(self, "_grants", [])):
                 if d == donor:
                     self.coord.free(self.name, donor, nbytes)
                     self._grants.remove((d, nbytes))
+        if reclaimed:
+            self._replan_capacity()
+
+    # ------------------------------------------------------------------
+    # fault application and recovery
+    # ------------------------------------------------------------------
+    def _replan_capacity(self):
+        """Contract the scheduler's admission budget after tiers shrink.
+
+        The planning budget stays the LOCAL pool sizes (the run set must fit
+        LOCAL), additionally capped by the runtime's TOTAL live capacity —
+        after a lease shrink or donor loss the tiers backing preemption may
+        hold fewer pages than LOCAL itself, and admitting up to the LOCAL
+        budget would wedge the first park."""
+        self.sched.update_budget(
+            np.minimum(self.kv.page_budget, self.kv.total_capacity()))
+
+    def _recover_lost(self, rid: int):
+        """Degrade-to-host recovery for a request whose pages died with a
+        donor: release every surviving page, reset the request to the start
+        of prefill, and re-queue it — the greedy decode loop regenerates
+        bit-identical tokens from the prompt. A still-resident shared
+        prefix (other sharers' pages survived LOCAL/HOST) is re-adopted so
+        the recompute starts past it, not from position zero."""
+        m = self.metrics
+        r = next((x for x in self.running + self.waiting if x.rid == rid),
+                 None)
+        if r is None or r.done:
+            return
+        if r.slot is not None:
+            self._free_slots.append(r.slot)
+            r.slot = None
+        if r in self.running:
+            self.running.remove(r)
+        self.kv.release(r.rid)
+        r.parked = None
+        r.prefill_pos = 0
+        r.generated = []
+        r.shared_tokens = 0
+        if self.kv.sharing and not r.n_prefix:
+            shared = self.kv.adopt_prefix(r.rid, r.prompt_tokens,
+                                          seed=r.lora_id)
+            if shared:
+                r.shared_tokens = shared
+                r.prefill_pos = min(shared, r.prompt_positions - 1)
+        if r not in self.waiting:
+            self.waiting.append(r)
+        m.recomputes += 1
+        m.recovered_rids.append(rid)
+
+    def _apply_faults(self) -> float:
+        """Apply the injector's step-scheduled fault events, then re-plan
+        admission capacity. A ``lease_shrink`` live-migrates the reclaimed
+        slots' pages to surviving donors or the host tier; a ``donor_loss``
+        flips the donor's pages to LOST and sends every victim request
+        through :meth:`_recover_lost`. Returns the metered transfer time
+        the recovery work cost (migration page moves)."""
+        m = self.metrics
+        t_before = self.pager.meter.sim_time
+        fired = False
+        for ev in self.faults.due_events(step=m.steps):
+            fired = True
+            if ev.kind == "lease_shrink":
+                m.lease_shrinks += 1
+                m.migrated_pages += self.kv.shrink_lease(ev.donor, ev.frac)
+            elif ev.kind == "donor_loss":
+                m.donor_losses += 1
+                for rid in self.kv.fail_donor(ev.donor):
+                    self._recover_lost(rid)
+        if fired:
+            self._replan_capacity()
+        return self.pager.meter.sim_time - t_before
 
     # ------------------------------------------------------------------
     def calibrate_clock(self, *, min_samples: int = 4) -> bool:
@@ -397,6 +495,8 @@ class ServingEngine:
         m = self.metrics
         if self.coord is not None and m.steps % self.respond_every == 0:
             self._respond()
+        fault_time = (self._apply_faults() if self.faults is not None
+                      else 0.0)
 
         decision = self.sched.plan(m.steps, self.waiting, self.running)
 
@@ -433,7 +533,7 @@ class ServingEngine:
                                        len(chunk_plan), flops_slack)
         compute_time, fused_transfer = self._fused_step(live, chunk_plan,
                                                         specs)
-        step_time = compute_time + transfer_time + fused_transfer
+        step_time = compute_time + transfer_time + fused_transfer + fault_time
 
         # retire bookkeeping first: freed slots/pages raise the odds the
         # prefetch below fits (times are stamped after the prefetch)
@@ -466,6 +566,10 @@ class ServingEngine:
         m.step_times.append(step_time)
         m.fairness_trace.append(
             fairness_spread(self.waiting + self.running))
+        m.leg_retries = (self.pager.meter.retries_fabric
+                         + self.pager.meter.retries_host)
+        if self.auditor is not None:
+            self.auditor.audit(self.kv, engine=self)
 
     # ------------------------------------------------------------------
     # placement: park preempted requests, slot + restore the scheduled set

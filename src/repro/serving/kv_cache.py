@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.aqua_tensor import (AquaTensor, LOCAL, REMOTE, TransferMeter)
+from repro.core.errors import LeaseRevokedError
 
 
 @dataclass
@@ -145,6 +146,7 @@ class PagedStateRuntime:
         self.pps = math.ceil(max_seq / page_tokens)
         self.meter = meter or TransferMeter()
         self.mesh = mesh
+        self.faults = None
         self.planes: Dict[str, _Plane] = {}
         layout = lm.paged_layout(cfg)
         # prefix sharing requires every plane to be position-addressed and
@@ -310,28 +312,55 @@ class PagedStateRuntime:
         loudly here with the tensor/tier MemoryError. The page-budget-aware
         schedulers are designed to keep planned run sets below this point.
 
+        The grow is ALL-OR-NOTHING across planes: if any plane's pool runs
+        dry mid-way, every page this call already took — in this plane and
+        the planes before it — is unpinned and released before the
+        MemoryError propagates, so a failed hybrid (multi-plane) grow never
+        leaks pages or refcounts.
+
         Raises:
             MemoryError: a fresh page cannot be placed (or kept) LOCAL.
         """
         self._activate(rid)
-        for plane in self.planes.values():
-            rows = plane.pages.setdefault(
-                rid, [[] for _ in range(plane.n_layers)])
-            need = (self.pages_for(n_tokens) if plane.kind == "tokens" else 1)
-            fresh: List[int] = []
-            for row in rows:
-                while len(row) < need:
-                    lp = int(plane.aqua.allocate(1, prefer=LOCAL)[0])
-                    if plane.aqua.page_table[lp, 0] != LOCAL:
-                        plane.aqua.ensure_local([lp])  # raises: LOCAL is full
-                    row.append(lp)
-                    plane.pin[lp] = plane.pin.get(lp, 0) + 1
-                    if plane.kind == "state":
-                        fresh.append(lp)
-            if fresh:
-                plane.aqua.write_local(
-                    fresh, jnp.zeros((len(fresh),) + plane.aqua.page_shape,
-                                     plane.aqua.dtype))
+        added: List[Tuple[_Plane, List[int], int]] = []
+        fresh_rids: List[_Plane] = []     # planes whose rows this call made
+        try:
+            for plane in self.planes.values():
+                if rid not in plane.pages:
+                    fresh_rids.append(plane)
+                rows = plane.pages.setdefault(
+                    rid, [[] for _ in range(plane.n_layers)])
+                need = (self.pages_for(n_tokens) if plane.kind == "tokens"
+                        else 1)
+                fresh: List[int] = []
+                for row in rows:
+                    while len(row) < need:
+                        lp = int(plane.aqua.allocate(1, prefer=LOCAL)[0])
+                        try:
+                            if plane.aqua.page_table[lp, 0] != LOCAL:
+                                plane.aqua.ensure_local([lp])  # LOCAL full
+                        except MemoryError:
+                            plane.aqua.free([lp])   # spilled page: unwind it
+                            raise
+                        row.append(lp)
+                        added.append((plane, row, lp))
+                        plane.pin[lp] = plane.pin.get(lp, 0) + 1
+                        if plane.kind == "state":
+                            fresh.append(lp)
+                if fresh:
+                    plane.aqua.write_local(
+                        fresh,
+                        jnp.zeros((len(fresh),) + plane.aqua.page_shape,
+                                  plane.aqua.dtype))
+        except MemoryError:
+            for plane, row, lp in reversed(added):
+                self._unpin(plane, lp)
+                plane.aqua.free([lp])
+                row.remove(lp)
+            for plane in fresh_rids:
+                if not any(plane.pages.get(rid, [])):
+                    plane.pages.pop(rid, None)
+            raise
 
     def release(self, rid: int):
         """Drop the request's references: pages it shares with a live
@@ -485,8 +514,15 @@ class PagedStateRuntime:
                     if int(plane.aqua.refcounts([lp])[0]) <= 1:
                         continue
                     new = int(plane.aqua.allocate(1, prefer=LOCAL)[0])
-                    if plane.aqua.page_table[new, 0] != LOCAL:
-                        plane.aqua.ensure_local([new])
+                    try:
+                        if plane.aqua.page_table[new, 0] != LOCAL:
+                            plane.aqua.ensure_local([new])
+                    except MemoryError:
+                        # the clone spilled and cannot be pulled back: hand
+                        # it straight back instead of leaking it (the block
+                        # table still points at the shared original)
+                        plane.aqua.free([new])
+                        raise
                     plane.aqua.write_local([new], plane.aqua.read([lp]))
                     if rid in self._active:
                         self._unpin(plane, lp)
@@ -683,6 +719,79 @@ class PagedStateRuntime:
                        for p in self.planes.values()
                        if donor in p.aqua.remote_pools)
 
+    # -- fault plumbing (lease revocation, donor loss) ---------------------
+    def attach_faults(self, faults) -> None:
+        """Share one ``core/faults.FaultInjector`` with every plane's tensor
+        (transfer-leg retry consults) and the mesh domain (lease-boundary
+        guards on the collective legs)."""
+        self.faults = faults
+        for plane in self.planes.values():
+            plane.aqua.faults = faults
+        if self.mesh is not None:
+            self.mesh.attach_faults(faults)
+
+    def shrink_lease(self, donor: str, frac: float) -> int:
+        """Dynamic donor-side memory pressure: the donor reclaims ``frac``
+        of its leased slots in EVERY plane, NOW (unlike ``evict_remote``
+        this is partial, and unlike the coordinator reclaim poll it is not
+        deferred to a respond boundary — the donor's own traffic needs the
+        HBM). Occupied reclaimed slots live-migrate to the remaining donors
+        or the host tier, all planes fused into one coalesced message per
+        (tier, donor) group. Returns pages migrated.
+
+        Raises:
+            LeaseRevokedError: no live lease from this donor in any plane.
+            MemoryError: the surviving tiers cannot absorb the migration.
+        """
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"shrink fraction {frac} not in (0, 1]")
+        holders = [p for p in self.planes.values()
+                   if donor in p.aqua.remote_pools]
+        if not holders:
+            raise LeaseRevokedError(
+                f"shrink of donor {donor} without a live lease in any plane",
+                donor=donor)
+        moved = 0
+        with self.meter.coalesce():
+            for plane in holders:
+                n = math.ceil(frac * plane.aqua.remote_capacity[donor])
+                moved += plane.aqua.shrink_lease(donor, n)
+        return moved
+
+    def fail_donor(self, donor: str) -> List[int]:
+        """Permanent donor loss: every page resident on the donor (every
+        plane) flips to the LOST tier and the leases drop. Returns the
+        sorted rids of VICTIM requests — those whose block tables reference
+        a lost page — for the engine's recompute-from-prompt recovery.
+        Prefix-index entries backed by lost pages are dropped immediately,
+        so no later arrival can adopt a dead prefix."""
+        victims: set = set()
+        for plane in self.planes.values():
+            if donor not in plane.aqua.remote_pools:
+                continue
+            lost = set(int(l) for l in plane.aqua.fail_donor(donor))
+            if not lost:
+                continue
+            for lp in lost:
+                self._drop_index_entry(plane.name, lp)
+            for rid, rows in plane.pages.items():
+                if any(int(lp) in lost for row in rows for lp in row):
+                    victims.add(rid)
+        if self.faults is not None:
+            self.faults.mark_donor_lost(donor)
+        return sorted(victims)
+
+    def total_capacity(self) -> np.ndarray:
+        """Per-plane PHYSICAL slots across every live tier (scratch
+        excluded): what the runtime can hold AT ALL, LOCAL or parked. The
+        engine re-plans the scheduler budget against this after a lease
+        shrinks or a donor dies — admission must contract when the tiers
+        backing preemption vanish."""
+        return np.asarray(
+            [p.aqua.local_pool.shape[0] - 1 + p.aqua.host_pool.shape[0]
+             + sum(p.aqua.remote_capacity.values())
+             for p in self.planes.values()], np.int64)
+
     def stats(self) -> Dict:
         """Tier occupancy per plane, transfer-meter totals, and the prefix-
         sharing counters (hits, adopted tokens, copy-on-write clones,
@@ -705,4 +814,6 @@ class PagedStateRuntime:
                           "bytes_host": self.meter.bytes_host,
                           "messages_fabric": self.meter.messages_fabric,
                           "messages_host": self.meter.messages_host,
+                          "retries_fabric": self.meter.retries_fabric,
+                          "retries_host": self.meter.retries_host,
                           "sim_time": self.meter.sim_time}}

@@ -51,7 +51,10 @@ def apply_lora(params: dict, cfg: ModelConfig, adapter: dict) -> dict:
     """Merge the adapter into stacked block params (single-adapter serving)."""
     from repro.models.lm import group_size
     gs = group_size(cfg)
-    assert gs == 1, "adapter merge supported for homogeneous stacks"
+    if gs != 1:
+        raise ValueError(
+            f"{cfg.name}: adapter merge supported for homogeneous stacks "
+            f"only (group size {gs})")
     scale = adapter["alpha"] / adapter["rank"]
 
     def patch(blocks):

@@ -189,6 +189,12 @@ class FCFSScheduler:
         return (self.page_cost(r, chosen) if self._marginal
                 else self.page_cost(r))
 
+    def update_budget(self, page_budget) -> None:
+        """Re-plan admission against a new LOCAL/physical budget — the
+        engine calls this after a lease shrink or donor loss contracts the
+        tiers the run set's pages can live in."""
+        self.page_budget = page_budget
+
     def plan(self, step: int, waiting: Sequence[ReqState],
              running: Sequence[ReqState]) -> Decision:
         """Plan one step: keep everything running, admit waiters in arrival
@@ -248,6 +254,11 @@ class CFSScheduler:
     def _cost(self, r: ReqState, chosen: Sequence[ReqState]):
         return (self.page_cost(r, chosen) if self._marginal
                 else self.page_cost(r))
+
+    def update_budget(self, page_budget) -> None:
+        """Re-plan fair picks against a new LOCAL/physical budget (see
+        :meth:`FCFSScheduler.update_budget`)."""
+        self.page_budget = page_budget
 
     def plan(self, step: int, waiting: Sequence[ReqState],
              running: Sequence[ReqState]) -> Decision:
