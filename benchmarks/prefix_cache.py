@@ -1,0 +1,182 @@
+"""Global radix prefix-cache benchmark.
+
+Measures what retaining refcount-0 prefix pages buys when sharers do NOT
+overlap in time — the follow-up-turn / multi-tenant-system-prompt load
+where pure live CoW sharing gets zero hits:
+
+  * engine     — REAL numerics (smoke model, unified paged runtime): a
+                 leader prefills a multi-page prompt and RUNS TO
+                 COMPLETION; only then does a pack of followers with the
+                 same prefix arrive. With the cache on, their adoptions
+                 revive the leader's cached pages (prefill skipped, only
+                 the restore is paid); off, every follower recomputes the
+                 prefix from scratch. Reports cache hit/eviction counters,
+                 follower TTFT, prefill chunks and step-time tails.
+  * simulator  — paper scale (CodeLlama-34B on A100): a heavy-tailed
+                 multi-tenant stream (Zipf tenant mix, lognormal tails,
+                 bursty arrivals separated by think time) under CFS +
+                 fabric offload, cache-on vs cache-off.
+
+Writes ``BENCH_prefix_cache.json`` next to the repo root so the perf
+trajectory is tracked across PRs (the step-time keys feed the perf gate).
+
+    PYTHONPATH=src python -m benchmarks.prefix_cache
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import make_multi_tenant_requests, pct as _pct
+
+
+def measure_engine(arch: str = "qwen1.5-0.5b", prefix_len: int = 24,
+                   n_followers: int = 3, tail_len: int = 6,
+                   max_seq: int = 64) -> Dict[str, Dict]:
+    """A leader writes a ``prefix_len``-token prefix and finishes BEFORE
+    ``n_followers`` twins arrive — only the refcount-0 cache can carry the
+    prefix across that gap."""
+    import jax
+    from repro.configs import get_config, smoke_config
+    from repro.core.aqua_tensor import HOST
+    from repro.models import api
+    from repro.serving.engine import ServingEngine
+
+    cfg = smoke_config(get_config(arch))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    def serve(cache: bool) -> Dict:
+        rng = np.random.default_rng(12)
+        prefix = list(map(int, rng.integers(0, cfg.vocab_size, prefix_len)))
+        tails = [list(map(int, rng.integers(0, cfg.vocab_size, tail_len)))
+                 for _ in range(n_followers)]
+        eng = ServingEngine(cfg, params, max_running=2, max_seq=max_seq,
+                            scheduler="cfs", slice_tokens=3,
+                            offload_tier=HOST, step_tokens=16,
+                            prefix_cache=cache)
+        leader = eng.submit(prefix + tails[-1][:2], 6, arrival=0.0)
+        while not leader.done:           # leader fully retires first
+            eng.step()
+        followers = [eng.submit(prefix + t, 6, arrival=eng.metrics.sim_time)
+                     for t in tails]
+        while eng.waiting or eng.running:
+            eng.step()
+        m = eng.metrics
+        c = eng.kv.stats()["cache"]
+        ttfts = [m.ttft[f.rid] for f in followers]
+        return {
+            "followers": n_followers,
+            "cache_hits": c["hits"],
+            "cache_hit_tokens": c["hit_tokens"],
+            "cache_evictions": c["evictions"],
+            "cache_demotions": c["demotions"],
+            "prefill_chunks": m.prefills,
+            "follower_ttft_p50_s": _pct(ttfts, 0.50),
+            "follower_ttft_p99_s": _pct(ttfts, 0.99),
+            "step_time_p99_s": _pct(m.step_times, 0.99),
+            "sim_time_s": float(m.sim_time),
+        }
+
+    return {"cache_on": serve(True), "cache_off": serve(False)}
+
+
+def measure_simulator(n: int = 80, n_tenants: int = 6,
+                      gen=(40, 120)) -> Dict[str, Dict]:
+    from repro.configs import get_config
+    from repro.core.perfmodel import A100_NVLINK, ModelCost
+    from repro.core.simulator import ServingSimulator
+
+    cfg = get_config("aqua-codellama-34b")
+    mc = ModelCost.from_config(cfg)
+    wb = cfg.param_count() * 2
+
+    def run(cache: bool) -> Dict:
+        reqs = make_multi_tenant_requests(n, n_tenants=n_tenants, gen=gen)
+        total_prompt = sum(r.prompt_len for r in reqs)
+        # capacity for a handful of full contexts: pressure keeps the
+        # cache honest (it must yield, never block a real allocation)
+        cap = mc.context_bytes(3072 + 256) * 6.0
+        sim = ServingSimulator(A100_NVLINK, mc, weight_bytes=wb,
+                               kv_capacity_bytes=cap, scheduler="cfs",
+                               offload_tier="fabric", max_running=16,
+                               step_tokens=512, prefix_cache=cache)
+        res = sim.run(reqs)
+        # followers = every request after its tenant's first arrival
+        first = {}
+        for r in reqs:
+            first.setdefault(r.prefix_group, r.rid)
+        f_ttfts = [r.ttft - r.arrival for r in res.requests
+                   if r.ttft is not None and first[r.prefix_group] != r.rid]
+        computed = total_prompt - sim.adopted_tokens
+        return {
+            "requests": len(reqs),
+            "cache_hits": sim.cache_hits,
+            "cache_hit_rate": sim.cache_hits / len(reqs),
+            "cache_hit_tokens": sim.cache_hit_tokens,
+            "prompt_tokens_total": total_prompt,
+            "prefill_tokens_computed": computed,
+            "follower_ttft_p50_s": _pct(f_ttfts, 0.50),
+            "follower_ttft_p99_s": _pct(f_ttfts, 0.99),
+            "rct_p50_s": res.p50(res.rcts()),
+        }
+
+    return {"cache_on": run(True), "cache_off": run(False)}
+
+
+def measure() -> Dict:
+    eng = measure_engine()
+    sim = measure_simulator()
+    s_on, s_off = sim["cache_on"], sim["cache_off"]
+    e_on, e_off = eng["cache_on"], eng["cache_off"]
+    return {
+        "engine": eng,
+        "simulator_34b": sim,
+        "derived": {
+            "engine/cache_hit_rate":
+                e_on["cache_hits"] / max(e_on["followers"], 1),
+            "engine/prefill_chunk_savings_x":
+                e_off["prefill_chunks"] / max(e_on["prefill_chunks"], 1),
+            "engine/follower_ttft_p99_improvement_x":
+                e_off["follower_ttft_p99_s"]
+                / max(e_on["follower_ttft_p99_s"], 1e-12),
+            "sim/prefill_token_reduction_x":
+                s_off["prefill_tokens_computed"]
+                / max(s_on["prefill_tokens_computed"], 1),
+            "sim/follower_ttft_p99_improvement_x":
+                s_off["follower_ttft_p99_s"]
+                / max(s_on["follower_ttft_p99_s"], 1e-12),
+        },
+    }
+
+
+def run(m: Dict | None = None):
+    m = m or measure()
+    rows = []
+    for variant, vals in m["engine"].items():
+        for k, v in vals.items():
+            rows.append((f"prefix_cache/engine/{variant}/{k}", float(v), ""))
+    for variant, vals in m["simulator_34b"].items():
+        for k, v in vals.items():
+            rows.append((f"prefix_cache/sim/{variant}/{k}", float(v), ""))
+    for k, v in m["derived"].items():
+        rows.append((f"prefix_cache/{k}", float(v), "cache on vs off"))
+    return rows
+
+
+def main():
+    m = measure()
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_prefix_cache.json")
+    with open(os.path.abspath(out), "w") as f:
+        json.dump(m, f, indent=2, sort_keys=True)
+    print("name,value,derived")
+    for name, val, derived in run(m):
+        print(f"{name},{val:.6g},{derived}")
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

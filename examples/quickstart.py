@@ -48,6 +48,17 @@ def main():
           f"{sh['adopted_tokens']} prompt tokens adopted, "
           f"{sh['cow_copies']} copy-on-write clones")
     assert sh["prefix_hits"] == 5
+    # 3. every request above has finished — yet a NEW arrival with the same
+    # system prompt still skips its prefill: the radix prefix cache retained
+    # the refcount-0 pages (evicted only under real page pressure)
+    late = eng.submit(system
+                      + list(map(int, rng.integers(0, cfg.vocab_size, 4))), 6)
+    eng.run(500)
+    cache = eng.kv.stats()["cache"]
+    print(f"prefix cache: {cache['hits']} hit(s) after drain, "
+          f"{cache['hit_tokens']} prefill tokens revived for request "
+          f"{late.rid}")
+    assert late.done and cache["hits"] >= 1
     print("quickstart OK")
 
 

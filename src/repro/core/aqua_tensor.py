@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.errors import (LeaseRevokedError, PageLossError,
+from repro.core.errors import (AquaError, LeaseRevokedError, PageLossError,
                                TransferFaultError)
 from repro.core.perfmodel import (HardwareProfile, TPU_V5E,
                                   retry_backoff_time)
@@ -198,6 +198,26 @@ class AquaTensor:
         # against
         self.remote_capacity: Dict[str, int] = {}
         self.meter = meter or TransferMeter()
+        # CACHED pages: refcount 0 but still physically resident (a prefix
+        # cache retains them for future adoption). ``reclaim`` is an optional
+        # hook ``reclaim(tier, need) -> freed`` installed by the cache owner;
+        # it is consulted when a tier's free list runs dry so cached pages
+        # YIELD before any real allocation can fail — a cache-on run never
+        # raises a MemoryError a cache-off run would not hit.
+        self.reclaim = None
+        self._reclaiming = False
+
+    def _try_reclaim(self, tier: int, need: int) -> int:
+        """Ask the cache owner to evict/demote cached pages out of ``tier``.
+        Reentrancy-guarded: an eviction's own demotion ``_move`` must not
+        recurse into another reclaim."""
+        if self.reclaim is None or self._reclaiming:
+            return 0
+        self._reclaiming = True
+        try:
+            return int(self.reclaim(tier, need))
+        finally:
+            self._reclaiming = False
 
     # ------------------------------------------------------------------
     # lease management (driven by the coordinator)
@@ -322,6 +342,11 @@ class AquaTensor:
         """
         free_lp = np.nonzero(self.page_table[:, 0] == -1)[0]
         if len(free_lp) < n:
+            # cached pages occupy logical ids too: ask them to yield
+            # (tier -1 = "free outright, any tier") before failing
+            self._try_reclaim(-1, n - len(free_lp))
+            free_lp = np.nonzero(self.page_table[:, 0] == -1)[0]
+        if len(free_lp) < n:
             raise MemoryError(f"{self.name}: out of logical pages")
         lps = free_lp[:n]
         taken: List[int] = []
@@ -393,6 +418,62 @@ class AquaTensor:
             freed.append(int(lp))
         return freed
 
+    # ------------------------------------------------------------------
+    # CACHED state: refcount 0, still resident (global prefix cache)
+    # ------------------------------------------------------------------
+    def free_to_cache(self, lps: Sequence[int]) -> List[int]:
+        """Drop one reference per listed page but KEEP the physical slot of
+        pages whose count reaches zero — they enter the CACHED state
+        (refcount 0, page_table row still valid, payload intact) so a future
+        prefix adoption can ``revive`` them instead of recomputing prefill.
+        Returns the logical ids that just became cached. A LOST page cannot
+        be cached (its payload is gone): it is freed as usual."""
+        cached: List[int] = []
+        for lp in lps:
+            if self.page_refs[lp] > 1:
+                self.page_refs[lp] -= 1
+                continue
+            if self.page_table[lp, 0] == LOST:
+                self.page_table[lp] = (-1, -1, -1)
+                self.page_fill[lp] = 1.0
+                self.page_refs[lp] = 0
+                continue
+            self.page_refs[lp] = 0
+            cached.append(int(lp))
+        return cached
+
+    def revive(self, lps: Sequence[int]):
+        """Cache hit: take the first reference on CACHED pages (refcount
+        0 -> 1). Strict counterpart of :meth:`retain`, which refuses
+        refcount-0 pages — revive refuses anything NOT cached."""
+        lps = np.asarray(lps, np.int64)
+        bad = [int(l) for l in lps
+               if self.page_refs[l] != 0 or self.page_table[l, 0] == -1]
+        if bad:
+            raise ValueError(f"{self.name}: revive of non-cached pages {bad}")
+        self.page_refs[lps] = 1
+
+    def drop_cached(self, lps: Sequence[int]) -> List[int]:
+        """Evict CACHED pages: hand their physical slots back to the free
+        lists (LOST rows have no pool — just clear the row). Only legal on
+        refcount-0 resident pages; returns the ids actually dropped."""
+        dropped: List[int] = []
+        for lp in lps:
+            if self.page_refs[lp] != 0 or self.page_table[lp, 0] == -1:
+                raise ValueError(
+                    f"{self.name}: drop_cached of non-cached page {int(lp)}")
+            tier, slot, donor = self.page_table[lp]
+            if tier == LOCAL:
+                self._free_local.append(int(slot))
+            elif tier == HOST:
+                self._free_host.append(int(slot))
+            elif tier == REMOTE:
+                self._remote_free[self._donors[donor]].append(int(slot))
+            self.page_table[lp] = (-1, -1, -1)
+            self.page_fill[lp] = 1.0
+            dropped.append(int(lp))
+        return dropped
+
     def set_page_fill(self, lps: Sequence[int], frac):
         """Declare the valid fraction of each page payload (partial tails)."""
         self.page_fill[np.asarray(lps, np.int64)] = np.clip(frac, 0.0, 1.0)
@@ -401,14 +482,20 @@ class AquaTensor:
         order = {LOCAL: [LOCAL, REMOTE, HOST], REMOTE: [REMOTE, HOST, LOCAL],
                  HOST: [HOST, REMOTE, LOCAL]}[prefer]
         for tier in order:
-            if tier == LOCAL and self._free_local:
-                return LOCAL, self._free_local.pop(), -1
+            if tier == LOCAL:
+                if not self._free_local:
+                    self._try_reclaim(LOCAL, 1)
+                if self._free_local:
+                    return LOCAL, self._free_local.pop(), -1
             if tier == REMOTE:
                 for di, d in enumerate(self._donors):
                     if d in self._remote_free and self._remote_free[d]:
                         return REMOTE, self._remote_free[d].pop(), di
-            if tier == HOST and self._free_host:
-                return HOST, self._free_host.pop(), -1
+            if tier == HOST:
+                if not self._free_host:
+                    self._try_reclaim(HOST, 1)
+                if self._free_host:
+                    return HOST, self._free_host.pop(), -1
         raise MemoryError(f"{self.name}: all tiers full")
 
     # ------------------------------------------------------------------
@@ -655,21 +742,20 @@ class AquaTensor:
             groups.setdefault((int(tier), int(donor)), []).append(int(lp))
         for (src_tier, src_donor), group in groups.items():
             slots = self.page_table[group, 1].astype(np.int32)
-            # 1) coalescing gather into a contiguous staging buffer
+            # 1) coalescing gather into a contiguous staging buffer. The
+            # source slots are NOT freed yet: destination acquisition below
+            # can fail (tier exhausted even after cache reclaim), and the
+            # group's rows must still be valid then — freeing first left
+            # pages mapped to free-listed slots, a double-free on their
+            # eventual release.
             if src_tier == LOCAL:
                 staging = kv_ops.gather_pages(self.local_pool, jnp.asarray(slots))
-                for s in slots:
-                    self._free_local.append(int(s))
             elif src_tier == REMOTE:
                 donor_name = self._donors[src_donor]
                 staging = self._remote_gather(donor_name, slots)
-                for s in slots:
-                    self._remote_free[donor_name].append(int(s))
             else:
                 self._leg_guard(HOST, None, len(slots))
                 staging = jnp.asarray(self.host_pool[slots])
-                for s in slots:
-                    self._free_host.append(int(s))
             # valid payload only: a partial tail page moves (and is priced
             # as) its live rows, not the whole page buffer
             fills = self.page_fill[group] * self.page_bytes   # per-page bytes
@@ -691,54 +777,89 @@ class AquaTensor:
                                   hi - lo,
                                   group=(src_tier, src_name, dst, dst_name))
 
-            # 3) scatter into destination slots (metering per destination
-            # donor group)
+            # 3) acquire destination slots and scatter (metering per
+            # destination donor group). A failure mid-placement (tier
+            # exhausted past reclaim, or a transfer leg dying) rolls every
+            # acquired slot back: the group's source rows stay
+            # authoritative, so the caller sees the exception against an
+            # unchanged page table and free lists.
             new_rows = []
-            if dst_tier == LOCAL:
-                dst_slots = [self._pop_free(self._free_local, LOCAL, len(group))
-                             for _ in group]
-                self.local_pool = kv_ops.scatter_pages(
-                    self.local_pool, staging, jnp.asarray(dst_slots, jnp.int32))
-                new_rows = [(LOCAL, s, -1) for s in dst_slots]
-                meter(0, len(group), LOCAL, None)
-            elif dst_tier == REMOTE:
-                placed = 0
-                for di, d in enumerate(self._donors):
-                    if d == exclude_donor:
-                        continue
-                    free = self._remote_free.get(d, [])
-                    take = min(len(free), len(group) - placed)
-                    if take <= 0:
-                        continue
-                    dst_slots = [free.pop() for _ in range(take)]
-                    self._remote_scatter(d, dst_slots,
-                                         staging[placed:placed + take])
-                    new_rows += [(REMOTE, s, di) for s in dst_slots]
-                    meter(placed, placed + take, REMOTE, d)
-                    placed += take
-                if placed < len(group):          # remote full -> host fallback
-                    rest = staging[placed:]
-                    need = len(group) - placed
-                    self._leg_guard(HOST, None, need)
-                    dst_slots = [self._pop_free(self._free_host, HOST, need)
-                                 for _ in range(need)]
-                    self.host_pool[np.asarray(dst_slots)] = np.asarray(rest)
-                    new_rows += [(HOST, s, -1) for s in dst_slots]
-                    meter(placed, len(group), HOST, None)
+            popped: List[Tuple[List[int], int]] = []
+            try:
+                if dst_tier == LOCAL:
+                    dst_slots = [self._pop_free(self._free_local, LOCAL,
+                                                len(group))
+                                 for _ in group]
+                    popped += [(self._free_local, s) for s in dst_slots]
+                    self.local_pool = kv_ops.scatter_pages(
+                        self.local_pool, staging,
+                        jnp.asarray(dst_slots, jnp.int32))
+                    new_rows = [(LOCAL, s, -1) for s in dst_slots]
+                    meter(0, len(group), LOCAL, None)
+                elif dst_tier == REMOTE:
+                    placed = 0
+                    for di, d in enumerate(self._donors):
+                        if d == exclude_donor:
+                            continue
+                        free = self._remote_free.get(d, [])
+                        take = min(len(free), len(group) - placed)
+                        if take <= 0:
+                            continue
+                        dst_slots = [free.pop() for _ in range(take)]
+                        popped += [(free, s) for s in dst_slots]
+                        self._remote_scatter(d, dst_slots,
+                                             staging[placed:placed + take])
+                        new_rows += [(REMOTE, s, di) for s in dst_slots]
+                        meter(placed, placed + take, REMOTE, d)
+                        placed += take
+                    if placed < len(group):      # remote full -> host fallback
+                        rest = staging[placed:]
+                        need = len(group) - placed
+                        self._leg_guard(HOST, None, need)
+                        dst_slots = [self._pop_free(self._free_host, HOST,
+                                                    need)
+                                     for _ in range(need)]
+                        popped += [(self._free_host, s) for s in dst_slots]
+                        self.host_pool[np.asarray(dst_slots)] = np.asarray(rest)
+                        new_rows += [(HOST, s, -1) for s in dst_slots]
+                        meter(placed, len(group), HOST, None)
+                else:
+                    self._leg_guard(HOST, None, len(group))
+                    dst_slots = [self._pop_free(self._free_host, HOST,
+                                                len(group))
+                                 for _ in group]
+                    popped += [(self._free_host, s) for s in dst_slots]
+                    self.host_pool[np.asarray(dst_slots)] = np.asarray(staging)
+                    new_rows = [(HOST, s, -1) for s in dst_slots]
+                    meter(0, len(group), HOST, None)
+            except (MemoryError, AquaError):
+                # every intentional failure class a placement can hit:
+                # _pop_free exhaustion past reclaim (MemoryError) and
+                # _leg_guard transfer faults / lease revocations (AquaError)
+                for free_list, s in popped:
+                    free_list.append(s)
+                raise
+            # 4) the whole group landed: only now do the source slots
+            # return to their free lists and the rows repoint
+            if src_tier == LOCAL:
+                for s in slots:
+                    self._free_local.append(int(s))
+            elif src_tier == REMOTE:
+                for s in slots:
+                    self._remote_free[src_name].append(int(s))
             else:
-                self._leg_guard(HOST, None, len(group))
-                dst_slots = [self._pop_free(self._free_host, HOST, len(group))
-                             for _ in group]
-                self.host_pool[np.asarray(dst_slots)] = np.asarray(staging)
-                new_rows = [(HOST, s, -1) for s in dst_slots]
-                meter(0, len(group), HOST, None)
+                for s in slots:
+                    self._free_host.append(int(s))
             for lp, row in zip(group, new_rows):
                 self.page_table[lp] = row
 
     def _pop_free(self, free_list: List[int], tier: int, need: int) -> int:
         """Take one destination slot, or fail loudly: a bare IndexError from
         ``list.pop`` told the operator nothing about which tensor/tier ran dry
-        (e.g. ``evict_remote`` onto an already-full host pool)."""
+        (e.g. ``evict_remote`` onto an already-full host pool). Before
+        failing, cached (refcount-0) pages in the tier are asked to yield."""
+        if not free_list:
+            self._try_reclaim(tier, need)
         if not free_list:
             raise MemoryError(
                 f"{self.name}: {TIER_NAMES[tier]} tier exhausted while "

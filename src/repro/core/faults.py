@@ -199,13 +199,18 @@ class InvariantAuditor:
           1. free lists and page-table occupancy PARTITION every tier's
              physical slots (no slot leaked, none double-booked);
           2. every page's refcount equals the number of block tables
-             referencing it (+1 for the plane's scratch page);
+             referencing it (+1 for the plane's scratch page), and every
+             refcount-0-but-resident page is a legal CACHED page: caching
+             enabled, indexed in exactly one radix block, never pinned,
+             never LOST;
           3. LOCAL pin counts equal the number of ACTIVE referencers, and
              every pinned page is LOCAL;
           4. no block table references a LOST-tier page (recovery must
              re-queue every victim before the audit);
-          5. prefix-index entries point at allocated pages and agree with
-             the reverse map.
+          5. the radix tree is well-formed (children keyed by their first
+             block, page-aligned edges, parent links intact), every node
+             page is allocated, each page appears in exactly one block,
+             and the reverse map agrees in both directions.
         Runtime-wide: mesh collectives vs priced fabric messages move in
         lockstep (every priced message is backed by >= 1 physical
         collective; retries are priced but never issue one). With
@@ -279,6 +284,20 @@ class InvariantAuditor:
                 elif want != have:
                     bad.append(f"{name}: page {lp} refcount {have} != "
                                f"{want} block-table referencer(s)")
+                elif want == 0:
+                    # resident with no referencer: legal only as a CACHED
+                    # page owned by the radix index
+                    if not getattr(runtime, "caching", False):
+                        bad.append(f"{name}: page {lp} resident at "
+                                   "refcount 0 but caching is off (leak)")
+                    elif (name, lp) not in runtime._lp_node:
+                        bad.append(f"{name}: cached page {lp} not in the "
+                                   "radix index (leak)")
+                    if plane.pin.get(lp, 0):
+                        bad.append(f"{name}: cached page {lp} is pinned")
+                    if pt[lp, 0] == LOST:
+                        bad.append(f"{name}: cached page {lp} sits in the "
+                                   "LOST tier (donor death must drop it)")
             for lp, c in plane.pin.items():
                 want = active_refs.get(int(lp), 0)
                 if c != want:
@@ -300,23 +319,46 @@ class InvariantAuditor:
                 bad.append(f"{name}: block tables still reference LOST "
                            f"pages {sorted(lost_ref)[:8]}")
 
-        # -- 5. prefix index <-> reverse map <-> live pages ----------------
-        for h, entry in runtime._index.items():
-            for name, lps in entry.items():
-                if name.startswith("_"):
-                    continue
-                aq = runtime.planes[name].aqua
-                for lp in lps:
-                    if aq.page_table[int(lp), 0] == -1:
-                        bad.append(f"prefix index {h} points at freed "
-                                   f"{name} page {int(lp)}")
-                    if runtime._lp_entry.get((name, int(lp))) != h:
-                        bad.append(f"prefix reverse map disagrees for "
-                                   f"{name} page {int(lp)}")
-        for (name, lp), h in runtime._lp_entry.items():
-            if h not in runtime._index:
-                bad.append(f"reverse map entry ({name}, {lp}) -> dropped "
-                           "index hash")
+        # -- 5. radix tree <-> reverse map <-> live pages ------------------
+        seen_pages: Dict = {}
+        for seed, root in runtime._roots.items():
+            stack = list(root.children.items())
+            while stack:
+                key, node = stack.pop()
+                if not node.blocks or node.blocks[0] != key:
+                    bad.append(f"radix child of seed {seed!r} keyed by a "
+                               "block that is not its first block")
+                if len(node.blocks) != len(node.pages):
+                    bad.append(f"radix node has {len(node.blocks)} blocks "
+                               f"but {len(node.pages)} page sets")
+                for bt in node.blocks:
+                    if len(bt) != runtime.page_tokens:
+                        bad.append("radix edge block is not page-aligned "
+                                   f"({len(bt)} tokens)")
+                for bi, pagedict in enumerate(node.pages):
+                    for name, lps in pagedict.items():
+                        aq = runtime.planes[name].aqua
+                        for lp in lps:
+                            lp = int(lp)
+                            if aq.page_table[lp, 0] == -1:
+                                bad.append(f"radix node points at freed "
+                                           f"{name} page {lp}")
+                            k = (name, lp)
+                            if k in seen_pages:
+                                bad.append(f"{name} page {lp} appears in "
+                                           "two radix blocks")
+                            seen_pages[k] = (node, bi)
+                            if runtime._lp_node.get(k) != (node, bi):
+                                bad.append("radix reverse map disagrees "
+                                           f"for {name} page {lp}")
+                for ckey, child in node.children.items():
+                    if child.parent is not node:
+                        bad.append("radix child parent link broken")
+                    stack.append((ckey, child))
+        for k in runtime._lp_node:
+            if k not in seen_pages:
+                bad.append(f"reverse map entry {k} -> unreachable radix "
+                           "node")
 
         # -- mesh collectives vs priced fabric messages --------------------
         mesh = getattr(runtime, "mesh", None)

@@ -305,6 +305,28 @@ def page_flip_time(hw: HardwareProfile, payload_bytes: float, *,
     return link.time(payload_bytes, n_messages=max(1, n_groups))
 
 
+def prefix_hit_saving(hw: HardwareProfile, model: ModelCost, *,
+                      hit_tokens: int, tier: str = "fabric",
+                      n_groups: int = 1) -> Tuple[float, float]:
+    """Analytic ledger of ONE prefix-cache hit of ``hit_tokens`` tokens.
+
+    Returns ``(prefill_time_saved, restore_time_paid)``: the hit skips the
+    prefix's prefill FLOPs entirely, and pays instead one coalesced
+    page-table tier flip bringing the cached prefix pages back LOCAL
+    (``tier`` is where the cache's cold pages were demoted to — the fabric
+    donor slabs or host DRAM; zero bytes when they are still LOCAL). A hit
+    is a net win whenever saved > paid — for any non-trivial prefix the
+    prefill side is compute over the whole model while the restore side is
+    one link message of the prefix's KV bytes, so the crossover sits at a
+    handful of tokens. The benchmark harness uses this to sanity-check the
+    measured TTFT deltas in ``benchmarks/prefix_cache.py``.
+    """
+    saved = model.prefill_time(hw, int(hit_tokens))
+    paid = page_flip_time(hw, model.kv_bytes(float(hit_tokens)),
+                          tier=tier, n_groups=n_groups)
+    return saved, paid
+
+
 # ---------------------------------------------------------------------------
 # Clock calibration: fit the alpha/beta link model to MEASURED transfers
 # ---------------------------------------------------------------------------

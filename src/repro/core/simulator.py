@@ -82,6 +82,7 @@ class ServingSimulator:
                  fused_step: bool = True,
                  spec_chunk_ahead: bool = False,
                  coalesce_planes: bool = True,
+                 prefix_cache: bool = True,
                  lora_cache_bytes: float = 0.0,
                  lora_num_adapters: int = 200,
                  faults=None):
@@ -117,6 +118,17 @@ class ServingSimulator:
         # every plane into one message per (tier, donor); uncoalesced it
         # pays ModelCost.n_planes messages (the pre-fusion runtime).
         self.coalesce_planes = coalesce_planes
+        # prefix_cache: the global radix prefix cache — a FINISHED group
+        # member's written prefix stays adoptable (the runtime retains
+        # refcount-0 pages until page pressure evicts them), so a later
+        # arrival skips those prefill tokens and pays only the restore
+        # bytes of the cached prefix on its first page-in. Off, adoption
+        # requires a LIVE member (pure CoW sharing, the pre-cache model).
+        self.prefix_cache = bool(prefix_cache)
+        self.cache_hits = 0              # adoptions satisfied only by a
+        self.cache_hit_tokens = 0        # finished member's cached pages
+        self.adopted_tokens = 0          # prefill tokens skipped by ANY
+        #                                  adoption (live-shared or cached)
         # 'paged': decode KV lives on pages; a context switch is a page-table
         # tier flip (no repack gather — matches the paged ServingEngine).
         # 'blob': the seed path — gather every leaf into a staging blob first.
@@ -213,18 +225,30 @@ class ServingSimulator:
             while pending and pending[0].arrival <= t:
                 r = pending.pop(0)
                 skip = min(r.shared_prefix_len, r.prompt_len - 1)
-                # adoptable only from a member that STILL HOLDS pages
-                # covering the skipped prefix (unfinished — the engine drops
-                # index entries when the last sharer frees its pages) and
-                # that has actually written that much of it
+                # adoptable from a member that STILL HOLDS pages covering
+                # the skipped prefix (live CoW sharing), or — with the
+                # prefix cache on — from a FINISHED member whose refcount-0
+                # pages the runtime retained (a cache hit: the prefill
+                # tokens are skipped, only restore bytes are paid below)
                 if (self.prefix_sharing_ok and r.prefix_group is not None
-                        and skip > 0
-                        and any(o is not r
-                                and o.prefix_group == r.prefix_group
-                                and o.finish is None
-                                and o.prefill_pos >= skip
-                                for o in requests)):
-                    r.prefill_pos = skip
+                        and skip > 0):
+                    live = any(o is not r
+                               and o.prefix_group == r.prefix_group
+                               and o.finish is None
+                               and o.prefill_pos >= skip
+                               for o in requests)
+                    cached = (self.prefix_cache
+                              and any(o is not r
+                                      and o.prefix_group == r.prefix_group
+                                      and o.finish is not None
+                                      and o.prefill_pos >= skip
+                                      for o in requests))
+                    if live or cached:
+                        r.prefill_pos = skip
+                        self.adopted_tokens += skip
+                        if not live:
+                            self.cache_hits += 1
+                            self.cache_hit_tokens += skip
                 waiting.append(r)
             if not running and not waiting:
                 t = pending[0].arrival
@@ -251,6 +275,17 @@ class ServingSimulator:
                             <= self.kv_cap \
                             and len(running) < self.max_running:
                         waiting.remove(r)
+                        # a non-resident written context pages in on
+                        # admission: a recovered request's prefix, or an
+                        # adopted (cached) prefix — pinned to zero bytes
+                        # when a live group member already holds it LOCAL
+                        if not r.resident and (r.prefilled
+                                               or r.prefill_pos > 0):
+                            pinned = (r.prefix_group is not None
+                                      and r.prefix_group
+                                      in resident_groups())
+                            pagein_time += self._switch_time(
+                                r, direction="in", shared_pinned=pinned)
                         r.resident = True
                         running.append(r)
                 ntok = 1

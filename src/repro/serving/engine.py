@@ -135,6 +135,7 @@ class ServingEngine:
                  kv_local_pages: Optional[int] = None,
                  kv_host_pages: int = 8192,
                  prefix_sharing: bool = True,
+                 prefix_cache: bool = True,
                  paged_impl: str = "pallas",
                  step_tokens: Optional[int] = None,
                  prefetch: bool = True,
@@ -157,6 +158,9 @@ class ServingEngine:
                 default one is built from the ``kv_*`` sizing knobs.
             prefix_sharing: enable copy-on-write prompt-prefix sharing
                 (effective only on all-token-plane families).
+            prefix_cache: retain refcount-0 prefix pages in the radix
+                index as a global prefix cache (evicted cold-first under
+                page pressure); effective only with ``prefix_sharing``.
             paged_impl: ``"pallas"`` kernels (interpret on CPU) or the
                 ``"xla"`` jnp oracles.
             step_tokens: per-step token budget for chunked prefill
@@ -222,7 +226,7 @@ class ServingEngine:
             cfg, max_seq=max_seq, page_tokens=kv_page_tokens,
             local_pages=kv_local_pages, host_pages=kv_host_pages,
             max_running=max_running, prefix_sharing=prefix_sharing,
-            mesh=mesh)
+            prefix_cache=prefix_cache, mesh=mesh)
         self.pager = self.kv
         # the scheduler plans in PAGES (a per-plane cost vector). CFS
         # revisits the run set every slice, so it budgets one slice of
@@ -247,9 +251,15 @@ class ServingEngine:
 
         self.slice_tokens = slice_tokens
         self._free_slots = list(range(max_running))[::-1]
+        # prefix-aware co-scheduling: requests adopting the same root-edge
+        # radix node cluster behind their group's earliest member within a
+        # vruntime class, so a shared prefix parks/restores once per plan
+        prefix_group = ((lambda r: self.kv.prefix_group_of(r.rid))
+                        if self.kv.sharing else None)
         self.sched = (CFSScheduler(max_running, slice_tokens,
                                    page_cost=page_cost,
-                                   page_budget=page_budget)
+                                   page_budget=page_budget,
+                                   prefix_group=prefix_group)
                       if scheduler == "cfs"
                       else FCFSScheduler(max_running, page_cost=page_cost,
                                          page_budget=page_budget))

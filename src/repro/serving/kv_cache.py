@@ -31,19 +31,33 @@ blob-store shim this replaces is deleted; there is exactly one way a
 request's state moves between tiers.
 
 PREFIX SHARING (copy-on-write): the same by-reference insight applies
-*within* the resident tier. A prefix index (hash chain over page-aligned
-prompt token blocks) lets ``adopt_prefix`` map a new request's block tables
-onto the physical pages another request already wrote for the same prompt
-prefix — the sharer skips those chunks in the chunked-prefill pipeline and
-its first chunk starts past the shared prefix. Shared pages are refcounted
-in the AquaTensor (``page_refs``), pinned LOCAL while any referencer is
-active, moved between tiers ONCE however many block tables point at them,
-and copied on write (``make_writable``) the moment a sharer must write into
-one (recomputing the final prompt position of a fully-matched prompt, or a
-decode append landing in a shared tail). Sharing is enabled only when every
-plane is ``shareable`` (token planes: position-addressed, immutable once
-written); families with recurrent state planes opt out — a state page
-summarizes the whole prefix and is rewritten every step.
+*within* the resident tier. A RADIX TREE over page-aligned prompt token
+blocks lets ``adopt_prefix`` map a new request's block tables onto the
+physical pages another request already wrote for the longest common prefix
+of its prompt — mid-prompt divergence splits a tree edge at the block
+boundary, so two prompts sharing 40 of 60 blocks share 40 physical pages.
+Children are keyed by their first token block verbatim (a dict lookup is a
+hash PLUS an exact tuple compare), so a hash collision is a miss, never
+foreign pages. Shared pages are refcounted in the AquaTensor
+(``page_refs``), pinned LOCAL while any referencer is active, moved between
+tiers ONCE however many block tables point at them, and copied on write
+(``make_writable``) the moment a sharer must write into one. Sharing is
+enabled only when every plane is ``shareable`` (token planes:
+position-addressed, immutable once written); families with recurrent state
+planes opt out — a state page summarizes the whole prefix and is rewritten
+every step.
+
+GLOBAL PREFIX CACHE (retain past refcount 0): with ``prefix_cache`` on,
+tree-indexed pages OUTLIVE their last referencer in a CACHED state
+(refcount 0, physical slot kept, payload intact, any tier) so the next
+request with the same prompt prefix revives them instead of recomputing
+prefill. Cached pages count against the same pools as live pages but YIELD
+on demand: every plane's AquaTensor carries a ``reclaim`` hook that evicts
+the coldest cached leaf blocks (LRU) with cold-first demotion
+LOCAL -> REMOTE -> HOST -> free before any tier-exhausted MemoryError can
+fire — a cache-on run never fails an allocation a cache-off run would have
+served. Donor death drops (never leaks) cached pages on the dead slab and
+prunes their radix coverage.
 """
 from __future__ import annotations
 
@@ -55,7 +69,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.aqua_tensor import (AquaTensor, LOCAL, REMOTE, TransferMeter)
+from repro.core.aqua_tensor import (AquaTensor, HOST, LOCAL, REMOTE,
+                                    TransferMeter)
 from repro.core.errors import LeaseRevokedError
 
 
@@ -85,20 +100,37 @@ class _Plane:
                            for lp in row], np.int64)
 
 
-def _hash_blocks(tokens: Sequence[int], page_tokens: int,
-                 seed: object = None) -> List[int]:
-    """Chain-hash a prompt's FULL page-aligned token blocks: entry ``i``
-    identifies the whole prefix ``tokens[:(i+1)*page_tokens]`` (each link
-    hashes the previous link plus its own block), so a single dict lookup per
-    page walks the longest shared prefix. ``seed`` partitions the key space
-    (e.g. by LoRA adapter — the same tokens under a different adapter
-    produce different K/V and must never alias)."""
-    out: List[int] = []
-    h = hash(("aqua-prefix", seed))
-    for i in range(len(tokens) // page_tokens):
-        h = hash((h, tuple(tokens[i * page_tokens:(i + 1) * page_tokens])))
-        out.append(h)
-    return out
+def _token_blocks(tokens: Sequence[int], page_tokens: int
+                  ) -> List[Tuple[int, ...]]:
+    """A prompt's FULL page-aligned token blocks (the partial tail block is
+    never indexed — only completely written pages are shareable)."""
+    return [tuple(int(t) for t in tokens[i * page_tokens:(i + 1) * page_tokens])
+            for i in range(len(tokens) // page_tokens)]
+
+
+class _RadixNode:
+    """One edge of the prefix radix tree: a run of page-aligned token blocks
+    plus the physical pages backing each block.
+
+    ``blocks[i]`` is the i-th token block of the edge verbatim and
+    ``pages[i]`` maps plane name -> (n_layers,) logical page ids holding its
+    context. Children are keyed by their OWN first block, so descending is a
+    dict lookup whose tuple-equality compare IS the exact-token
+    verification: a hash collision falls through ``==`` and reads as a miss,
+    never as foreign pages. ``last_use`` is the runtime's LRU clock tick of
+    the newest adoption/registration through this node — eviction takes the
+    coldest cached leaf block first. One root per index seed (lora_id):
+    adapters never alias even for identical token streams."""
+    __slots__ = ("blocks", "pages", "children", "parent", "last_use")
+
+    def __init__(self, blocks: Optional[List[Tuple[int, ...]]] = None,
+                 pages: Optional[List[Dict[str, np.ndarray]]] = None,
+                 parent: Optional["_RadixNode"] = None):
+        self.blocks: List[Tuple[int, ...]] = blocks if blocks is not None else []
+        self.pages: List[Dict[str, np.ndarray]] = pages if pages is not None else []
+        self.children: Dict[Tuple[int, ...], "_RadixNode"] = {}
+        self.parent: Optional["_RadixNode"] = parent
+        self.last_use: int = 0
 
 
 class PagedStateRuntime:
@@ -108,7 +140,8 @@ class PagedStateRuntime:
                  page_tokens: int = 8, local_pages: Optional[int] = None,
                  host_pages: int = 8192, n_logical: int = 16384,
                  max_running: int = 4, meter: Optional[TransferMeter] = None,
-                 prefix_sharing: bool = True, mesh=None):
+                 prefix_sharing: bool = True, prefix_cache: bool = True,
+                 mesh=None):
         """Build one AquaTensor pool per page plane of ``cfg``'s family.
 
         Args:
@@ -125,6 +158,9 @@ class PagedStateRuntime:
             meter: shared ``TransferMeter``; a fresh one by default.
             prefix_sharing: enable the copy-on-write prefix index. Forced
                 off when any plane is not ``shareable`` (recurrent state).
+            prefix_cache: retain tree-indexed pages past refcount 0 in the
+                CACHED state (global prefix cache) instead of freeing them
+                with their last referencer. Effective only with sharing on.
             mesh: optional ``MeshTierDomain`` — every plane's REMOTE pools
                 become real peer-device slabs and remote transfer legs
                 become collectives; None keeps the single-device backend.
@@ -155,15 +191,21 @@ class PagedStateRuntime:
         # skip its state recurrence
         self.sharing = bool(prefix_sharing) and all(
             spec.get("shareable", False) for spec in layout.values())
-        # prefix index: chain hash -> {plane: (n_layers,) logical page ids,
-        # "_prefix": the exact token prefix, "_seed": the hash seed}. The
-        # stored prefix is compared verbatim on every match — a chain-hash
-        # collision can never alias one prompt's KV into another's block
-        # tables. Entries are backed by live requests' refcounts (no owner
-        # of their own) and dropped the moment their backing pages are freed.
-        self._index: Dict[int, Dict[str, object]] = {}
-        self._lp_entry: Dict[Tuple[str, int], int] = {}
-        self._req_hashes: Dict[int, List[int]] = {}
+        # the prefix cache retains tree-indexed pages past refcount 0; it
+        # only makes sense on top of the sharing index
+        self.caching = self.sharing and bool(prefix_cache)
+        # prefix RADIX TREE: one root per index seed (lora_id partitions the
+        # key space — identical tokens under different adapters never
+        # alias). Each node edge is a run of page-aligned token blocks with
+        # the physical pages backing them; ``_lp_node`` is the reverse map
+        # (plane, logical page) -> (node, block index) so release/eviction/
+        # donor loss find a page's coverage in O(1). With caching ON the
+        # tree OWNS refcount-0 pages (CACHED state); with caching OFF nodes
+        # are backed purely by live requests' refcounts and pruned the
+        # moment a backing page is freed.
+        self._roots: Dict[object, _RadixNode] = {}
+        self._lp_node: Dict[Tuple[str, int], Tuple[_RadixNode, int]] = {}
+        self._req_blocks: Dict[int, List[Tuple[int, ...]]] = {}
         self._req_tokens: Dict[int, Tuple[int, ...]] = {}
         self._req_seed: Dict[int, object] = {}
         self._req_registered: Dict[int, int] = {}
@@ -171,6 +213,15 @@ class PagedStateRuntime:
         self.prefix_hits = 0
         self.adopted_tokens = 0
         self.cow_copies = 0
+        # cache counters: a HIT is an adoption that revived at least one
+        # refcount-0 block (pure sharing with a live sharer is not a cache
+        # hit); evictions/demotions count whole blocks
+        self.cache_hits = 0
+        self.cache_hit_tokens = 0
+        self.cache_evictions = 0
+        self.cache_demotions = 0
+        self._clock = 0
+        self._evicting = False
         for name, spec in layout.items():
             n_sub = len(spec["positions"])
             n_layers = self.G * n_sub
@@ -201,6 +252,11 @@ class PagedStateRuntime:
             # writes stay in-bounds
             plane.scratch_lp = int(aqua.allocate(1, prefer=LOCAL)[0])
             self.planes[name] = plane
+            if self.caching:
+                # cached pages yield before any allocation in this plane can
+                # fail: the tensor consults this hook when a tier runs dry
+                aqua.reclaim = (lambda tier, need, _n=name:
+                                self._cache_reclaim(_n, tier, need))
 
     # -- geometry ---------------------------------------------------------
     def pages_for(self, n_tokens: int) -> int:
@@ -363,11 +419,14 @@ class PagedStateRuntime:
             raise
 
     def release(self, rid: int):
-        """Drop the request's references: pages it shares with a live
-        request survive (the sharer keeps reading them — they are never
-        zeroed or reused while referenced); exclusively-owned pages are
-        freed, and any prefix-index entries they backed are dropped so a
-        recycled logical id can never serve a stale prefix match."""
+        """Drop the request's references. Pages shared with a live request
+        survive (the sharer keeps reading them). Tree-indexed pages whose
+        LAST reference this drops enter the CACHED state when caching is on
+        (refcount 0, slot kept, payload intact — the global prefix cache
+        retains them for future adoption) and are freed-with-pruning when it
+        is off, so a recycled logical id can never serve a stale prefix
+        match. Unindexed pages (decode tails, diverged suffixes) free as
+        always."""
         for plane in self.planes.values():
             if rid not in plane.pages:
                 continue
@@ -375,45 +434,265 @@ class PagedStateRuntime:
             if rid in self._active:
                 for lp in lps:
                     self._unpin(plane, int(lp))
-            for lp in plane.aqua.free(lps):
-                self._drop_index_entry(plane.name, lp)
+            indexed = [int(lp) for lp in lps
+                       if (plane.name, int(lp)) in self._lp_node]
+            plain = [int(lp) for lp in lps
+                     if (plane.name, int(lp)) not in self._lp_node]
+            plane.aqua.free(plain)
+            if self.caching:
+                plane.aqua.free_to_cache(indexed)
+                # a LOST page cannot be cached — free_to_cache freed it;
+                # prune the dead coverage so no arrival adopts it
+                for lp in indexed:
+                    if plane.aqua.page_table[lp, 0] == -1:
+                        self._drop_tree_page(plane.name, lp)
+            else:
+                for lp in plane.aqua.free(indexed):
+                    self._drop_tree_page(plane.name, lp)
             del plane.pages[rid]
         self._active.discard(rid)
-        self._req_hashes.pop(rid, None)
+        self._req_blocks.pop(rid, None)
         self._req_tokens.pop(rid, None)
         self._req_seed.pop(rid, None)
         self._req_registered.pop(rid, None)
 
-    def _drop_index_entry(self, plane_name: str, lp: int):
-        h = self._lp_entry.pop((plane_name, int(lp)), None)
-        if h is None:
-            return
-        entry = self._index.pop(h, None)
-        if entry:
-            for name, lps in entry.items():
-                if name.startswith("_"):
-                    continue
-                for e in lps:
-                    self._lp_entry.pop((name, int(e)), None)
+    # -- radix-tree plumbing ----------------------------------------------
+    def _radix_walk(self, seed: object, blocks: List[Tuple[int, ...]]
+                    ) -> List[Tuple[_RadixNode, int]]:
+        """Longest-common-prefix match: descend the seed's tree comparing
+        token blocks verbatim; returns one (node, block index) per matched
+        block. Divergence mid-edge stops at the last matched block boundary
+        — the caller reuses exactly the common prefix."""
+        out: List[Tuple[_RadixNode, int]] = []
+        node = self._roots.get(seed)
+        if node is None:
+            return out
+        i = 0
+        while i < len(blocks):
+            child = node.children.get(blocks[i])
+            if child is None:
+                break
+            j = 0
+            while (j < len(child.blocks) and i < len(blocks)
+                   and child.blocks[j] == blocks[i]):
+                out.append((child, j))
+                i += 1
+                j += 1
+            if j < len(child.blocks):
+                break                      # diverged mid-edge
+            node = child
+        return out
+
+    def _split_node(self, node: _RadixNode, at: int):
+        """Split an edge at block boundary ``at``: the node keeps blocks
+        [:at], a new child carries blocks [at:] with the pages, children and
+        LRU stamp of the tail — the structural move behind mid-prompt
+        divergence reuse."""
+        tail = _RadixNode(blocks=node.blocks[at:], pages=node.pages[at:],
+                          parent=node)
+        tail.children = node.children
+        tail.last_use = node.last_use
+        for c in tail.children.values():
+            c.parent = tail
+        for bi, pagedict in enumerate(tail.pages):
+            for name, lps in pagedict.items():
+                for lp in lps:
+                    self._lp_node[(name, int(lp))] = (tail, bi)
+        node.blocks = node.blocks[:at]
+        node.pages = node.pages[:at]
+        node.children = {tail.blocks[0]: tail}
+
+    def _radix_insert(self, seed: object, blocks: List[Tuple[int, ...]],
+                      page_dicts: List[Dict[str, np.ndarray]]):
+        """Publish ``blocks`` (with their backing pages) into the seed's
+        tree. Blocks already present are skipped (a concurrent twin won the
+        publication race — its pages stay canonical); a mid-edge divergence
+        splits the edge; the unmatched suffix lands as one new node."""
+        root = self._roots.setdefault(seed, _RadixNode())
+        node, i = root, 0
+        while i < len(blocks):
+            child = node.children.get(blocks[i])
+            if child is None:
+                new = _RadixNode(blocks=list(blocks[i:]),
+                                 pages=list(page_dicts[i:]), parent=node)
+                new.last_use = self._clock
+                node.children[new.blocks[0]] = new
+                for bi, pagedict in enumerate(new.pages):
+                    for name, lps in pagedict.items():
+                        for lp in lps:
+                            self._lp_node[(name, int(lp))] = (new, bi)
+                return
+            j = 0
+            while (j < len(child.blocks) and i < len(blocks)
+                   and child.blocks[j] == blocks[i]):
+                i += 1
+                j += 1
+            child.last_use = max(child.last_use, self._clock)
+            if j == len(child.blocks):
+                node = child               # whole edge matched: descend
+                continue
+            if i == len(blocks):
+                return                     # prompt is a prefix of the edge
+            self._split_node(child, j)     # diverged mid-edge
+            node = child
+
+    def _prune_from(self, node: _RadixNode, bi: int):
+        """Remove blocks [bi:] of ``node`` and its ENTIRE subtree from the
+        index (every deeper prefix contains the removed block). CACHED
+        pages under the cut are dropped back to their free lists — never
+        leaked; still-referenced pages are merely un-indexed (their owners
+        free them at release). An emptied node unlinks from its parent."""
+        key = node.blocks[0] if node.blocks else None
+        for child in list(node.children.values()):
+            self._prune_from(child, 0)
+        node.children.clear()
+        for idx in range(bi, len(node.pages)):
+            for name, lps in node.pages[idx].items():
+                plane = self.planes[name]
+                drop = []
+                for lp in lps:
+                    lp = int(lp)
+                    self._lp_node.pop((name, lp), None)
+                    if (plane.aqua.page_refs[lp] == 0
+                            and plane.aqua.page_table[lp, 0] != -1):
+                        drop.append(lp)
+                if drop:
+                    plane.aqua.drop_cached(drop)
+        del node.pages[bi:]
+        del node.blocks[bi:]
+        if not node.pages and node.parent is not None and key is not None:
+            if node.parent.children.get(key) is node:
+                node.parent.children.pop(key)
+            node.parent = None
+
+    def _drop_tree_page(self, plane_name: str, lp: int):
+        """A tree-indexed page went away (freed, or lost with its donor):
+        prune its block and everything below it from the index."""
+        hit = self._lp_node.get((plane_name, int(lp)))
+        if hit is not None:
+            self._prune_from(hit[0], hit[1])
+
+    def _iter_nodes(self):
+        for root in self._roots.values():
+            stack = list(root.children.values())
+            while stack:
+                n = stack.pop()
+                stack.extend(n.children.values())
+                yield n
+
+    def _block_cached(self, node: _RadixNode, bi: int) -> bool:
+        """True when every page of the block holds zero references — the
+        block is retained purely by the cache and may be evicted."""
+        for name, lps in node.pages[bi].items():
+            if (self.planes[name].aqua.page_refs[np.asarray(lps, np.int64)]
+                    != 0).any():
+                return False
+        return True
+
+    def _cache_reclaim(self, plane_name: str, tier: int, need: int) -> int:
+        """The AquaTensor reclaim hook: free ``need`` slots of ``tier`` in
+        ``plane_name`` by evicting the coldest cached LEAF blocks (LRU).
+        Cold-first demotion: a LOCAL victim demotes to REMOTE-else-HOST and
+        a REMOTE victim to HOST when the lower tier has room (the block
+        stays adoptable — only its residence degrades, priced as a normal
+        coalesced migration); otherwise the block frees outright. tier -1
+        requests outright frees (logical-id pressure). Reentrancy-guarded:
+        a demotion's own ``_move`` never recurses into eviction."""
+        if not self.caching or self._evicting:
+            return 0
+        self._evicting = True
+        try:
+            freed = 0
+            while freed < need:
+                victim = None              # (node, block index)
+                for node in self._iter_nodes():
+                    if not node.pages:
+                        continue
+                    # deepest cached block of this node holding pages of
+                    # the pressured plane in the pressured tier. The prefix
+                    # invariant (a referenced block keeps every ancestor
+                    # referenced) means everything at or below a cached
+                    # block is itself cached, so an interior block whose
+                    # descendants were already demoted to a lower tier is
+                    # a legal victim — requiring a childless node here
+                    # would strand such blocks forever.
+                    for bi in range(len(node.pages) - 1, -1, -1):
+                        if not self._block_cached(node, bi):
+                            break          # earlier blocks are referenced
+                        lps = node.pages[bi].get(plane_name)
+                        if lps is None:
+                            continue
+                        tiers = self.planes[plane_name].aqua.page_table[
+                            np.asarray(lps, np.int64), 0]
+                        if tier != -1 and not (tiers == tier).any():
+                            continue
+                        if victim is None or node.last_use < victim[0].last_use:
+                            victim = (node, bi)
+                        break
+                if victim is None:
+                    break
+                freed += self._evict_block(victim[0], plane_name, tier,
+                                           victim[1])
+            return freed
+        finally:
+            self._evicting = False
+
+    def _evict_block(self, node: _RadixNode, plane_name: str,
+                     tier: int, bi: Optional[int] = None) -> int:
+        """Evict cached block ``bi`` (tail by default) of ``node`` under
+        ``tier`` pressure in ``plane_name``. Demotes when the next tier
+        down has room (the subtree below stays intact and adoptable),
+        frees the block AND its subtree otherwise — everything below a
+        cached block is cached too, so nothing referenced is cut. Returns
+        slots freed in the pressured tier."""
+        if bi is None:
+            bi = len(node.pages) - 1
+        aqua = self.planes[plane_name].aqua
+        lps = np.asarray(node.pages[bi][plane_name], np.int64)
+        in_tier = lps[aqua.page_table[lps, 0] == tier] if tier != -1 else lps
+        room = 0
+        if tier == LOCAL:
+            room = aqua.remote_free + len(aqua._free_host)
+        elif tier == REMOTE:
+            room = len(aqua._free_host)
+        if 0 < len(in_tier) <= room:
+            aqua._move(in_tier, REMOTE if tier == LOCAL else HOST)
+            self.cache_demotions += 1
+            return len(in_tier)
+        freed = len(in_tier)
+        self._prune_from(node, bi)         # drops the cached pages
+        self.cache_evictions += 1
+        return max(freed, 1)
+
+    def cached_pages(self) -> Dict[str, int]:
+        """Refcount-0-but-resident pages per plane (the CACHED state)."""
+        return {n: int(((p.aqua.page_refs == 0)
+                        & (p.aqua.page_table[:, 0] != -1)).sum())
+                for n, p in self.planes.items()}
 
     # -- prefix sharing (refcounted copy-on-write pages) -------------------
     def adopt_prefix(self, rid: int, tokens: Sequence[int],
                      seed: object = None) -> int:
         """Map a new request's block tables onto already-resident pages for
-        the longest indexed page-aligned prefix of ``tokens``.
+        the LONGEST COMMON page-aligned prefix of ``tokens`` in the radix
+        tree — mid-prompt divergence still reuses every block up to the
+        divergence boundary.
 
-        For every matched page the physical page is RETAINED (refcount + 1)
-        and its logical id appended to this request's block-table rows in
-        every plane — the chunked-prefill pipeline then starts past the
-        shared prefix (the engine sets ``prefill_pos`` accordingly). Must be
-        called before the request's first ``ensure_capacity``. Also caches
-        the prompt's block-hash chain so the request's own full pages can be
-        registered as it prefills (``register_prefix``).
+        For every matched block the physical pages are taken by reference —
+        RETAINED (refcount + 1) when live, REVIVED (a cache hit: refcount
+        0 -> 1, the pages were retained past their last referencer) when
+        cached — and appended to this request's block-table rows in every
+        plane; the chunked-prefill pipeline then starts past the shared
+        prefix (the engine sets ``prefill_pos`` accordingly; revived pages
+        may sit on a lower tier, so the restore pays only their page-in
+        bytes, never prefill FLOPs). Must be called before the request's
+        first ``ensure_capacity``.
 
         Args:
             rid: the request id (no pages allocated yet).
             tokens: the full prompt token ids.
-            seed: extra hash seed partitioning the index (e.g. lora_id).
+            seed: index partition key (e.g. lora_id) — one tree root per
+                seed, so adapters never alias.
 
         Returns:
             Matched prefix length in TOKENS (a multiple of ``page_tokens``;
@@ -424,77 +703,88 @@ class PagedStateRuntime:
         """
         if not self.sharing:
             return 0
-        hashes = _hash_blocks(tokens, self.page_tokens, seed)
-        self._req_hashes[rid] = hashes
+        blocks = _token_blocks(tokens, self.page_tokens)
+        self._req_blocks[rid] = blocks
         self._req_tokens[rid] = tuple(map(int, tokens))
         self._req_seed[rid] = seed
-        n = 0
-        for p, h in enumerate(hashes):
-            entry = self._index.get(h)
-            if (entry is None or entry["_seed"] != seed
-                    or entry["_prefix"] != self._req_tokens[rid]
-                    [:(p + 1) * self.page_tokens]):
-                break                   # miss (or a chain-hash collision)
-            n += 1
-        self._req_registered[rid] = n
-        if n == 0:
+        matched = self._radix_walk(seed, blocks)
+        self._req_registered[rid] = len(matched)
+        if not matched:
             return 0
         if any(rid in p.pages for p in self.planes.values()):
             raise ValueError(f"adopt_prefix({rid}) after pages were "
                              "allocated — adoption must precede the first "
                              "ensure_capacity")
-        for name, plane in self.planes.items():
-            rows = plane.pages.setdefault(
-                rid, [[] for _ in range(plane.n_layers)])
-            for p in range(n):
-                lps = self._index[hashes[p]][name]
-                plane.aqua.retain(lps)
+        self._clock += 1
+        revived_blocks = 0
+        for node, bi in matched:
+            node.last_use = self._clock
+            hit = self._block_cached(node, bi)
+            for name, plane in self.planes.items():
+                lps = np.asarray(node.pages[bi][name], np.int64)
+                if hit:
+                    plane.aqua.revive(lps)
+                else:
+                    refs = plane.aqua.page_refs[lps]
+                    cold = lps[refs == 0]
+                    if len(cold):          # mixed: revive the cold layers
+                        plane.aqua.revive(cold)
+                    warm = lps[refs > 0]
+                    if len(warm):
+                        plane.aqua.retain(warm)
+                rows = plane.pages.setdefault(
+                    rid, [[] for _ in range(plane.n_layers)])
                 for l in range(plane.n_layers):
                     rows[l].append(int(lps[l]))
+            if hit:
+                revived_blocks += 1
         self.prefix_hits += 1
-        self.adopted_tokens += n * self.page_tokens
-        return n * self.page_tokens
+        self.adopted_tokens += len(matched) * self.page_tokens
+        if revived_blocks:
+            self.cache_hits += 1
+            self.cache_hit_tokens += revived_blocks * self.page_tokens
+        return len(matched) * self.page_tokens
 
     def register_prefix(self, rid: int, n_tokens: int):
-        """Publish the request's completed full prompt pages into the prefix
-        index (up to ``n_tokens`` positions written so far). Pages adopted
-        from the index are already there; decode-written pages are never
-        registered (the hash chain covers prompt blocks only). No-op unless
-        ``adopt_prefix`` cached the request's hash chain."""
-        hashes = self._req_hashes.get(rid)
-        if not self.sharing or hashes is None:
+        """Publish the request's completed full prompt pages into the radix
+        tree (up to ``n_tokens`` positions written so far). Blocks already
+        in the tree are skipped (adopted blocks, or a concurrent twin won
+        the publication race — its pages stay canonical); a divergence
+        mid-edge SPLITS the edge at the block boundary so both branches
+        share the common-prefix node. Decode-written pages are never
+        registered (the tree covers prompt blocks only). No-op unless
+        ``adopt_prefix`` recorded the request's prompt blocks."""
+        blocks = self._req_blocks.get(rid)
+        if not self.sharing or blocks is None:
             return
-        n_full = min(n_tokens // self.page_tokens, len(hashes))
+        n_full = min(n_tokens // self.page_tokens, len(blocks))
         start = self._req_registered.get(rid, 0)
-        for p in range(start, n_full):
-            h = hashes[p]
-            if h in self._index:        # a concurrent twin won the race
-                continue
-            entry: Dict[str, object] = {
-                "_prefix": self._req_tokens[rid][:(p + 1) * self.page_tokens],
-                "_seed": self._req_seed.get(rid),
-            }
+        if n_full <= start:
+            return
+        page_dicts: List[Dict[str, np.ndarray]] = []
+        for p in range(n_full):
+            entry: Dict[str, np.ndarray] = {}
             for name, plane in self.planes.items():
                 rows = plane.pages.get(rid)
                 if rows is None or len(rows[0]) <= p:
                     return
                 entry[name] = np.asarray(
                     [rows[l][p] for l in range(plane.n_layers)], np.int64)
-            self._index[h] = entry
-            for name, lps in entry.items():
-                if name.startswith("_"):
-                    continue
-                for lp in lps:
-                    self._lp_entry[(name, int(lp))] = h
+            page_dicts.append(entry)
+        self._clock += 1
+        self._radix_insert(self._req_seed.get(rid), blocks[:n_full],
+                           page_dicts)
         self._req_registered[rid] = max(start, n_full)
 
     def make_writable(self, rid: int, start: int, end: int):
         """Copy-on-write: before the request writes token positions
-        ``[start, end)``, clone any covered page it SHARES (refcount > 1)
-        into a fresh exclusive LOCAL page and repoint only this request's
-        block-table row at the clone. The other referencers (and the prefix
-        index) keep the original — a sharer's write can never corrupt the
-        prefix another request is still reading.
+        ``[start, end)``, clone any covered page it SHARES (refcount > 1,
+        or refcount 1 but radix-indexed — a cache-revived sole referencer
+        must not mutate the canonical cached copy) into a fresh exclusive
+        LOCAL page and repoint only this request's block-table row at the
+        clone. The other referencers (and the radix tree) keep the original
+        — a sharer's write can never corrupt the prefix another request is
+        still reading or a future arrival will adopt.
 
         Raises:
             MemoryError: no LOCAL slot is free for a clone.
@@ -511,7 +801,8 @@ class PagedStateRuntime:
             for row in rows:
                 for p in range(p0, min(p1 + 1, len(row))):
                     lp = int(row[p])
-                    if int(plane.aqua.refcounts([lp])[0]) <= 1:
+                    if (int(plane.aqua.refcounts([lp])[0]) <= 1
+                            and (plane.name, lp) not in self._lp_node):
                         continue
                     new = int(plane.aqua.allocate(1, prefer=LOCAL)[0])
                     try:
@@ -527,7 +818,15 @@ class PagedStateRuntime:
                     if rid in self._active:
                         self._unpin(plane, lp)
                         plane.pin[new] = plane.pin.get(new, 0) + 1
-                    plane.aqua.free([lp])      # deref; sharers keep it
+                    # deref the original; sharers keep it, and if this was
+                    # its last reference an indexed page stays CACHED (or
+                    # prunes its coverage when caching is off)
+                    if (self.caching
+                            and (plane.name, lp) in self._lp_node):
+                        plane.aqua.free_to_cache([lp])
+                    else:
+                        for f in plane.aqua.free([lp]):
+                            self._drop_tree_page(plane.name, f)
                     row[p] = new
                     self.cow_copies += 1
 
@@ -549,6 +848,24 @@ class PagedStateRuntime:
                     shared.update(mine_set.intersection(row))
             out.append(len(shared))
         return np.asarray(out, np.int64)
+
+    def prefix_group_of(self, rid: int) -> Optional[object]:
+        """Co-scheduling identity: the root-edge radix node of the
+        request's prompt (same node <=> same seed and at least the first
+        prompt block in common — every sharer of any deeper prefix shares
+        that root edge too). The schedulers cluster same-group requests
+        inside a fairness class so a shared prefix parks/restores once per
+        plan. None when sharing is off or the prompt has no indexed
+        coverage."""
+        if not self.sharing:
+            return None
+        blocks = self._req_blocks.get(rid)
+        if not blocks:
+            return None
+        root = self._roots.get(self._req_seed.get(rid))
+        if root is None:
+            return None
+        return root.children.get(blocks[0])
 
     def cow_reserve(self) -> np.ndarray:
         """Per-plane pages a pending copy-on-write may allocate (one clone
@@ -677,12 +994,26 @@ class PagedStateRuntime:
             out.append(int((rows[:, 0] != LOCAL).sum()) if len(rows) else 0)
         return np.asarray(out, np.int64)
 
+    def local_headroom(self) -> np.ndarray:
+        """Per-plane LOCAL slots obtainable without touching live pages:
+        free slots plus cached (refcount-0) LOCAL pages, which eviction
+        demotes or drops on demand."""
+        out = []
+        for p in self.planes.values():
+            free = p.aqua.local_free
+            if self.caching:
+                free += int(((p.aqua.page_refs == 0)
+                             & (p.aqua.page_table[:, 0] == LOCAL)).sum())
+            out.append(free)
+        return np.asarray(out, np.int64)
+
     def can_restore(self, rid: int) -> bool:
-        """True when a restore fits every plane's free LOCAL slots right now
-        — the prefetch guard: an early ``ensure_local`` must never steal
-        pages the current run set still needs (it would raise mid-step)."""
-        free = np.asarray([p.aqua.local_free for p in self.planes.values()])
-        return bool(np.all(self.nonlocal_pages(rid) <= free))
+        """True when a restore fits every plane's obtainable LOCAL slots
+        right now (free plus evictable cache — cached pages yield to a real
+        restore) — the prefetch guard: an early ``ensure_local`` must never
+        steal pages the current run set still needs (it would raise
+        mid-step)."""
+        return bool(np.all(self.nonlocal_pages(rid) <= self.local_headroom()))
 
     # -- coordinator-driven lease plumbing --------------------------------
     def add_remote_lease(self, donor: str, nbytes: float):
@@ -763,8 +1094,10 @@ class PagedStateRuntime:
         plane) flips to the LOST tier and the leases drop. Returns the
         sorted rids of VICTIM requests — those whose block tables reference
         a lost page — for the engine's recompute-from-prompt recovery.
-        Prefix-index entries backed by lost pages are dropped immediately,
-        so no later arrival can adopt a dead prefix."""
+        Radix coverage backed by lost pages is pruned immediately — CACHED
+        pages on the dead slab are DROPPED with it (their only copy died;
+        leaking their logical ids would bleed the pool one donor death at a
+        time) — so no later arrival can adopt a dead prefix."""
         victims: set = set()
         for plane in self.planes.values():
             if donor not in plane.aqua.remote_pools:
@@ -773,7 +1106,7 @@ class PagedStateRuntime:
             if not lost:
                 continue
             for lp in lost:
-                self._drop_index_entry(plane.name, lp)
+                self._drop_tree_page(plane.name, lp)
             for rid, rows in plane.pages.items():
                 if any(int(lp) in lost for row in rows for lp in row):
                     victims.add(rid)
@@ -810,6 +1143,13 @@ class PagedStateRuntime:
                             "cow_copies": self.cow_copies,
                             "physical_pages": self.physical_pages(),
                             "logical_pages": self.logical_pages()},
+                "cache": {"enabled": self.caching,
+                          "hits": self.cache_hits,
+                          "hit_tokens": self.cache_hit_tokens,
+                          "evictions": self.cache_evictions,
+                          "demotions": self.cache_demotions,
+                          "cached_pages": self.cached_pages(),
+                          "nodes": sum(1 for _ in self._iter_nodes())},
                 "meter": {"bytes_fabric": self.meter.bytes_fabric,
                           "bytes_host": self.meter.bytes_host,
                           "messages_fabric": self.meter.messages_fabric,

@@ -235,7 +235,8 @@ class CFSScheduler:
 
     def __init__(self, max_running: int, slice_tokens: int = 5, *,
                  page_cost: Optional[Callable[[ReqState], int]] = None,
-                 page_budget: Optional[int] = None):
+                 page_budget: Optional[int] = None,
+                 prefix_group: Optional[Callable[[ReqState], object]] = None):
         """Args:
             max_running: batch-slot cap on the run set.
             slice_tokens: tokens each resident request decodes between
@@ -243,17 +244,51 @@ class CFSScheduler:
             page_cost / page_budget: as in :class:`FCFSScheduler` —
                 ``page_cost`` may take ``(request, chosen)`` for marginal
                 (shared-prefix-discounted) physical-page costing.
+            prefix_group: co-scheduling key — requests sharing a radix
+                prefix return the same (hashable) group. At a fair-pick
+                boundary, same-group requests WITHIN a vruntime class are
+                clustered behind the group's earliest member, so sharers
+                are admitted by the same plan and their shared prefix
+                parks/restores once per plan instead of thrashing between
+                interleaved singletons. Clustering never crosses vruntime
+                classes — fairness order is untouched.
         """
         self.max_running = max_running
         self.slice_tokens = slice_tokens
         self.page_cost = page_cost
         self.page_budget = page_budget
+        self.prefix_group = prefix_group
         self._marginal = _cost_takes_chosen(page_cost)
         self._since_switch = 0
 
     def _cost(self, r: ReqState, chosen: Sequence[ReqState]):
         return (self.page_cost(r, chosen) if self._marginal
                 else self.page_cost(r))
+
+    def _pick_key(self, everyone: Sequence[ReqState]):
+        """Fair-pick sort key. Without a ``prefix_group`` callback this is
+        (vruntime, arrival, rid). With one, requests sharing a group sort
+        behind the group's earliest (arrival, rid) member WITHIN their
+        vruntime class — the greedy budget walk then meets sharers
+        adjacently and admits them in one plan, so their common prefix
+        flips tiers once per plan."""
+        if self.prefix_group is None:
+            return lambda r: (r.vruntime, r.arrival, r.rid)
+        anchor: dict = {}
+        for r in everyone:
+            g = self.prefix_group(r)
+            if g is None:
+                continue
+            k, me = (r.vruntime, g), (r.arrival, r.rid)
+            if k not in anchor or me < anchor[k]:
+                anchor[k] = me
+
+        def key(r: ReqState):
+            g = self.prefix_group(r)
+            a = (anchor[(r.vruntime, g)] if g is not None
+                 else (r.arrival, r.rid))
+            return (r.vruntime, a, r.arrival, r.rid)
+        return key
 
     def update_budget(self, page_budget) -> None:
         """Re-plan fair picks against a new LOCAL/physical budget (see
@@ -266,15 +301,17 @@ class CFSScheduler:
         on one, the least-served requests that fit the slot cap and the
         PHYSICAL page budget run next (a request whose pages alias an
         already-picked sharer's prefix pays only its exclusive pages, so
-        shared prefixes admit strictly larger fair sets). Requests falling
-        out of the set are returned in ``Decision.preempt``."""
+        shared prefixes admit strictly larger fair sets; with a
+        ``prefix_group`` key, equal-vruntime sharers are clustered so one
+        plan admits them together). Requests falling out of the set are
+        returned in ``Decision.preempt``."""
         self._since_switch += 1
         boundary = (self._since_switch >= self.slice_tokens) or not running
         if not boundary:
             return Decision(list(running), [], [])
         self._since_switch = 0
         everyone = list(waiting) + list(running)
-        everyone.sort(key=lambda r: (r.vruntime, r.arrival, r.rid))
+        everyone.sort(key=self._pick_key(everyone))
         if self.page_cost is None or self.page_budget is None:
             run = everyone[: self.max_running]
         else:

@@ -419,7 +419,13 @@ def _chaos_round(seed: int, n_ops: int = 80):
     kv.add_remote_lease("d0", 64 * page_bytes)
     kv.add_remote_lease("d1", 64 * page_bytes)
     auditor = InvariantAuditor()
+    # three prompt families drive the radix cache: new requests adopt a
+    # family prefix (sometimes with a diverged tail) and register their
+    # growth, so releases leave CACHED pages behind and later growth
+    # triggers revival, eviction and cold-first demotion mid-chaos
+    fam = [list(map(int, rng.integers(0, 50, 60))) for _ in range(3)]
     live: dict = {}                              # rid -> resident tokens
+    prompts: dict = {}                           # rid -> token identity
     parked: set = set()
     next_rid = 0
     for _ in range(n_ops):
@@ -433,12 +439,20 @@ def _chaos_round(seed: int, n_ops: int = 80):
                 if rid == next_rid:
                     next_rid += 1
                     live[rid] = 0
+                    base = fam[int(rng.integers(len(fam)))]
+                    if rng.random() < 0.4:       # mid-prompt divergence
+                        cut = int(rng.integers(8, 60))
+                        prompts[rid] = base[:cut] + [t + 1 for t in base[cut:]]
+                    else:
+                        prompts[rid] = list(base)
+                    live[rid] = kv.adopt_prefix(rid, prompts[rid])
                 if rid in parked:
                     kv.restore(rid)
                     parked.discard(rid)
                 tok = min(live[rid] + int(rng.integers(1, 12)), 60)
                 kv.ensure_capacity(rid, tok)
                 live[rid] = tok
+                kv.register_prefix(rid, tok)
             elif op == "park" and live:
                 rid = int(rng.choice([r for r in live if r not in parked]
                                      or list(live)))
@@ -455,6 +469,7 @@ def _chaos_round(seed: int, n_ops: int = 80):
                 rid = int(rng.choice(sorted(live)))
                 kv.release(rid)
                 live.pop(rid)
+                prompts.pop(rid, None)
                 parked.discard(rid)
             elif op == "shrink":
                 donor = str(rng.choice(["d0", "d1"]))
@@ -467,6 +482,7 @@ def _chaos_round(seed: int, n_ops: int = 80):
                 for rid in victims:              # recovery: drop the victims
                     kv.release(rid)
                     live.pop(rid, None)
+                    prompts.pop(rid, None)
                     parked.discard(rid)
         except (MemoryError, errs.LeaseRevokedError, errs.PageLossError):
             pass                                 # legal under chaos

@@ -293,9 +293,13 @@ def test_prefetch_misprediction_parks_back_on_new_arrival():
                for _ in range(3)]
     truth = [_greedy(cfg, params, p, n)
              for p, n in zip(prompts, (8, 8, 4))]
+    # prefix_cache=False: the final assert counts exact LOCAL pages after
+    # drain, and the global prefix cache would (correctly) retain the
+    # prompts' refcount-0 pages (cache residency is covered by
+    # tests/test_prefix_cache.py)
     eng = ServingEngine(cfg, params, max_running=1, max_seq=64,
                         scheduler="cfs", slice_tokens=2, offload_tier=HOST,
-                        step_tokens=16, prefetch=True)
+                        step_tokens=16, prefetch=True, prefix_cache=False)
     eng.submit(prompts[0], 8)
     eng.submit(prompts[1], 8)
     for _ in range(100):

@@ -166,11 +166,15 @@ def test_refcounted_free_keeps_shared_pages_alive():
 def test_release_of_one_requester_preserves_the_others_pages(qwen):
     """Runtime-level: A registers, B adopts, A releases mid-flight — B's
     shared pages survive (never zeroed/reused) and the index entries backed
-    by them stay valid until B too is gone."""
+    by them stay valid until B too is gone. With ``prefix_cache=False`` the
+    LAST release drops the index (the pre-cache lifecycle; retention past
+    refcount 0 is covered in test_prefix_cache.py)."""
     cfg, params = qwen
     rng = np.random.default_rng(2)
     prompt = list(map(int, rng.integers(0, cfg.vocab_size, 16)))
-    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=2)
+    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=2,
+                           prefix_cache=False)
+    assert kv.sharing and not kv.caching
     kv.adopt_prefix(0, prompt)
     lg = _prefill(kv, cfg, params, 0, prompt, [8, 8])
     assert kv.adopt_prefix(1, prompt + [3, 4]) == 16
@@ -265,10 +269,10 @@ def test_recurrent_state_families_disable_sharing():
         assert kv.adopt_prefix(0, list(range(24))) == 0
 
 
-def test_chain_hash_collision_never_aliases_foreign_pages(qwen):
-    """Index entries store the exact token prefix and are compared verbatim
-    on match: a chain-hash collision (forged here) yields a miss, never
-    another prompt's pages."""
+def test_forged_radix_collision_never_aliases_foreign_pages(qwen):
+    """Radix children are keyed by their first token block and the walk
+    compares edge blocks verbatim: a forged key collision (another prompt's
+    block mapped onto this node) yields a miss, never foreign pages."""
     cfg, params = qwen
     rng = np.random.default_rng(6)
     prompt = list(map(int, rng.integers(0, cfg.vocab_size, 16)))
@@ -276,11 +280,12 @@ def test_chain_hash_collision_never_aliases_foreign_pages(qwen):
     kv.adopt_prefix(0, prompt)
     _prefill(kv, cfg, params, 0, prompt, [8, 8])
     other = [t + 1 for t in prompt]
-    from repro.serving.kv_cache import _hash_blocks
-    h0 = _hash_blocks(other, 8)[0]
-    kv._index[h0] = dict(kv._index[_hash_blocks(prompt, 8)[0]])  # collision
-    assert kv.adopt_prefix(1, other) == 0     # prefix mismatch -> miss
+    root = kv._roots[None]
+    node = root.children[tuple(prompt[:8])]
+    root.children[tuple(other[:8])] = node    # forged hash collision
+    assert kv.adopt_prefix(1, other) == 0     # token mismatch -> miss
     assert kv.adopt_prefix(2, prompt) == 16   # honest match still works
+    del root.children[tuple(other[:8])]
 
 
 def test_lora_id_partitions_the_prefix_index(qwen):
