@@ -18,44 +18,10 @@ def make_requests(rate: float, n: int, seed: int = 0,
             for i in range(n)]
 
 
-def make_multi_tenant_requests(n: int, n_tenants: int = 6, seed: int = 0,
-                               system_prompt=(1024, 3072), tail_mean: float = 96.0,
-                               gen=(40, 120), burst: float = 1.0,
-                               think_time: float = 30.0):
-    """Heavy-tailed multi-tenant stream for the prefix-cache benchmarks.
-
-    Each tenant owns a system prompt (its ``prefix_group``) whose length is
-    log-uniform in ``system_prompt``; per-request tails are lognormal
-    (median ``tail_mean``, heavy right tail) and arrivals come in tenant
-    bursts separated by exponential think time, so later members of a
-    burst typically land AFTER the leader finished — the load where a
-    refcount-0 cache wins and pure live sharing does not. Tenant traffic
-    shares follow a Zipf-like 1/rank law (a few hot tenants, a long cold
-    tail)."""
-    rng = np.random.default_rng(seed)
-    lo, hi = system_prompt
-    sys_len = [int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
-               for _ in range(n_tenants)]
-    share = np.array([1.0 / (1 + t) for t in range(n_tenants)])
-    share /= share.sum()
-    reqs, t, i = [], 0.0, 0
-    while i < n:
-        tenant = int(rng.choice(n_tenants, p=share))
-        t += rng.exponential(think_time)
-        k = min(1 + rng.poisson(burst), n - i)
-        at = t
-        for _ in range(k):
-            tail = int(rng.lognormal(np.log(tail_mean), 0.8)) + 1
-            reqs.append(Request(
-                i, float(at), sys_len[tenant] + tail,
-                int(rng.integers(*gen)), prefix_group=tenant,
-                shared_prefix_len=sys_len[tenant]))
-            at += rng.exponential(1.0)
-            i += 1
-    reqs.sort(key=lambda r: r.arrival)
-    for j, r in enumerate(reqs):     # rid order == arrival order
-        r.rid = j
-    return reqs
+# moved to repro.core.workload (the bursty-workload module) in PR 9;
+# re-exported here so existing callers keep working — import it from
+# repro.core.workload in new code
+from repro.core.workload import make_multi_tenant_requests  # noqa: E402,F401
 
 
 def codellama_sim(hw, scheduler, tier, **kw):

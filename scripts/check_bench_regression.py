@@ -7,6 +7,9 @@ and FAILS when a gated metric regressed by more than the threshold:
 
   * step-time tail latency   — leaf keys containing ``step_time_p99``
   * kernel-launch pressure   — leaf keys containing ``launches_per_step``
+  * burst tail latency       — leaf keys containing ``ttft_p99``
+    (``admission_off`` segments exempt: the baseline diverging is the
+    benchmark's POINT, not a regression)
 
 Only INCREASES fail (these metrics are all lower-is-better), only beyond
 ``--threshold`` (default 15%) relative, and only above a small absolute
@@ -31,8 +34,9 @@ import os
 import subprocess
 import sys
 
-GATED_SUBSTRINGS = ("step_time_p99", "launches_per_step")
-EXEMPT_SEGMENTS = ("per_request", "baseline", "no_speculation")
+GATED_SUBSTRINGS = ("step_time_p99", "launches_per_step", "ttft_p99")
+EXEMPT_SEGMENTS = ("per_request", "baseline", "no_speculation",
+                   "admission_off")
 ABS_FLOOR = 1e-9          # seconds / launches below this never gate
 
 

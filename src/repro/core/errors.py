@@ -91,3 +91,13 @@ class CapacityError(AquaError):
     """A serving unit cannot physically hold the configured workload (e.g.
     the model weights alone exceed device memory) — a sizing mistake caught
     at construction, not a runtime fault."""
+
+
+class AdmissionError(AquaError):
+    """The SLO-aware admission controller was misconfigured (bad headroom,
+    budget, or callback wiring) — caught at construction or the first
+    ``filter`` call. NEVER raised on the admit/defer path itself: admission
+    degrades overload to queueing, it does not reject requests with errors
+    (a deferred request simply waits for the stability region to reopen).
+    A CI grep-guard pins ``serving/admission.py`` to raising only typed
+    :class:`AquaError` subclasses."""

@@ -22,6 +22,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.errors import CapacityError
 from repro.core.perfmodel import (HardwareProfile, ModelCost,
                                   context_switch_time,
@@ -85,7 +87,10 @@ class ServingSimulator:
                  prefix_cache: bool = True,
                  lora_cache_bytes: float = 0.0,
                  lora_num_adapters: int = 200,
-                 faults=None):
+                 faults=None,
+                 admission: bool = False,
+                 admission_headroom: float = 0.9,
+                 prefill_admit_limit: Optional[int] = 4):
         self.hw = hw
         self.model = model
         self.weight_bytes = weight_bytes
@@ -151,6 +156,46 @@ class ServingSimulator:
         # aliased (PagedStateRuntime forces sharing off when state_bytes>0),
         # so the simulator ignores prefix groups for those models
         self.prefix_sharing_ok = model.state_bytes == 0.0
+        # overflow-swap churn (vllm branch): admission gates on CURRENT
+        # bytes, but contexts grow one token per decode step — when the
+        # admitted set's growth overshoots kv_cap, the latest-arrived
+        # resident swaps out (vLLM swap preemption) and re-admits later,
+        # paying the flip both ways. This is Ao et al.'s service-induced
+        # congestion: churn rises exactly when load spikes. The stability
+        # controller below exists to price TERMINAL bytes so it never fires.
+        self.overflow_swaps = 0
+        # admission: the SLO-aware stability-region controller of
+        # serving/admission.py on the BYTE clock — one implementation, two
+        # clocks (the engine instantiates it over per-plane page vectors).
+        # Deferred requests stay queued (degrade-to-queue), invisible to
+        # both scheduler branches until completions reopen the region.
+        self.admission = None
+        if admission:
+            from repro.serving.admission import AdmissionController
+            self.admission = AdmissionController(
+                budget=lambda: np.array([self.kv_cap]),
+                current_cost=lambda r, chosen: self._adm_cost(
+                    r, chosen, terminal=False),
+                terminal_cost=lambda r, chosen: self._adm_cost(
+                    r, chosen, terminal=True),
+                remaining_tokens=lambda r: (r.prompt_len - r.prefill_pos,
+                                            r.gen_len - r.generated),
+                headroom=admission_headroom,
+                step_tokens=self.step_tokens,
+                prefill_admit_limit=prefill_admit_limit)
+
+    def _adm_cost(self, r: Request, chosen, *, terminal: bool) -> np.ndarray:
+        """Marginal context bytes of ``r`` against the committed set — at
+        the current context, or grown to completion (``terminal``), the
+        quantity naive current-bytes admission ignores."""
+        ctx = r.prompt_len + (r.gen_len if terminal else r.generated)
+        groups = {c.prefix_group for c in chosen
+                  if c.prefix_group is not None}
+        if (self.prefix_sharing_ok and r.prefix_group is not None
+                and r.prefix_group in groups):
+            return np.array([self.model.unique_context_bytes(
+                ctx, min(r.shared_prefix_len, r.prompt_len))])
+        return np.array([self.model.context_bytes(ctx)])
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *, horizon: float = 1e9) -> SimResult:
@@ -213,6 +258,10 @@ class ServingSimulator:
                             r.prefill_pos = 0
                             r.prefilled = False
                             r.recovered = True
+                            if self.admission is not None:
+                                # reset work must re-price against the
+                                # (possibly contracted) stability region
+                                self.admission.forget(r.rid)
                     elif ev.kind == "lease_shrink":
                         self.lease_shrinks += 1
                         self._host_spill = min(
@@ -265,12 +314,51 @@ class ServingSimulator:
             else:
                 stall = 0
 
+            # stability-region admission gate: deferred requests are
+            # invisible to BOTH scheduler branches this round (degrade to
+            # queue); they retry every round and admit as completions free
+            # bytes. Without it every waiter is eligible.
+            deferred: List[Request] = []
+            sched_wait = waiting
+            if self.admission is not None:
+                sched_wait, deferred = self.admission.filter(waiting, running)
+
             step_time = 0.0
             pagein_time = 0.0
             if self.scheduler == "vllm":
+                # overflow preemption churn: admission gated on CURRENT
+                # bytes, but last round's decode growth may have pushed the
+                # resident set past kv_cap. vLLM's default preemption
+                # RECOMPUTES: the latest-arrived resident discards its KV
+                # (free — no transfer) and must re-prefill its whole prompt
+                # when re-admitted (at least one request keeps running).
+                # Under a spike this thrashes: the newest residents are
+                # evicted before their first token, re-admit, re-prefill a
+                # few chunks, get evicted again — Ao et al.'s
+                # service-induced congestion, the TTFT divergence the
+                # stability controller exists to prevent (it prices
+                # TERMINAL bytes, so the overshoot never happens).
+                while (used_bytes() > self.kv_cap
+                       and sum(1 for r in running if r.resident) > 1):
+                    victim = max((r for r in running if r.resident),
+                                 key=lambda r: (r.arrival, r.rid))
+                    victim.resident = False
+                    # the rebuild covers the WHOLE context: prompt plus the
+                    # KV of every token generated so far (the generated
+                    # text is kept; its cache is not) — encoded as negative
+                    # prefill_pos so prompt_len - prefill_pos is the
+                    # remaining rebuild work
+                    victim.prefill_pos = -victim.generated
+                    victim.prefilled = False
+                    running.remove(victim)
+                    waiting.append(victim)
+                    if sched_wait is not waiting:
+                        # still admitted — stays eligible for re-admission
+                        sched_wait.append(victim)
+                    self.overflow_swaps += 1
                 # FCFS admission while KV fits (physical bytes: a shared
                 # prefix already resident via its group is not re-counted)
-                for r in list(waiting):
+                for r in list(sched_wait):
                     if used_bytes() + marginal_bytes(r, resident_groups()) \
                             <= self.kv_cap \
                             and len(running) < self.max_running:
@@ -291,8 +379,9 @@ class ServingSimulator:
                 ntok = 1
             else:  # cfs
                 # slice boundary: fair-pick the least-served prompts under
-                # the PHYSICAL byte budget (marginal cost per prefix group)
-                candidates = running + waiting
+                # the PHYSICAL byte budget (marginal cost per prefix group);
+                # deferred requests never enter the fair pick
+                candidates = running + sched_wait
                 candidates.sort(key=lambda r: (r.generated, r.arrival))
                 nxt = []
                 acc = 0.0
@@ -336,7 +425,7 @@ class ServingSimulator:
                     r.resident = True
                     if r.prefix_group is not None:
                         in_groups.add(r.prefix_group)
-                waiting = [r for r in candidates if r not in nxt]
+                waiting = [r for r in candidates if r not in nxt] + deferred
                 running = nxt
                 ntok = self.slice_tokens
             if not self.overlap_pagein:
@@ -413,6 +502,12 @@ class ServingSimulator:
                     if slack <= 0:
                         break
                     if spec.prefilled:
+                        continue
+                    if (self.admission is not None
+                            and spec.rid not in self.admission.admitted_rids):
+                        # never speculate on unadmitted work: its pages
+                        # would land inside the region the controller is
+                        # holding open
                         continue
                     c = min(slack, spec.prompt_len - spec.prefill_pos - 1)
                     if c <= 0:
@@ -493,9 +588,14 @@ class ServingSimulator:
                     r.resident = False
                     running.remove(r)
                     done.append(r)
+                    if self.admission is not None:
+                        self.admission.forget(r.rid)
             timeline.append({"t": t, "running": len(running),
                              "waiting": len(waiting),
-                             "kv_used": used_bytes()})
+                             "deferred": len(deferred),
+                             "kv_used": used_bytes(),
+                             "occ_frac": (used_bytes() / self.kv_cap
+                                          if self.kv_cap > 0 else 0.0)})
         return SimResult(requests, timeline)
 
     # ------------------------------------------------------------------

@@ -1,0 +1,223 @@
+"""Bursty serving workloads: the request streams the paper measures under.
+
+The paper's headline claim is *responsiveness under bursty request
+patterns* — its 20x responsiveness win is measured against baselines that
+go unresponsive during arrival spikes. This module is the workload side of
+that claim: seedable generators producing :class:`~repro.core.simulator.
+Request` streams with the three properties production LLM traffic actually
+has, so the admission controller (``serving/admission.py``) and the burst
+benchmark (``benchmarks/burst_stability.py``) are exercised against the
+load that breaks naive admission:
+
+  * **heavy-tailed lengths** — prompt and output lengths are lognormal
+    (a few very long prompts/generations dominate the byte budget, the
+    regime where current-occupancy admission over-commits future KV);
+  * **Poisson-modulated arrival spikes** — arrivals follow a two-state
+    modulated Poisson process: a baseline rate, with configurable windows
+    during which the rate multiplies by ``burst_factor`` (the "10x spike"
+    of the stability benchmark);
+  * **multi-tenant prefix mixes** — tenants own system prompts shared by
+    their requests (``prefix_group`` / ``shared_prefix_len``), with
+    Zipf-like traffic shares, generalizing the prefix-cache benchmark's
+    generator (which moved here; ``benchmarks.common`` re-exports it).
+
+Every generator is a pure function of its seed: the same arguments produce
+a bit-identical trace (pinned by ``tests/test_burst_stability.py``), so a
+divergence between two runs is a scheduler/controller change, never the
+workload.
+
+``prompt_tokens_for`` maps a generated stream onto concrete token ids for
+the REAL engine (same shared prefix tokens for same ``prefix_group``), so
+one trace drives both clocks — the discrete-event simulator and
+``ServingEngine.submit``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.simulator import Request
+
+
+@dataclass(frozen=True)
+class BurstSpec:
+    """One arrival-rate spike window on top of the baseline Poisson rate.
+
+    Between windows arrivals are Poisson at ``base_rate``; inside
+    ``[start, start + duration)`` the rate is ``base_rate * factor``
+    (``factor=10`` is the benchmark's headline spike). Windows may overlap;
+    the rate at time t is ``base_rate * max(1, factors of windows covering
+    t)`` — spikes modulate, they do not stack multiplicatively.
+    """
+    start: float
+    duration: float
+    factor: float = 10.0
+
+
+def rate_at(t: float, base_rate: float, bursts: Sequence[BurstSpec]) -> float:
+    """Instantaneous arrival rate of the modulated Poisson process at t."""
+    f = 1.0
+    for b in bursts:
+        if b.start <= t < b.start + b.duration:
+            f = max(f, b.factor)
+    return base_rate * f
+
+
+def _thinned_arrivals(rng: np.random.Generator, n: int, base_rate: float,
+                      bursts: Sequence[BurstSpec]) -> List[float]:
+    """First ``n`` arrival times of the modulated Poisson process, by
+    thinning: draw candidate arrivals at the envelope (max) rate and keep
+    each with probability rate(t)/envelope — exact for piecewise-constant
+    rates, and deterministic for a given rng state."""
+    env = base_rate * max([b.factor for b in bursts], default=1.0)
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        t += float(rng.exponential(1.0 / env))
+        if rng.random() < rate_at(t, base_rate, bursts) / env:
+            out.append(t)
+    return out
+
+
+def make_bursty_requests(n: int, *, seed: int = 0, base_rate: float = 2.0,
+                         bursts: Sequence[BurstSpec] = (),
+                         prompt_median: float = 384.0,
+                         prompt_sigma: float = 0.7,
+                         gen_median: float = 256.0,
+                         gen_sigma: float = 0.9,
+                         max_prompt: int = 8192, max_gen: int = 4096,
+                         n_tenants: int = 0,
+                         system_prompt: Tuple[int, int] = (256, 1024),
+                         lora_bytes: float = 0.0) -> List[Request]:
+    """A bursty, heavy-tailed, optionally multi-tenant request stream.
+
+    Args:
+        n: number of requests.
+        seed: RNG seed — the trace is a pure function of the arguments.
+        base_rate: baseline Poisson arrival rate (requests/s).
+        bursts: :class:`BurstSpec` spike windows modulating the rate.
+        prompt_median/prompt_sigma: lognormal prompt-length parameters
+            (median tokens, log-space sigma — sigma ~0.7 gives a p99/median
+            ratio of ~5, the heavy tail).
+        gen_median/gen_sigma: same for the output length. Output sigma
+            defaults HEAVIER than the prompt's: generation lengths are the
+            unobservable-at-admission quantity whose tail drives KV
+            occupancy overshoot.
+        max_prompt/max_gen: hard clamps (the engine's ``max_seq`` analogue).
+        n_tenants: 0 for single-tenant traffic; otherwise each request
+            belongs to a tenant drawn from a Zipf-like 1/rank share, and
+            carries the tenant's system prompt as its shared prefix
+            (``prefix_group`` = tenant id, ``shared_prefix_len`` = the
+            tenant's system-prompt length, log-uniform in
+            ``system_prompt``). The per-request tail rides ON TOP of the
+            system prompt.
+        lora_bytes: per-request adapter bytes (simulator LoRA pricing).
+
+    Returns:
+        ``Request`` list sorted by arrival, ``rid`` = arrival order.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = _thinned_arrivals(rng, n, base_rate, bursts)
+    sys_len: List[int] = []
+    share = None
+    if n_tenants > 0:
+        lo, hi = system_prompt
+        sys_len = [int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+                   for _ in range(n_tenants)]
+        share = np.array([1.0 / (1 + t) for t in range(n_tenants)])
+        share /= share.sum()
+    reqs: List[Request] = []
+    for i, at in enumerate(arrivals):
+        p = int(rng.lognormal(np.log(prompt_median), prompt_sigma)) + 1
+        g = int(rng.lognormal(np.log(gen_median), gen_sigma)) + 1
+        group: Optional[int] = None
+        shared = 0
+        if n_tenants > 0:
+            tenant = int(rng.choice(n_tenants, p=share))
+            group, shared = tenant, sys_len[tenant]
+            p = shared + min(p, max(max_prompt - shared, 1))
+        reqs.append(Request(i, float(at), min(p, max_prompt),
+                            min(g, max_gen), lora_bytes=lora_bytes,
+                            prefix_group=group, shared_prefix_len=shared))
+    return reqs
+
+
+def make_multi_tenant_requests(n: int, n_tenants: int = 6, seed: int = 0,
+                               system_prompt=(1024, 3072),
+                               tail_mean: float = 96.0,
+                               gen=(40, 120), burst: float = 1.0,
+                               think_time: float = 30.0) -> List[Request]:
+    """Heavy-tailed multi-tenant stream for the prefix-cache benchmarks.
+
+    Each tenant owns a system prompt (its ``prefix_group``) whose length is
+    log-uniform in ``system_prompt``; per-request tails are lognormal
+    (median ``tail_mean``, heavy right tail) and arrivals come in tenant
+    bursts separated by exponential think time, so later members of a
+    burst typically land AFTER the leader finished — the load where a
+    refcount-0 cache wins and pure live sharing does not. Tenant traffic
+    shares follow a Zipf-like 1/rank law (a few hot tenants, a long cold
+    tail).
+
+    The trace is a pure function of the arguments (seed-determinism pinned
+    by ``tests/test_burst_stability.py``). Historically lived in
+    ``benchmarks.common``, which still re-exports it.
+    """
+    rng = np.random.default_rng(seed)
+    lo, hi = system_prompt
+    sys_len = [int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+               for _ in range(n_tenants)]
+    share = np.array([1.0 / (1 + t) for t in range(n_tenants)])
+    share /= share.sum()
+    reqs, t, i = [], 0.0, 0
+    while i < n:
+        tenant = int(rng.choice(n_tenants, p=share))
+        t += rng.exponential(think_time)
+        k = min(1 + rng.poisson(burst), n - i)
+        at = t
+        for _ in range(k):
+            tail = int(rng.lognormal(np.log(tail_mean), 0.8)) + 1
+            reqs.append(Request(
+                i, float(at), sys_len[tenant] + tail,
+                int(rng.integers(*gen)), prefix_group=tenant,
+                shared_prefix_len=sys_len[tenant]))
+            at += rng.exponential(1.0)
+            i += 1
+    reqs.sort(key=lambda r: r.arrival)
+    for j, r in enumerate(reqs):     # rid order == arrival order
+        r.rid = j
+    return reqs
+
+
+def prompt_tokens_for(requests: Sequence[Request], *, vocab: int = 251,
+                      seed: int = 0) -> Dict[int, List[int]]:
+    """Concrete token ids for a generated stream, for the REAL engine.
+
+    Requests with the same ``prefix_group`` share the SAME first
+    ``shared_prefix_len`` token ids (so the engine's radix prefix index
+    actually aliases their pages), with per-request tails drawn from a
+    deterministic per-rid stream — the same trace therefore drives both
+    clocks: the simulator prices it analytically, the engine runs it
+    through ``submit(prompt_tokens, max_new_tokens, arrival=...)``.
+
+    Token id 0 is avoided (many smoke configs reserve it for padding).
+    Returns ``{rid: [token ids]}``.
+    """
+    prefixes: Dict[object, List[int]] = {}
+    out: Dict[int, List[int]] = {}
+    for r in requests:
+        toks: List[int] = []
+        if r.prefix_group is not None and r.shared_prefix_len > 0:
+            if r.prefix_group not in prefixes:
+                g = np.random.default_rng((seed, 1, int(r.prefix_group)))
+                prefixes[r.prefix_group] = (
+                    1 + g.integers(0, vocab - 1,
+                                   size=r.shared_prefix_len)).tolist()
+            toks.extend(prefixes[r.prefix_group][:r.shared_prefix_len])
+        tail = r.prompt_len - len(toks)
+        if tail > 0:
+            g = np.random.default_rng((seed, 2, int(r.rid)))
+            toks.extend((1 + g.integers(0, vocab - 1, size=tail)).tolist())
+        out[r.rid] = toks[:r.prompt_len]
+    return out

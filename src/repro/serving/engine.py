@@ -124,6 +124,22 @@ class EngineMetrics:
     migrated_pages: int = 0
     recomputes: int = 0
     recovered_rids: List[int] = field(default_factory=list)
+    # burst/admission observability: waiting-queue depth at each plan, the
+    # run+waiting set's occupied fraction of the page budget (max over
+    # planes, marginal under prefix sharing), and cumulative defer
+    # decisions by the SLO-aware admission controller (0 with admission
+    # off — arrivals go straight to the scheduler)
+    queue_depth_trace: List[int] = field(default_factory=list)
+    occupancy_trace: List[float] = field(default_factory=list)
+    admission_deferrals: int = 0
+
+    def ttft_quantile(self, q: float) -> float:
+        """TTFT quantile on the simulated clock (nan when nothing finished
+        a first token yet) — p50/p99 reporting for the burst benchmarks."""
+        xs = sorted(self.ttft.values())
+        if not xs:
+            return float("nan")
+        return float(xs[min(int(q * len(xs)), len(xs) - 1)])
 
 
 class ServingEngine:
@@ -143,7 +159,10 @@ class ServingEngine:
                  coordinator: Optional[Coordinator] = None,
                  name: str = "llm0", hw: HardwareProfile = TPU_V5E,
                  want_remote_bytes: float = 0.0, respond_every: int = 4,
-                 mesh=None, faults=None, audit: bool = False):
+                 mesh=None, faults=None, audit: bool = False,
+                 admission: bool = False, admission_headroom: float = 0.9,
+                 prefill_admit_limit: Optional[int] = 4,
+                 slo_ttft_s: Optional[float] = None):
         """Build a serving engine on the unified paged state runtime.
 
         Args:
@@ -189,6 +208,24 @@ class ServingEngine:
                 (donor loss, lease shrink) are applied at the top of each
                 engine step, with live migration / recompute-from-prompt
                 recovery and scheduler budget re-planning.
+            admission: layer the SLO-aware admission controller
+                (``serving/admission.py``) ahead of the scheduler — waiting
+                requests enter the scheduler's view only while the
+                committed set's projected KV-occupancy trajectory (each
+                request priced at its marginal per-plane page cost, growing
+                to its terminal context) stays inside
+                ``admission_headroom`` x the page budget; everything else
+                defers in the queue (never rejected). Composes with
+                ``_replan_capacity``: a lease shrink or donor loss
+                contracts the stability region the next step.
+            admission_headroom: fraction of the page budget the projected
+                trajectory may fill (the rest absorbs projection error).
+            prefill_admit_limit: with admission on, max requests in their
+                prefill phase at once while decode lanes are live
+                (prefill/decode priority mixing; ``None`` = uncapped).
+            slo_ttft_s: optional TTFT SLO in simulated seconds — admissions
+                whose projected prefill completion misses it are counted
+                (``admission.slo_at_risk``), observational only.
             audit: run a full ``InvariantAuditor`` pass after EVERY step
                 (refcounts vs block tables vs tier occupancy vs meter and
                 collective counters) — a debug mode that fails loudly on
@@ -275,6 +312,31 @@ class ServingEngine:
             self.kv.attach_faults(faults)
         self.auditor = InvariantAuditor() if audit else None
 
+        # SLO-aware admission: a one-way gate AHEAD of the scheduler. The
+        # budget is read through the scheduler each step, so a fault
+        # event's _replan_capacity contracts the stability region with no
+        # extra wiring; costs are the schedulers' own marginal per-plane
+        # page vectors plus the FCFS-style terminal footprint.
+        self.admission = None
+        self._eligible_rids: Optional[set] = None
+        if admission:
+            from repro.serving.admission import AdmissionController
+            self.admission = AdmissionController(
+                budget=lambda: np.asarray(self.sched.page_budget,
+                                          np.float64),
+                current_cost=self._page_cost_now,
+                terminal_cost=self._page_cost_fcfs,
+                remaining_tokens=lambda r: (
+                    r.prompt_positions - r.prefill_pos,
+                    r.max_new_tokens - len(r.generated)),
+                headroom=admission_headroom,
+                step_tokens=self.step_tokens,
+                prefill_admit_limit=prefill_admit_limit,
+                slo_ttft_s=slo_ttft_s,
+                step_time=lambda: self.cost.decode_step_time(
+                    self.hw, max(len(self.running), 1), self.max_seq / 2,
+                    self.weight_bytes))
+
     def _shared_discount(self, r: ReqState,
                          chosen: Sequence[ReqState]) -> np.ndarray:
         """PHYSICAL pages this request aliases with the run set chosen so
@@ -299,6 +361,26 @@ class ServingEngine:
         base = self.kv.pages_per_request(
             min(r.ctx_len + self.slice_tokens, self.max_seq))
         return base - self._shared_discount(r, chosen)
+
+    def _page_cost_now(self, r: ReqState,
+                       chosen: Sequence[ReqState] = ()) -> np.ndarray:
+        """Per-plane PHYSICAL pages the request occupies RIGHT NOW (no
+        growth term), marginal against ``chosen`` — the admission
+        controller's trajectory starting point and the occupancy metric."""
+        base = self.kv.pages_per_request(min(r.ctx_len, self.max_seq))
+        return base - self._shared_discount(r, chosen)
+
+    def _occupancy_frac(self) -> float:
+        """Occupied fraction of the per-plane page budget by the running
+        set (max over planes, shared prefixes counted once)."""
+        budget = np.maximum(np.asarray(self.sched.page_budget, np.float64),
+                            1.0)
+        pages = np.zeros(len(self.kv.planes), np.float64)
+        chosen: List[ReqState] = []
+        for r in self.running:
+            pages = pages + self._page_cost_now(r, chosen)
+            chosen.append(r)
+        return float(np.max(pages / budget))
 
     def _page_cost_fcfs(self, r: ReqState,
                         chosen: Sequence[ReqState] = ()) -> np.ndarray:
@@ -428,6 +510,10 @@ class ServingEngine:
                 r.prefill_pos = min(shared, r.prompt_positions - 1)
         if r not in self.waiting:
             self.waiting.append(r)
+        if self.admission is not None:
+            # the victim resets to prefill position 0 AND the stability
+            # region just contracted — it must re-price before re-entry
+            self.admission.forget(rid)
         m.recomputes += 1
         m.recovered_rids.append(rid)
 
@@ -508,7 +594,21 @@ class ServingEngine:
         fault_time = (self._apply_faults() if self.faults is not None
                       else 0.0)
 
-        decision = self.sched.plan(m.steps, self.waiting, self.running)
+        # admission gate: the scheduler only ever sees the eligible subset
+        # of the queue — deferred requests stay waiting (degrade-to-queue)
+        # until completions reopen the stability region
+        m.queue_depth_trace.append(len(self.waiting))
+        if self.admission is not None:
+            eligible, deferred = self.admission.filter(self.waiting,
+                                                       self.running)
+            m.admission_deferrals += len(deferred)
+            self._eligible_rids = {r.rid for r in eligible}
+        else:
+            eligible = self.waiting
+            self._eligible_rids = None
+        m.occupancy_trace.append(self._occupancy_frac())
+
+        decision = self.sched.plan(m.steps, eligible, self.running)
 
         # the step's token budget: one token per decode lane, the remainder
         # handed out as prompt chunks (several requests' chunks per step).
@@ -558,6 +658,8 @@ class ServingEngine:
                 self.running.remove(r)
                 self.finished.append(r)
                 retired.append(r)
+                if self.admission is not None:
+                    self.admission.forget(r.rid)
 
         step_time += self._prefetch_restores(compute_time)
 
@@ -632,7 +734,13 @@ class ServingEngine:
         if not self.prefetch or not (self.waiting or self.running):
             return 0.0
         m = self.metrics
-        nxt = self.sched.peek(m.steps + 1, self.waiting, self.running)
+        # under admission control, prefetch only what the controller would
+        # let the next plan see — restoring a deferred request's pages
+        # would pull unadmitted work LOCAL
+        pool = (self.waiting if self._eligible_rids is None
+                else [r for r in self.waiting
+                      if r.rid in self._eligible_rids])
+        nxt = self.sched.peek(m.steps + 1, pool, self.running)
         t_before = self.pager.meter.sim_time
         for r in nxt.run:
             if r.parked and self.kv.can_restore(r.rid):
@@ -688,7 +796,9 @@ class ServingEngine:
         skip.update(r.rid for r in decision.preempt)
         cands = sorted((r for r in self.waiting
                         if r.rid not in skip and not r.prefilled
-                        and not r.done and r.slot is None),
+                        and not r.done and r.slot is None
+                        and (self._eligible_rids is None
+                             or r.rid in self._eligible_rids)),
                        key=lambda r: (r.arrival, r.rid))
         free = np.asarray([p.aqua.local_free
                            for p in self.kv.planes.values()], np.int64)
