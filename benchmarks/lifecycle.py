@@ -1,0 +1,222 @@
+"""Request-lifecycle benchmark: cancellation reclaim latency, crash-
+consistent snapshot/restore recovery time, and abandonment/deadline
+shedding under load.
+
+Two clocks, as everywhere in this repo:
+
+  * engine     — REAL numerics (smoke model, unified paged runtime):
+                 (A) a request is cancelled out of each lifecycle state
+                 (waiting / prefilling / running) and the benchmark counts
+                 the ADDITIONAL steps until no plane holds its pages —
+                 the acceptance bar is reclamation within one step, with
+                 the full-state auditor confirming zero leaks; (B) an
+                 ``engine_crash`` fault kills the engine mid-stream with a
+                 snapshot journaled at every step boundary, and the run
+                 restarts from the last record — reporting the recovery
+                 time (simulated seconds from the journal point to
+                 completion) and whether the resumed streams finished
+                 bit-identically.
+  * simulator  — paper scale (CodeLlama-34B on A100, CFS over fabric
+                 offload): the fault-recovery trace with 30 % of clients
+                 abandoning (``make_cancel_events``) and with a TTFT SLO
+                 as a hard deadline — what reclaiming torn-down work buys
+                 the survivors.
+
+Writes ``BENCH_lifecycle.json`` next to the repo root; the
+``recovery_time`` / ``reclaim_latency`` keys feed the perf gate
+(``scripts/check_bench_regression.py``).
+
+    PYTHONPATH=src python -m benchmarks.lifecycle
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import codellama_sim, make_requests, pct as _pct
+
+N_REQ = 48
+RATE = 40.0
+CANCEL_FRAC = 0.3
+TTFT_SLO_S = 2.0
+
+
+def measure_engine(arch: str = "qwen1.5-0.5b") -> Dict[str, Dict]:
+    import jax
+    from repro.configs import get_config, smoke_config
+    from repro.core.aqua_tensor import HOST
+    from repro.core.errors import EngineCrashError
+    from repro.core.faults import FaultEvent, FaultInjector, InvariantAuditor
+    from repro.models import api
+    from repro.serving.engine import ServingEngine
+
+    cfg = smoke_config(get_config(arch))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, 1 + rng.integers(0, cfg.vocab_size - 1, 12)))
+               for _ in range(4)]
+
+    def build(faults=None):
+        return ServingEngine(cfg, params, max_running=2, max_seq=64,
+                             scheduler="cfs", slice_tokens=4,
+                             offload_tier=HOST, step_tokens=8,
+                             prefetch=False, faults=faults)
+
+    # -- A: cancel out of each lifecycle state; count the extra steps
+    #    until every plane page of the victim is back on a free list
+    eng = build()
+    rs = [eng.submit(p, 6) for p in prompts]
+    auditor = InvariantAuditor()
+
+    def reclaim_steps(r) -> int:
+        eng.cancel(r.rid)
+        for extra in range(4):
+            if all(r.rid not in p.pages for p in eng.kv.planes.values()):
+                return extra
+            eng.step()
+        return 4
+
+    lat = {"waiting": reclaim_steps(rs[3])}
+    eng.step()
+    pre = next(x for x in (rs[0], rs[1]) if x.lifecycle == "prefilling")
+    lat["prefilling"] = reclaim_steps(pre)
+    other = rs[1] if pre is rs[0] else rs[0]
+    while not other.generated:
+        eng.step()
+    lat["running"] = reclaim_steps(other)
+    leaks = auditor.check(eng.kv, engine=eng)
+    eng.run(500)
+    reclaim = {f"reclaim_latency_steps_{k}": float(v)
+               for k, v in lat.items()}
+    reclaim["reclaim_latency_steps_max"] = float(max(lat.values()))
+    reclaim["invariant_violations"] = float(len(leaks))
+
+    # -- B: crash mid-stream, journal every step boundary, restart from
+    #    the last record, finish — recovery time on the simulated clock
+    base = build()
+    for p in prompts:
+        base.submit(p, 6)
+    mb = base.run(500)
+    want = {tuple(r.prompt_tokens): r.generated for r in base.finished}
+
+    fi = FaultInjector(seed=0, events=[
+        FaultEvent(kind="engine_crash", at_step=4)])
+    eng = build(faults=fi)
+    for p in prompts:
+        eng.submit(p, 6)
+    snap, t_snap = eng.snapshot(), 0.0
+    try:
+        for _ in range(500):
+            snap = eng.snapshot()
+            t_snap = float(eng.metrics.sim_time)
+            eng.step()
+            if not (eng.waiting or eng.running):
+                break
+    except EngineCrashError:
+        pass
+    restored = ServingEngine.restore(cfg, params, snap)
+    mr = restored.run(500)
+    got = {tuple(r.prompt_tokens): r.generated for r in restored.finished}
+    crash = {
+        "recovery_time_s": float(mr.sim_time) - t_snap,
+        "makespan_uninterrupted_s": float(mb.sim_time),
+        "makespan_with_crash_s": float(mr.sim_time),
+        "snapshot_pages": float(sum(len(ps["lps"]) for ps in
+                                    snap["kv"]["planes"].values())),
+        "tokens_bit_identical": float(got == want),
+    }
+    return {"engine_reclaim": reclaim, "engine_crash_restore": crash}
+
+
+def measure_sim() -> Dict[str, Dict]:
+    from repro.core.faults import FaultInjector
+    from repro.core.perfmodel import A100_NVLINK
+    from repro.core.workload import make_cancel_events
+
+    def reqs(**kw):
+        return make_requests(rate=RATE, n=N_REQ, seed=3,
+                             prompt=(300, 1200), gen=(60, 200), **kw)
+
+    def run(rs, faults=None):
+        sim = codellama_sim(A100_NVLINK, "cfs", "fabric", step_tokens=256,
+                            max_running=8, faults=faults)
+        res = sim.run(rs)
+        fin = [r for r in res.requests if r.finish is not None]
+        return sim, {
+            "finished_requests": float(len(fin)),
+            "cancelled_requests": float(sim.cancelled),
+            "deadline_missed": float(sim.deadline_missed),
+            "ttft_p99_s": _pct([r.ttft - r.arrival for r in fin
+                                if r.ttft is not None], 0.99),
+            "rct_p99_s": _pct([r.finish - r.arrival for r in fin], 0.99),
+            "makespan_s": float(max(r.finish for r in fin)),
+        }
+
+    _, free = run(reqs())
+    fi = FaultInjector(seed=7, events=make_cancel_events(
+        reqs(), frac=CANCEL_FRAC, seed=7, mean_wait_s=2.0))
+    sim_ab, ab = run(reqs(), faults=fi)
+    assert ab["cancelled_requests"] > 0
+    # every survivor completes — abandoned work is reclaimed, not leaked
+    assert ab["finished_requests"] + sim_ab.cancelled == N_REQ
+
+    slo = reqs()
+    for r in slo:
+        r.ttft_deadline_s = TTFT_SLO_S
+    _, slo_out = run(slo)
+    slo_out["goodput_frac"] = slo_out["finished_requests"] / N_REQ
+    return {"sim_fault_free": free,
+            f"sim_abandonment_{int(CANCEL_FRAC * 100)}pct": ab,
+            "sim_ttft_slo": slo_out}
+
+
+def measure() -> Dict:
+    out: Dict[str, Dict] = {}
+    out.update(measure_engine())
+    out.update(measure_sim())
+    ab = out[f"sim_abandonment_{int(CANCEL_FRAC * 100)}pct"]
+    out["derived"] = {
+        "reclaim_within_one_step":
+            out["engine_reclaim"]["reclaim_latency_steps_max"] <= 1.0,
+        "crash_restore_bit_identical":
+            out["engine_crash_restore"]["tokens_bit_identical"] == 1.0,
+        "crash_makespan_overhead_x":
+            out["engine_crash_restore"]["makespan_with_crash_s"]
+            / out["engine_crash_restore"]["makespan_uninterrupted_s"],
+        "abandonment_rct_p99_vs_fault_free_x":
+            ab["rct_p99_s"] / out["sim_fault_free"]["rct_p99_s"],
+    }
+    return out
+
+
+def run(m: Dict | None = None):
+    m = m or measure()
+    rows = []
+    for scenario, vals in m.items():
+        if scenario == "derived" or not isinstance(vals, dict):
+            continue
+        for k, v in vals.items():
+            rows.append((f"lifecycle/{scenario}/{k}", float(v), ""))
+    for k, v in m["derived"].items():
+        rows.append((f"lifecycle/{k}", float(v),
+                     "reclaimed vs fault-free"))
+    return rows
+
+
+def main():
+    m = measure()
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_lifecycle.json")
+    with open(out, "w") as f:
+        json.dump(m, f, indent=2, sort_keys=True)
+    print(f"# wrote {os.path.normpath(out)}")
+    print("name,value,derived")
+    for name, val, derived in run(m):
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

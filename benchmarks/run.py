@@ -3,6 +3,7 @@
 Prints ``name,value,derived`` CSV (value is seconds / GB/s / ratio as the
 name indicates; ``us_per_call`` rows come from kernel_bench).
 Usage:  PYTHONPATH=src python -m benchmarks.run [--skip-kernels]
+                                                [--skip-lifecycle]
 """
 from __future__ import annotations
 
@@ -20,6 +21,9 @@ def main() -> None:
     if "--skip-kernels" not in sys.argv:
         from benchmarks.kernel_bench import run as krun
         rows += krun()
+    if "--skip-lifecycle" not in sys.argv:
+        from benchmarks.lifecycle import run as lrun
+        rows += lrun()
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")

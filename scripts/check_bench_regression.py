@@ -10,6 +10,8 @@ and FAILS when a gated metric regressed by more than the threshold:
   * burst tail latency       — leaf keys containing ``ttft_p99``
     (``admission_off`` segments exempt: the baseline diverging is the
     benchmark's POINT, not a regression)
+  * crash-restart cost       — leaf keys containing ``recovery_time``
+  * cancel teardown cost     — leaf keys containing ``reclaim_latency``
 
 Only INCREASES fail (these metrics are all lower-is-better), only beyond
 ``--threshold`` (default 15%) relative, and only above a small absolute
@@ -34,7 +36,8 @@ import os
 import subprocess
 import sys
 
-GATED_SUBSTRINGS = ("step_time_p99", "launches_per_step", "ttft_p99")
+GATED_SUBSTRINGS = ("step_time_p99", "launches_per_step", "ttft_p99",
+                    "recovery_time", "reclaim_latency")
 EXEMPT_SEGMENTS = ("per_request", "baseline", "no_speculation",
                    "admission_off")
 ABS_FLOOR = 1e-9          # seconds / launches below this never gate

@@ -87,6 +87,37 @@ class InvariantViolation(AquaError):
                          f"\n  - {lines}")
 
 
+class CancelledError(AquaError):
+    """The request was torn down before completion — by a client cancel
+    (``ServingEngine.cancel``), a missed deadline (the engine's per-step
+    deadline sweep), or a seeded ``"cancel"`` fault event.
+
+    Cancellation is a NORMAL lifecycle outcome, not a fault: the engine's
+    recovery policy is the same teardown the finish ladder performs (free
+    the batch slot, release every plane page through refcounts, un-pin
+    prefetched restores, ``admission.forget``) plus publication of the
+    completed prefix pages into the radix cache so the work is not wasted.
+    Raised only on the RESULT path (``ServingEngine.output``) when a caller
+    asks for the tokens of a cancelled request — never from ``cancel``
+    itself, which is idempotent and returns a bool."""
+
+    def __init__(self, message: str, *, rid: Optional[int] = None,
+                 reason: Optional[str] = None):
+        super().__init__(message)
+        self.rid = rid
+        self.reason = reason
+
+
+class EngineCrashError(AquaError):
+    """A seeded ``"engine_crash"`` fault event fired: the serving process
+    dies mid-stream, losing every page table, the radix cache and all
+    in-flight state. The recovery policy is crash-consistent restart —
+    discard the crashed engine and rebuild from the latest
+    ``ServingEngine.snapshot()`` journal via ``ServingEngine.restore``;
+    greedy decode makes the resumed streams bit-identical, and the recovery
+    time is the trajectory ``BENCH_lifecycle.json`` tracks."""
+
+
 class CapacityError(AquaError):
     """A serving unit cannot physically hold the configured workload (e.g.
     the model weights alone exceed device memory) — a sizing mistake caught

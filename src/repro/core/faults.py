@@ -63,14 +63,20 @@ from repro.core.errors import InvariantViolation
 class FaultEvent:
     """One scheduled control-plane fault.
 
-    kind: ``"donor_loss"`` (the peer dies holding its slab) or
-    ``"lease_shrink"`` (the donor reclaims ``frac`` of its slots).
+    kind: ``"donor_loss"`` (the peer dies holding its slab),
+    ``"lease_shrink"`` (the donor reclaims ``frac`` of its slots),
+    ``"cancel"`` (the client abandons request ``rid`` — engine/simulator
+    tear it out of whatever lifecycle state it is in and reclaim its
+    pages), or ``"engine_crash"`` (the serving process dies: the engine
+    raises :class:`~repro.core.errors.EngineCrashError` and the harness
+    recovers via ``ServingEngine.restore`` from the latest snapshot).
     Exactly one of ``at_step`` (engine-step clock) / ``at_time`` (analytic
     seconds) should be set; the matching clock's poll fires it once.
     """
     kind: str
     donor: str = ""
     frac: float = 1.0
+    rid: Optional[int] = None
     at_step: Optional[int] = None
     at_time: Optional[float] = None
     fired: bool = field(default=False, compare=False)
@@ -390,4 +396,19 @@ class InvariantAuditor:
             if np.any(np.asarray(engine.sched.page_budget) > cap):
                 bad.append(f"scheduler budget {engine.sched.page_budget} "
                            f"exceeds physical tier capacity {cap}")
+            # no pin survives its referencer: every ACTIVE (pin-holding)
+            # rid must still be a live engine request — a retired/cancelled
+            # rid left in _active would hold its pages pinned LOCAL forever
+            live = ({r.rid for r in engine.running}
+                    | {r.rid for r in engine.waiting})
+            orphans = sorted(set(runtime._active) - live)
+            if orphans:
+                bad.append(f"active (pinned) rids {orphans[:8]} have no "
+                           "live request — a pin survived its referencer")
+            # prefetched restores must reference live waiting requests only
+            stale = sorted(r.rid for r in getattr(engine, "_prefetched", [])
+                           if r.rid not in live)
+            if stale:
+                bad.append(f"prefetched restore(s) for retired rid(s) "
+                           f"{stale[:8]} — release must clear prefetch pins")
         return bad

@@ -46,6 +46,13 @@ class Request:
     # other member's pages keep it pinned (mirrors PagedStateRuntime).
     prefix_group: Optional[int] = None
     shared_prefix_len: int = 0
+    # request lifecycle (mirrors the engine's ReqState): an e2e / first-token
+    # deadline in seconds after arrival, enforced by the per-round sweep, and
+    # the torn-down marker a "cancel" FaultEvent or deadline expiry stamps
+    deadline_s: Optional[float] = None
+    ttft_deadline_s: Optional[float] = None
+    cancelled: bool = False
+    cancel_reason: Optional[str] = None   # "fault" | "deadline"
     # progress
     generated: int = 0
     prefill_pos: int = 0             # prompt tokens prefilled so far (chunked)
@@ -150,6 +157,10 @@ class ServingSimulator:
         self.leg_retries = 0
         self.donor_losses = 0
         self.lease_shrinks = 0
+        # request-lifecycle counters (mirror EngineMetrics): teardowns
+        # before completion and the deadline-expiry subset
+        self.cancelled = 0
+        self.deadline_missed = 0
         self._host_spill = 0.0
         # prefix sharing only exists for all-token-plane families: a
         # recurrent state page summarizes the whole prefix and cannot be
@@ -266,6 +277,22 @@ class ServingSimulator:
                         self.lease_shrinks += 1
                         self._host_spill = min(
                             1.0, self._host_spill + ev.frac)
+                    elif ev.kind == "cancel":
+                        # client abandonment (make_cancel_events): tear the
+                        # named request out of whichever pool holds it —
+                        # same schedule, both clocks
+                        for pool in (running, waiting, pending):
+                            v = next((x for x in pool if x.rid == ev.rid),
+                                     None)
+                            if v is None:
+                                continue
+                            pool.remove(v)
+                            v.cancelled, v.cancel_reason = True, "fault"
+                            v.resident = False
+                            self.cancelled += 1
+                            if self.admission is not None:
+                                self.admission.forget(v.rid)
+                            break
             # admit arrivals. Prefix sharing adopts at arrival (mirroring
             # the engine's submit-time index lookup): an arriving member of
             # a prefix group whose shared prefix some member already wrote
@@ -299,6 +326,24 @@ class ServingSimulator:
                             self.cache_hits += 1
                             self.cache_hit_tokens += skip
                 waiting.append(r)
+            # deadline sweep (mirrors the engine's _shed_expired): expired
+            # waiters are shed before admission can see them, expired
+            # runners drop their residency the same round. TTFT deadlines
+            # bind only until the first token landed.
+            for r in list(waiting) + list(running):
+                age = t - r.arrival
+                ttft_miss = (r.ttft_deadline_s is not None and r.ttft is None
+                             and age > r.ttft_deadline_s)
+                e2e_miss = r.deadline_s is not None and age > r.deadline_s
+                if not (ttft_miss or e2e_miss):
+                    continue
+                (waiting if r in waiting else running).remove(r)
+                r.cancelled, r.cancel_reason = True, "deadline"
+                r.resident = False
+                self.cancelled += 1
+                self.deadline_missed += 1
+                if self.admission is not None:
+                    self.admission.forget(r.rid)
             if not running and not waiting:
                 t = pending[0].arrival
                 continue

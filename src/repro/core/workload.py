@@ -190,6 +190,33 @@ def make_multi_tenant_requests(n: int, n_tenants: int = 6, seed: int = 0,
     return reqs
 
 
+def make_cancel_events(requests: Sequence[Request], *, frac: float = 0.2,
+                       seed: int = 0, mean_wait_s: float = 5.0) -> List:
+    """Seedable client-abandonment schedule for a request stream.
+
+    A ``frac`` subset of ``requests`` is cancelled ``Exp(mean_wait_s)``
+    seconds after its arrival — the impatient-client model of Ao et al.,
+    where abandoned work that is NOT reclaimed is what drives congestion
+    collapse. Returns ``FaultEvent(kind="cancel", rid=..., at_time=...)``
+    sorted by fire time; both clocks consume it (the simulator via
+    ``due_events(now=t)``, the engine via its dual-clock fault poll). The
+    schedule is a pure function of the arguments, like every generator in
+    this module.
+    """
+    from repro.core.faults import FaultEvent
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"frac={frac} not in [0, 1]")
+    rng = np.random.default_rng((seed, 3))
+    events = []
+    for r in requests:
+        if rng.random() < frac:
+            wait = float(rng.exponential(mean_wait_s))
+            events.append(FaultEvent(kind="cancel", rid=r.rid,
+                                     at_time=r.arrival + wait))
+    events.sort(key=lambda ev: ev.at_time)
+    return events
+
+
 def prompt_tokens_for(requests: Sequence[Request], *, vocab: int = 251,
                       seed: int = 0) -> Dict[int, List[int]]:
     """Concrete token ids for a generated stream, for the REAL engine.

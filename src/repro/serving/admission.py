@@ -87,6 +87,20 @@ class AdmissionController:
             is discretized into a fixed number of bins spanning the
             horizon (peaks are checked per bin, ramps rounded UP a bin —
             conservative), so ``filter``'s cost is independent of horizon.
+        order_key: candidate-ordering key. Default is arrival order
+            ``(arrival, rid)``; the engine passes an earliest-deadline-first
+            key so deadline-carrying requests are priced (and admitted)
+            before slack ones — urgency, not just age, decides who enters
+            the region first.
+        deadline_of: ``request -> Optional[seconds]`` — the request's
+            REMAINING end-to-end deadline slack (``None`` = no deadline).
+            With ``step_time`` also given, a candidate whose projected
+            finish lies past its remaining slack is DOOMED — it would hold
+            pages only to be shed at expiry — so it is deferred and, more
+            importantly, EXCLUDED from the projected-occupancy trajectory:
+            work that will miss anyway must not shrink the region for work
+            that can still make it. The engine's deadline sweep reclaims
+            the doomed request once its clock actually runs out.
 
     Raises:
         AdmissionError: invalid configuration (bad headroom/horizon). The
@@ -101,7 +115,9 @@ class AdmissionController:
                  prefill_admit_limit: Optional[int] = 4,
                  slo_ttft_s: Optional[float] = None,
                  step_time: Optional[Callable[[], float]] = None,
-                 horizon: int = 4096):
+                 horizon: int = 4096,
+                 order_key: Optional[Callable] = None,
+                 deadline_of: Optional[Callable] = None):
         if not 0.0 < headroom <= 1.0:
             raise AdmissionError(f"headroom={headroom} not in (0, 1]")
         if horizon < 1:
@@ -118,6 +134,8 @@ class AdmissionController:
         self.prefill_admit_limit = prefill_admit_limit
         self.slo_ttft_s = slo_ttft_s
         self._step_time = step_time
+        self._order_key = order_key or (lambda r: (r.arrival, r.rid))
+        self._deadline_of = deadline_of
         self.horizon = int(horizon)
         # fixed-resolution projection: `_bins` samples across the horizon
         # keep the per-candidate cost O(bins) no matter how long requests
@@ -129,6 +147,7 @@ class AdmissionController:
         self.admitted_total = 0
         self.deferred_total = 0          # defer decisions (per filter call)
         self.slo_at_risk = 0
+        self.deadline_doomed = 0         # deferrals because finish > slack
         self.occupancy_frac = 0.0        # committed t=0 occupancy / budget
         self.projected_peak_frac = 0.0   # committed trajectory peak / budget
         self.decisions: Deque[Dict] = deque(maxlen=4096)
@@ -217,17 +236,26 @@ class AdmissionController:
         self.occupancy_frac = float(np.max(traj[0] / np.maximum(budget, 1.0)))
 
         n_prefilling = n_prefill_live
-        for r in sorted(candidates, key=lambda r: (r.arrival, r.rid)):
+        for r in sorted(candidates, key=self._order_key):
             mix_ok = (self.prefill_admit_limit is None or not any_decode
                       or n_prefilling < self.prefill_admit_limit)
             c_now, c_term, fin = self._curve(r, chosen,
                                              max(n_prefilling, 1))
+            # a candidate that cannot finish inside its deadline slack is
+            # excluded from the trajectory: admitting it would spend region
+            # on work the deadline sweep will shed anyway
+            doomed = False
+            if self._deadline_of is not None and self._step_time is not None:
+                slack = self._deadline_of(r)
+                if slack is not None and fin * self._step_time() > slack:
+                    doomed = True
+                    self.deadline_doomed += 1
             cand = self._add_curve(traj.copy(), c_now, c_term, fin)
             fits = bool(np.all(cand.max(axis=0) <= region))
-            admit = fits and mix_ok
+            admit = fits and mix_ok and not doomed
             self.decisions.append({
                 "rid": r.rid, "admitted": admit, "fits": fits,
-                "mix_ok": mix_ok, "cost_now": c_now.copy(),
+                "mix_ok": mix_ok, "doomed": doomed, "cost_now": c_now.copy(),
                 "occupancy_before": traj[0].copy(), "budget": budget.copy(),
                 "projected_peak": cand.max(axis=0).copy()})
             if admit:
@@ -252,7 +280,7 @@ class AdmissionController:
         if not running and not eligible and deferred:
             # progress floor: an idle system must not deadlock behind a
             # request whose terminal footprint alone exceeds the region
-            head = min(deferred, key=lambda r: (r.arrival, r.rid))
+            head = min(deferred, key=self._order_key)
             deferred.remove(head)
             eligible.append(head)
             self._admitted.add(head.rid)

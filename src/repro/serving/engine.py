@@ -62,20 +62,20 @@ donor pools at the iteration boundary.
 """
 from __future__ import annotations
 
-import itertools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields as dataclass_fields
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.aqua_tensor import REMOTE
+from repro.core.aqua_tensor import HOST, REMOTE
 from repro.core.coordinator import Coordinator
 # re-exported for backward compatibility: SchedulingInvariantError predates
 # the typed hierarchy in core/errors.py and callers import it from here
-from repro.core.errors import SchedulingInvariantError  # noqa: F401
+from repro.core.errors import (CancelledError, EngineCrashError,
+                               SchedulingInvariantError)  # noqa: F401
 from repro.core.faults import InvariantAuditor
 from repro.core.perfmodel import (HardwareProfile, ModelCost, TPU_V5E,
                                   overlapped_transfer_time)
@@ -132,14 +132,34 @@ class EngineMetrics:
     queue_depth_trace: List[int] = field(default_factory=list)
     occupancy_trace: List[float] = field(default_factory=list)
     admission_deferrals: int = 0
+    # request-lifecycle accounting: submissions, teardowns before
+    # completion (client cancels + deadline expiries + fault cancels),
+    # the deadline-expiry subset, requests parked by a graceful drain,
+    # and no-progress watchdog escalations into the recovery ladder
+    submitted: int = 0
+    cancelled: int = 0
+    deadline_missed: int = 0
+    drained: int = 0
+    watchdog_trips: int = 0
 
-    def ttft_quantile(self, q: float) -> float:
+    def ttft_quantile(self, q: float, *, censored: int = 0) -> float:
         """TTFT quantile on the simulated clock (nan when nothing finished
-        a first token yet) — p50/p99 reporting for the burst benchmarks."""
+        a first token yet) — p50/p99 reporting for the burst benchmarks.
+
+        ``censored`` makes right-censoring EXPLICIT instead of silently
+        excluded: that many submitted-but-never-first-token requests
+        (cancelled, expired, still queued at measurement time) are counted
+        as +inf observations, so a quantile landing in the censored tail
+        returns ``inf`` — the honest answer when e.g. p99 asks about a
+        request that never got a first token. The engine's own count is
+        ``metrics.submitted - len(metrics.ttft)``. The default (0)
+        preserves the historical finished-only quantile."""
         xs = sorted(self.ttft.values())
-        if not xs:
+        n = len(xs) + max(int(censored), 0)
+        if n == 0:
             return float("nan")
-        return float(xs[min(int(q * len(xs)), len(xs) - 1)])
+        i = min(int(q * n), n - 1)
+        return float(xs[i]) if i < len(xs) else float("inf")
 
 
 class ServingEngine:
@@ -162,7 +182,8 @@ class ServingEngine:
                  mesh=None, faults=None, audit: bool = False,
                  admission: bool = False, admission_headroom: float = 0.9,
                  prefill_admit_limit: Optional[int] = 4,
-                 slo_ttft_s: Optional[float] = None):
+                 slo_ttft_s: Optional[float] = None,
+                 watchdog_steps: Optional[int] = None):
         """Build a serving engine on the unified paged state runtime.
 
         Args:
@@ -226,6 +247,13 @@ class ServingEngine:
             slo_ttft_s: optional TTFT SLO in simulated seconds — admissions
                 whose projected prefill completion misses it are counted
                 (``admission.slo_at_risk``), observational only.
+            watchdog_steps: flag any RESIDENT request whose combined
+                prefill+decode progress hasn't advanced for this many
+                steps (a starved prefill behind a saturated decode batch,
+                a fault-wedged restore) and escalate it through the
+                recovery ladder's recompute rung (``_recover_lost``:
+                release, requeue, recompute) so the slot it wedged comes
+                back. ``None`` (default) disables the watchdog.
             audit: run a full ``InvariantAuditor`` pass after EVERY step
                 (refcounts vs block tables vs tier occupancy vs meter and
                 collective counters) — a debug mode that fails loudly on
@@ -305,7 +333,33 @@ class ServingEngine:
         self.finished: List[ReqState] = []
         self._prefetched: List[ReqState] = []
         self.metrics = EngineMetrics()
-        self._rid = itertools.count()
+        self._next_rid = 0
+        # request-lifecycle state: drain gate, watchdog progress marks
+        self.watchdog_steps = watchdog_steps
+        self._draining = False
+        self._watch: Dict[int, tuple] = {}
+        # constructor knobs a crash-consistent snapshot must carry so
+        # `restore` can rebuild an equivalently-sized engine. The
+        # local-pages knob only sizes TOKEN planes (state-plane pools
+        # derive from max_running), so read it back off one of those.
+        tok_plane = next((p for p in self.kv.planes.values()
+                          if p.kind == "tokens"), None)
+        first_plane = next(iter(self.kv.planes.values()))
+        self._snap_knobs = dict(
+            max_running=max_running, max_seq=max_seq, scheduler=scheduler,
+            slice_tokens=slice_tokens, offload_tier=offload_tier,
+            kv_page_tokens=self.kv.page_tokens,
+            kv_local_pages=(int(tok_plane.aqua.local_pool.shape[0])
+                            if tok_plane is not None else None),
+            kv_host_pages=int(first_plane.aqua.host_pool.shape[0]),
+            prefix_sharing=self.kv.sharing,
+            prefix_cache=bool(getattr(self.kv, "caching", False)),
+            paged_impl=paged_impl, step_tokens=step_tokens,
+            prefetch=prefetch, spec_chunk_ahead=spec_chunk_ahead,
+            name=name, admission=admission,
+            admission_headroom=admission_headroom,
+            prefill_admit_limit=prefill_admit_limit,
+            slo_ttft_s=slo_ttft_s, watchdog_steps=watchdog_steps)
 
         self.faults = faults
         if faults is not None:
@@ -335,7 +389,22 @@ class ServingEngine:
                 slo_ttft_s=slo_ttft_s,
                 step_time=lambda: self.cost.decode_step_time(
                     self.hw, max(len(self.running), 1), self.max_seq / 2,
-                    self.weight_bytes))
+                    self.weight_bytes),
+                # earliest-deadline-first candidate order: urgency, not
+                # just age, decides who prices against the region first —
+                # deadline-free requests keep their arrival order after
+                # every deadline-carrying one
+                order_key=lambda r: (
+                    (r.arrival + r.deadline_s)
+                    if getattr(r, "deadline_s", None) is not None
+                    else float("inf"), r.arrival, r.rid),
+                # remaining e2e slack — a candidate whose projected finish
+                # exceeds it is excluded from the occupancy trajectory
+                # (work that will miss anyway must not crowd out work that
+                # can still make it)
+                deadline_of=lambda r: (
+                    None if getattr(r, "deadline_s", None) is None
+                    else r.deadline_s - (self.metrics.sim_time - r.arrival)))
 
     def _shared_discount(self, r: ReqState,
                          chosen: Sequence[ReqState]) -> np.ndarray:
@@ -396,7 +465,8 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def submit(self, prompt_tokens: Sequence[int], max_new_tokens: int,
                arrival: float = 0.0, lora_id: Optional[int] = None,
-               prefix_embeds=None) -> ReqState:
+               prefix_embeds=None, deadline_s: Optional[float] = None,
+               ttft_deadline_s: Optional[float] = None) -> ReqState:
         """Queue a request for generation.
 
         If prefix sharing is enabled (the default on all-token-plane
@@ -420,6 +490,15 @@ class ServingEngine:
                 occupying the prompt's first positions; omitted, it defaults
                 to zeros (the stub frontend's null image). VLM requests
                 never share prefixes (the image is not in the hash).
+            deadline_s: end-to-end deadline in simulated seconds AFTER
+                ``arrival``; once exceeded, the per-step deadline sweep
+                cancels the request (terminal state ``"expired"``) and
+                reclaims its pages the same step. With admission on, the
+                controller also orders candidates earliest-deadline-first
+                and excludes projected-to-miss work from its occupancy
+                trajectory.
+            ttft_deadline_s: first-token deadline on the same base —
+                enforced only until the first token lands.
 
         Returns:
             The queued :class:`ReqState` (its ``generated`` list fills in
@@ -428,8 +507,11 @@ class ServingEngine:
         Raises:
             ValueError: ``prefix_embeds`` passed to a non-VLM config.
         """
-        r = ReqState(next(self._rid), arrival, list(map(int, prompt_tokens)),
-                     max_new_tokens, lora_id=lora_id)
+        r = ReqState(self._next_rid, arrival, list(map(int, prompt_tokens)),
+                     max_new_tokens, lora_id=lora_id,
+                     deadline_s=deadline_s, ttft_deadline_s=ttft_deadline_s)
+        self._next_rid += 1
+        self.metrics.submitted += 1
         if self.cfg.n_prefix_embeds:
             P, d = self.cfg.n_prefix_embeds, self.cfg.d_model
             if prefix_embeds is None:
@@ -467,6 +549,183 @@ class ServingEngine:
             self._replan_capacity()
 
     # ------------------------------------------------------------------
+    # lifecycle transition helpers — the ONLY places engine bookkeeping
+    # state (batch slots, page ownership, the finished list) may change.
+    # Every exit path (finish ladder, cancel, deadline expiry, lost-page
+    # recovery, preemption) goes through these, and a CI grep-guard pins
+    # each mutation pattern to exactly one occurrence in this file.
+    # ------------------------------------------------------------------
+    def _free_slot(self, r: ReqState) -> None:
+        """Return a request's batch slot to the pool (no-op if slotless)."""
+        if r.slot is not None:
+            self._free_slots.append(r.slot)
+            r.slot = None
+
+    def _release_pages(self, r: ReqState) -> None:
+        """Release every plane page a request holds, defensively clearing
+        any prefetched restore first: ``_prefetch_restores`` may have
+        restored (and pinned) this rid's pages for the NEXT plan in the
+        same step it finishes or cancels — the release drops the pin via
+        the active set either way, and the stale ``_prefetched`` entry
+        must not re-park a retired rid at the next ``_place``."""
+        self._prefetched = [p for p in self._prefetched if p.rid != r.rid]
+        self.kv.release(r.rid)
+
+    def _retire(self, r: ReqState, terminal: str,
+                reason: Optional[str] = None) -> None:
+        """The one lifecycle exit: free the slot, release the pages, stamp
+        the terminal state (``finished`` / ``cancelled`` / ``expired``) and
+        move the request to ``finished``. The caller removes it from
+        ``running``/``waiting`` first."""
+        m = self.metrics
+        self._free_slot(r)
+        self._release_pages(r)
+        r.parked = None
+        r.prefix_embeds = None           # don't pin VLM embeds forever
+        r.terminal = terminal
+        r.cancel_reason = reason
+        r.finish_step = m.steps
+        self.finished.append(r)
+        self._watch.pop(r.rid, None)
+        if self.admission is not None:
+            self.admission.forget(r.rid)
+
+    # ------------------------------------------------------------------
+    # cancellation, deadlines, drain, watchdog
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int, *, reason: str = "client") -> bool:
+        """Tear a request out of ANY lifecycle state — waiting, prefilling
+        mid-chunk, decoding, parked, mid-prefetch, or speculated — and
+        reclaim everything it holds, within the current step.
+
+        Mirrors the finish ladder exactly (slot back to the pool, every
+        plane page released through refcounts, prefetched restores
+        un-pinned, ``admission.forget``), with one addition: the completed
+        page-aligned prompt prefix is PUBLISHED into the radix index
+        before teardown, so with the prefix cache on the prefill work
+        already done is retained for future sharers instead of freed.
+
+        ``reason`` is recorded on the request (``"client"``, ``"deadline"``,
+        ``"fault"``); a ``"deadline"`` cancel stamps the ``"expired"``
+        terminal state. Idempotent: returns False when ``rid`` is unknown
+        or already retired, True when the request was torn down. Callers
+        that need the tokens-so-far read them off the returned
+        :class:`ReqState` in ``finished``; :meth:`output` raises the typed
+        :class:`~repro.core.errors.CancelledError` for them."""
+        r = next((x for x in self.running + self.waiting if x.rid == rid),
+                 None)
+        if r is None:
+            return False
+        if self.kv.sharing and not r.n_prefix:
+            # salvage before teardown: cache-publish the full prompt blocks
+            # this request already prefilled (release then free_to_caches
+            # them instead of dropping the work)
+            self.kv.register_prefix(r.rid, r.prefill_pos)
+        if r in self.running:
+            self.running.remove(r)
+        else:
+            self.waiting.remove(r)
+        self._retire(r, "expired" if reason == "deadline" else "cancelled",
+                     reason=reason)
+        self.metrics.cancelled += 1
+        return True
+
+    def output(self, rid: int) -> List[int]:
+        """Generated tokens of a RETIRED request — the client result path.
+
+        Raises:
+            CancelledError: the request was cancelled or expired (the
+                typed signal carries ``rid`` and the recorded reason).
+            ValueError: ``rid`` is unknown or still in flight.
+        """
+        r = next((x for x in self.finished if x.rid == rid), None)
+        if r is None:
+            raise ValueError(f"request {rid} is unknown or still in flight")
+        if r.terminal in ("cancelled", "expired"):
+            raise CancelledError(
+                f"request {rid} was {r.terminal} "
+                f"({r.cancel_reason or 'no reason recorded'})",
+                rid=rid, reason=r.cancel_reason)
+        return list(r.generated)
+
+    def _shed_expired(self) -> None:
+        """Enforce both deadline clocks at the top of the step, BEFORE the
+        admission gate sees the queue: an expired waiter is shed before it
+        can be admitted, an expired runner is cancelled and its pages
+        reclaimed the same step. TTFT deadlines only bind until the first
+        token landed."""
+        m = self.metrics
+        for r in list(self.waiting) + list(self.running):
+            age = m.sim_time - r.arrival
+            ttft_miss = (r.ttft_deadline_s is not None
+                         and r.rid not in m.ttft
+                         and age > r.ttft_deadline_s)
+            e2e_miss = r.deadline_s is not None and age > r.deadline_s
+            if (ttft_miss or e2e_miss) \
+                    and self.cancel(r.rid, reason="deadline"):
+                m.deadline_missed += 1
+
+    def _watchdog(self) -> None:
+        """Flag resident requests making NO prefill+decode progress for
+        ``watchdog_steps`` consecutive steps — a prefill starved to
+        zero-token chunks behind a saturated decode batch holds its slot
+        and pages indefinitely — and escalate through the recovery
+        ladder's recompute rung (:meth:`_recover_lost`): pages released,
+        request requeued, context recomputed bit-identically on its next
+        admission. The lower rungs (bounded leg retry, live migration)
+        already ran inside the data plane; a request still stuck after
+        them has nothing left to wait for."""
+        m = self.metrics
+        for r in list(self.running):
+            prog = r.prefill_pos + len(r.generated)
+            last, since = self._watch.get(r.rid, (None, m.steps))
+            if prog != last:
+                self._watch[r.rid] = (prog, m.steps)
+            elif m.steps - since >= self.watchdog_steps:
+                m.watchdog_trips += 1
+                self._watch.pop(r.rid, None)
+                self._recover_lost(r.rid)
+
+    def drain(self) -> int:
+        """Graceful drain: stop admitting work and park every restorable
+        request to HOST, returning (synchronously) once the engine is
+        quiescent — no batch slot held, no active pins, no in-flight
+        prefetch. Queued requests stay queued; in-flight ones keep their
+        progress parked on the host tier and resume bit-identically after
+        :meth:`resume` (park/restore round-trips are exact). While
+        draining, ``step()`` admits nothing, speculates nothing and
+        prefetches nothing. Returns the number of requests parked; the
+        ``drained`` metric accrues it.
+
+        A drained engine is also the cheapest snapshot point — every
+        payload already sits on the slow tier — though :meth:`snapshot`
+        works mid-stream too."""
+        m = self.metrics
+        self._draining = True
+        n = 0
+        for r in list(self.running):
+            self.kv.park(r.rid, r.resident_tokens, prefer=HOST)
+            r.parked = True
+            self._free_slot(r)
+            self.running.remove(r)
+            self.waiting.append(r)
+            n += 1
+        self._prefetched = []
+        for r in self.waiting:
+            # prefetched restores / speculated chunks left pages active
+            if r.rid in self.kv._active:
+                self.kv.park(r.rid, r.resident_tokens, prefer=HOST)
+                r.parked = True
+                n += 1
+        m.drained += n
+        return n
+
+    def resume(self) -> None:
+        """Reopen admission after :meth:`drain`; the next plan restores
+        the parked set through the normal placement path."""
+        self._draining = False
+
+    # ------------------------------------------------------------------
     # fault application and recovery
     # ------------------------------------------------------------------
     def _replan_capacity(self):
@@ -492,12 +751,10 @@ class ServingEngine:
                  None)
         if r is None or r.done:
             return
-        if r.slot is not None:
-            self._free_slots.append(r.slot)
-            r.slot = None
+        self._free_slot(r)
         if r in self.running:
             self.running.remove(r)
-        self.kv.release(r.rid)
+        self._release_pages(r)
         r.parked = None
         r.prefill_pos = 0
         r.generated = []
@@ -518,16 +775,33 @@ class ServingEngine:
         m.recovered_rids.append(rid)
 
     def _apply_faults(self) -> float:
-        """Apply the injector's step-scheduled fault events, then re-plan
-        admission capacity. A ``lease_shrink`` live-migrates the reclaimed
-        slots' pages to surviving donors or the host tier; a ``donor_loss``
-        flips the donor's pages to LOST and sends every victim request
-        through :meth:`_recover_lost`. Returns the metered transfer time
-        the recovery work cost (migration page moves)."""
+        """Apply the injector's scheduled fault events, then re-plan
+        admission capacity. The poll is DUAL-CLOCK — ``at_step`` events
+        fire on the engine's step counter, ``at_time`` events on its
+        simulated clock — so one schedule (e.g. ``make_cancel_events``)
+        drives the engine and the byte-clock simulator alike. A
+        ``lease_shrink`` live-migrates the reclaimed slots' pages to
+        surviving donors or the host tier; a ``donor_loss`` flips the
+        donor's pages to LOST and sends every victim request through
+        :meth:`_recover_lost`; a ``cancel`` tears the named request down
+        through :meth:`cancel`; an ``engine_crash`` raises
+        :class:`~repro.core.errors.EngineCrashError` — the harness
+        discards this engine and rebuilds from the latest
+        :meth:`snapshot` via :meth:`restore`. Returns the metered
+        transfer time the recovery work cost (migration page moves)."""
         m = self.metrics
         t_before = self.pager.meter.sim_time
         fired = False
-        for ev in self.faults.due_events(step=m.steps):
+        for ev in self.faults.due_events(step=m.steps, now=m.sim_time):
+            if ev.kind == "engine_crash":
+                raise EngineCrashError(
+                    f"{self.name}: seeded engine_crash fired at step "
+                    f"{m.steps} — rebuild from the latest snapshot "
+                    "(ServingEngine.restore)")
+            if ev.kind == "cancel":
+                if ev.rid is not None:
+                    self.cancel(int(ev.rid), reason="fault")
+                continue
             fired = True
             if ev.kind == "lease_shrink":
                 m.lease_shrinks += 1
@@ -593,12 +867,17 @@ class ServingEngine:
             self._respond()
         fault_time = (self._apply_faults() if self.faults is not None
                       else 0.0)
+        self._shed_expired()
 
         # admission gate: the scheduler only ever sees the eligible subset
         # of the queue — deferred requests stay waiting (degrade-to-queue)
-        # until completions reopen the stability region
+        # until completions reopen the stability region. While draining,
+        # NOTHING is eligible: the queue holds until resume().
         m.queue_depth_trace.append(len(self.waiting))
-        if self.admission is not None:
+        if self._draining:
+            eligible = []
+            self._eligible_rids = set()
+        elif self.admission is not None:
             eligible, deferred = self.admission.filter(self.waiting,
                                                        self.running)
             m.admission_deferrals += len(deferred)
@@ -650,16 +929,12 @@ class ServingEngine:
         retired = []
         for r in list(self.running):
             if r.done:
-                r.finish_step = m.steps
-                self._free_slots.append(r.slot)
-                r.slot = None
-                r.prefix_embeds = None       # don't pin VLM embeds forever
-                self.kv.release(r.rid)
                 self.running.remove(r)
-                self.finished.append(r)
+                self._retire(r, "finished")
                 retired.append(r)
-                if self.admission is not None:
-                    self.admission.forget(r.rid)
+
+        if self.watchdog_steps is not None:
+            self._watchdog()
 
         step_time += self._prefetch_restores(compute_time)
 
@@ -708,8 +983,7 @@ class ServingEngine:
             # newest generated token's state lands at its next decode step
             self.kv.park(r.rid, r.resident_tokens, prefer=self.offload_tier)
             r.parked = True
-            self._free_slots.append(r.slot)
-            r.slot = None
+            self._free_slot(r)
             m.preemptions += 1
         for r in decision.run:
             if r.slot is not None:
@@ -977,3 +1251,133 @@ class ServingEngine:
         if self.coord is not None:
             self._respond()        # don't leave leases dangling after drain
         return self.metrics
+
+    # ------------------------------------------------------------------
+    # crash-consistent snapshot / restore
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Serialize the FULL serving state to a plain dict — the journal
+        record a crash-consistent restart replays.
+
+        Carries: the constructor knobs needed to rebuild an
+        equivalently-sized engine, every request's :class:`ReqState`
+        (waiting, running and finished — prompts, generated tokens,
+        prefill positions, deadlines, terminal stamps), the runtime's
+        whole page state through :meth:`PagedStateRuntime.snapshot_state`
+        (block tables, page PAYLOADS from whatever tier they sit on, the
+        radix prefix tree), the admission controller's admitted set, the
+        CFS slice phase, the drain gate and the metrics. Greedy decode
+        has no sampler RNG, so no RNG state exists to carry — restart
+        determinism is argmax + the chunk-split invariance of prefill.
+
+        Read-only and side-effect-free; call BETWEEN steps (no step
+        program in flight). Remote leases are NOT serialized — restored
+        pages land on the host tier and the restored engine re-leases
+        donor memory through its own constructor/coordinator path.
+
+        Raises:
+            PageLossError: a block table still references a LOST page
+                (recovery must re-queue its victim before snapshotting).
+        """
+        def req(r: ReqState) -> Dict:
+            return {"rid": r.rid, "arrival": r.arrival,
+                    "prompt_tokens": list(r.prompt_tokens),
+                    "max_new_tokens": r.max_new_tokens,
+                    "generated": list(r.generated),
+                    "prefill_pos": r.prefill_pos,
+                    "n_prefix": r.n_prefix,
+                    "prefix_embeds": (None if r.prefix_embeds is None
+                                      else np.asarray(r.prefix_embeds)),
+                    "shared_tokens": r.shared_tokens,
+                    "ttft_step": r.ttft_step,
+                    "finish_step": r.finish_step,
+                    "lora_id": r.lora_id,
+                    "deadline_s": r.deadline_s,
+                    "ttft_deadline_s": r.ttft_deadline_s,
+                    "terminal": r.terminal,
+                    "cancel_reason": r.cancel_reason}
+
+        metrics: Dict[str, object] = {}
+        for f in dataclass_fields(EngineMetrics):
+            v = getattr(self.metrics, f.name)
+            metrics[f.name] = (dict(v) if isinstance(v, dict)
+                               else list(v) if isinstance(v, list) else v)
+        return {"version": 1,
+                "config": dict(self._snap_knobs),
+                "next_rid": self._next_rid,
+                "running": [req(r) for r in self.running],
+                "waiting": [req(r) for r in self.waiting],
+                "finished": [req(r) for r in self.finished],
+                "kv": self.kv.snapshot_state(),
+                "admitted": (sorted(self.admission._admitted)
+                             if self.admission is not None else None),
+                "since_switch": getattr(self.sched, "_since_switch", None),
+                "draining": self._draining,
+                "metrics": metrics}
+
+    @classmethod
+    def restore(cls, cfg: ModelConfig, params, snapshot: Dict, *,
+                mesh=None, faults=None,
+                coordinator: Optional[Coordinator] = None,
+                audit: bool = False, hw: HardwareProfile = TPU_V5E,
+                **overrides) -> "ServingEngine":
+        """Rebuild a serving engine from a :meth:`snapshot` dict — the
+        crash-consistent restart path.
+
+        A FRESH engine is constructed from the snapshot's carried knobs
+        (``overrides`` win — e.g. attach a new fault injector), the
+        runtime's page state is rebuilt payload-for-payload
+        (:meth:`PagedStateRuntime.restore_state`; everything lands parked
+        on the host tier), and every surviving request re-queues: former
+        RUNNERS first (the next plan re-admits them ahead of the
+        backlog), each marked parked exactly when it still owns pages.
+        The finished list, metric counters, admitted set, CFS slice phase
+        and drain gate carry over, so post-restart TTFT/RCT stamps stay
+        on the same simulated clock.
+
+        Every restored request then completes BIT-IDENTICALLY to an
+        uninterrupted run: park/restore round-trips are exact, greedy
+        decode is argmax, and prefill logits are chunk-split-invariant —
+        the restart may schedule different chunks, never different
+        tokens. Mesh collective counters start fresh, so audit restored
+        engines with a NEW :class:`InvariantAuditor`.
+        """
+        knobs = dict(snapshot["config"])
+        knobs.update(overrides)
+        eng = cls(cfg, params, mesh=mesh, faults=faults,
+                  coordinator=coordinator, audit=audit, hw=hw, **knobs)
+        eng.kv.restore_state(snapshot["kv"])
+
+        def req(d: Dict) -> ReqState:
+            r = ReqState(d["rid"], d["arrival"], list(d["prompt_tokens"]),
+                         d["max_new_tokens"], lora_id=d["lora_id"],
+                         deadline_s=d["deadline_s"],
+                         ttft_deadline_s=d["ttft_deadline_s"])
+            r.generated = list(d["generated"])
+            r.prefill_pos = d["prefill_pos"]
+            r.n_prefix = d["n_prefix"]
+            if d["prefix_embeds"] is not None:
+                r.prefix_embeds = jnp.asarray(d["prefix_embeds"])
+            r.shared_tokens = d["shared_tokens"]
+            r.ttft_step = d["ttft_step"]
+            r.finish_step = d["finish_step"]
+            r.terminal = d["terminal"]
+            r.cancel_reason = d["cancel_reason"]
+            if any(r.rid in p.pages for p in eng.kv.planes.values()):
+                r.parked = True      # its pages sit on the host tier
+            return r
+
+        eng.waiting = ([req(d) for d in snapshot["running"]]
+                       + [req(d) for d in snapshot["waiting"]])
+        eng.finished = [req(d) for d in snapshot["finished"]]
+        eng._next_rid = int(snapshot["next_rid"])
+        eng._draining = bool(snapshot["draining"])
+        if eng.admission is not None and snapshot["admitted"] is not None:
+            eng.admission._admitted = set(snapshot["admitted"])
+        if (snapshot["since_switch"] is not None
+                and hasattr(eng.sched, "_since_switch")):
+            eng.sched._since_switch = snapshot["since_switch"]
+        for k, v in snapshot["metrics"].items():
+            setattr(eng.metrics, k, dict(v) if isinstance(v, dict)
+                    else list(v) if isinstance(v, list) else v)
+        return eng

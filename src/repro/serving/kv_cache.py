@@ -449,6 +449,15 @@ class PagedStateRuntime:
             else:
                 for lp in plane.aqua.free(indexed):
                     self._drop_tree_page(plane.name, lp)
+            # defensive: no pin may survive the pages it pinned. A release
+            # racing a same-step prefetch restore (the engine restored and
+            # pinned this rid's pages for the NEXT plan in the step it
+            # finished) already unpinned through the active set above, but
+            # a pin entry left on a now-freed page would corrupt every
+            # later occupant of the recycled id.
+            for lp in lps:
+                if plane.aqua.page_table[int(lp), 0] == -1:
+                    plane.pin.pop(int(lp), None)
             del plane.pages[rid]
         self._active.discard(rid)
         self._req_blocks.pop(rid, None)
@@ -1157,3 +1166,155 @@ class PagedStateRuntime:
                           "retries_fabric": self.meter.retries_fabric,
                           "retries_host": self.meter.retries_host,
                           "sim_time": self.meter.sim_time}}
+
+    # -- crash-consistent snapshot / restore --------------------------------
+    _SNAP_COUNTERS = ("prefix_hits", "adopted_tokens", "cow_copies",
+                      "cache_hits", "cache_hit_tokens", "cache_evictions",
+                      "cache_demotions")
+
+    def snapshot_state(self) -> Dict:
+        """Serialize the runtime's full serving state to a plain dict:
+        per-request block tables, every referenced page's PAYLOAD (gathered
+        from whatever tier it sits on, each physical page captured once
+        however many block tables alias it), the radix prefix tree with its
+        per-block page sets, the per-request prompt records behind
+        ``register_prefix``, and the sharing/cache counters.
+
+        Logical page ids in the snapshot are snapshot-relative:
+        :meth:`restore_state` re-allocates pages on a fresh runtime and
+        remaps every reference, so the snapshot survives any allocator
+        history. Call between engine steps only (no step program in
+        flight); LOST pages cannot be captured — recovery must re-queue
+        their victims first (``read`` raises on them, loudly).
+        """
+        def ser_node(node: _RadixNode) -> Dict:
+            return {"blocks": [list(b) for b in node.blocks],
+                    "pages": [{n: [int(x) for x in lps]
+                               for n, lps in pd.items()}
+                              for pd in node.pages],
+                    "last_use": int(node.last_use),
+                    "children": [ser_node(c)
+                                 for c in node.children.values()]}
+
+        tree_lps: Dict[str, set] = {name: set() for name in self.planes}
+        for node in self._iter_nodes():
+            for pd in node.pages:
+                for n, lps in pd.items():
+                    tree_lps[n].update(int(x) for x in lps)
+        planes: Dict[str, Dict] = {}
+        for name, plane in self.planes.items():
+            rows = {int(rid): [[int(lp) for lp in row] for row in rws]
+                    for rid, rws in plane.pages.items()}
+            lps = sorted({lp for rws in rows.values()
+                          for row in rws for lp in row} | tree_lps[name])
+            planes[name] = {
+                "pages": rows, "lps": lps,
+                "data": (np.asarray(plane.aqua.read(lps)) if lps
+                         else None),
+                "fills": (plane.aqua.page_fill[
+                    np.asarray(lps, np.int64)].tolist() if lps else [])}
+        return {
+            "version": 1,
+            "planes": planes,
+            "tree": [{"seed": seed,
+                      "children": [ser_node(c)
+                                   for c in root.children.values()]}
+                     for seed, root in self._roots.items()],
+            "req_blocks": {int(r): [list(b) for b in bl]
+                           for r, bl in self._req_blocks.items()},
+            "req_tokens": {int(r): list(t)
+                           for r, t in self._req_tokens.items()},
+            "req_seed": dict(self._req_seed),
+            "req_registered": dict(self._req_registered),
+            "clock": int(self._clock),
+            "counters": {k: getattr(self, k) for k in self._SNAP_COUNTERS}}
+
+    def restore_state(self, snap: Dict) -> None:
+        """Rebuild a :meth:`snapshot_state` dict on a FRESH runtime of the
+        same configuration and geometry.
+
+        Every snapshot page is re-allocated preferring the HOST tier (the
+        crash-safe landing zone; the fallback ladder spills to surviving
+        remote leases, then LOCAL) and its payload written back verbatim,
+        unmetered — a restore is reconstruction, not traffic. Refcounts are
+        reconstructed exactly: one reference per block table aliasing the
+        page, plus the CACHED state (refcount 0, slot kept) for pages owned
+        purely by the radix index. The tree, its reverse map, the prompt
+        records and the counters are rebuilt with the remapped ids. NO
+        request is active afterwards (pins empty): the engine re-queues
+        every in-flight request as parked and the normal placement path
+        pulls its pages LOCAL on its next admission.
+
+        Raises:
+            ValueError: this runtime already holds request state (restore
+                targets a fresh engine, never a live one).
+        """
+        if (any(p.pages for p in self.planes.values()) or self._roots
+                or self._active):
+            raise ValueError(f"{self.cfg.name}: restore_state on a runtime "
+                             "already holding request state — restore "
+                             "targets a FRESH engine")
+        maps: Dict[str, Dict[int, int]] = {}
+        for name, ps in snap["planes"].items():
+            plane = self.planes[name]
+            ref_rids: Dict[int, set] = {}
+            for rid, rws in ps["pages"].items():
+                for row in rws:
+                    for lp in row:
+                        ref_rids.setdefault(int(lp), set()).add(int(rid))
+            lp_map: Dict[int, int] = {}
+            old_lps = [int(x) for x in ps["lps"]]
+            if old_lps:
+                new = plane.aqua.allocate(len(old_lps), prefer=HOST)
+                plane.aqua.write(new, jnp.asarray(ps["data"]), meter=False)
+                plane.aqua.set_page_fill(new, np.asarray(ps["fills"]))
+                cached: List[int] = []
+                for old, nlp in zip(old_lps, new):
+                    nlp = int(nlp)
+                    lp_map[old] = nlp
+                    k = len(ref_rids.get(old, ()))
+                    if k == 0:
+                        cached.append(nlp)   # tree-owned: CACHED, ref 0
+                    for _ in range(k - 1):   # one ref per aliasing table
+                        plane.aqua.retain([nlp])
+                if cached:
+                    plane.aqua.free_to_cache(cached)
+            for rid, rws in ps["pages"].items():
+                plane.pages[int(rid)] = [[lp_map[int(lp)] for lp in row]
+                                         for row in rws]
+            maps[name] = lp_map
+
+        def build(d: Dict, parent: _RadixNode) -> _RadixNode:
+            node = _RadixNode(
+                blocks=[tuple(int(t) for t in b) for b in d["blocks"]],
+                pages=[{n: np.asarray([maps[n][int(x)] for x in lps],
+                                      np.int64)
+                        for n, lps in pd.items()} for pd in d["pages"]],
+                parent=parent)
+            node.last_use = int(d["last_use"])
+            for cd in d["children"]:
+                c = build(cd, node)
+                node.children[c.blocks[0]] = c
+            return node
+
+        for entry in snap["tree"]:
+            root = _RadixNode()
+            for cd in entry["children"]:
+                c = build(cd, root)
+                root.children[c.blocks[0]] = c
+            self._roots[entry["seed"]] = root
+        for node in self._iter_nodes():
+            for bi, pd in enumerate(node.pages):
+                for n, lps in pd.items():
+                    for lp in lps:
+                        self._lp_node[(n, int(lp))] = (node, bi)
+        self._req_blocks = {int(r): [tuple(int(t) for t in b) for b in bl]
+                            for r, bl in snap["req_blocks"].items()}
+        self._req_tokens = {int(r): tuple(int(t) for t in ts)
+                            for r, ts in snap["req_tokens"].items()}
+        self._req_seed = dict(snap["req_seed"])
+        self._req_registered = {int(r): int(v)
+                                for r, v in snap["req_registered"].items()}
+        self._clock = int(snap["clock"])
+        for k in self._SNAP_COUNTERS:
+            setattr(self, k, snap["counters"][k])

@@ -51,6 +51,27 @@ class ReqState:
     ttft_step: Optional[int] = None
     finish_step: Optional[int] = None
     lora_id: Optional[int] = None
+    deadline_s: Optional[float] = None    # e2e deadline, seconds after arrival
+    ttft_deadline_s: Optional[float] = None  # first-token deadline, same base
+    terminal: Optional[str] = None        # set ONLY by the engine's _retire:
+    #                                       "finished" | "cancelled" | "expired"
+    cancel_reason: Optional[str] = None   # "client" | "deadline" | "fault" | ...
+
+    @property
+    def lifecycle(self) -> str:
+        """Derived lifecycle state — never stored, so it cannot drift from
+        the fields that define it: ``waiting`` → ``prefilling`` → ``running``
+        → one of the terminal states stamped by the engine's ``_retire``
+        (``finished`` / ``cancelled`` / ``expired``)."""
+        if self.terminal is not None:
+            return self.terminal
+        if self.done:
+            return "finished"
+        if self.prefilled:
+            return "running"
+        if self.prefill_pos > 0 or self.slot is not None:
+            return "prefilling"
+        return "waiting"
 
     @property
     def prompt_positions(self) -> int:

@@ -37,7 +37,8 @@ def _tensor(**kw):
 def test_error_hierarchy():
     for sub in (errs.PageLossError, errs.LeaseRevokedError,
                 errs.TransferFaultError, errs.SchedulingInvariantError,
-                errs.InvariantViolation, errs.CapacityError):
+                errs.InvariantViolation, errs.CapacityError,
+                errs.CancelledError, errs.EngineCrashError):
         assert issubclass(sub, errs.AquaError)
         assert issubclass(sub, RuntimeError)
     # the engine re-exports SchedulingInvariantError (it moved to errors.py)
@@ -47,6 +48,8 @@ def test_error_hierarchy():
     assert e.plane == "kv" and e.pages == (3, 4)
     v = errs.InvariantViolation(["a", "b"])
     assert v.violations == ("a", "b") and "a" in str(v)
+    c = errs.CancelledError("gone", rid=7, reason="deadline")
+    assert c.rid == 7 and c.reason == "deadline"
 
 
 # ---------------------------------------------------------------------------
@@ -502,6 +505,50 @@ def test_chaos_interleavings_keep_every_invariant():
 @settings(max_examples=15, deadline=None)
 def test_chaos_property_random_seeds(seed):
     _chaos_round(seed, n_ops=30)
+
+
+# ---------------------------------------------------------------------------
+# engine-level chaos: random lifecycle-op interleavings (step / submit /
+# cancel-at-any-state / drain+resume / snapshot-restore-swap) against the
+# full-state auditor after EVERY op
+# ---------------------------------------------------------------------------
+def _engine_chaos_round(seed: int, cfg, params, n_ops: int = 30):
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
+                        scheduler="cfs", slice_tokens=4, offload_tier=HOST,
+                        step_tokens=8, prefetch=False)
+    auditor = InvariantAuditor()
+    for i in range(n_ops):
+        op = rng.choice(["step", "submit", "cancel", "drain", "snapshot"],
+                        p=[0.45, 0.25, 0.15, 0.05, 0.10])
+        if op == "submit":
+            n = int(rng.integers(4, 16))
+            toks = list(map(int, 1 + rng.integers(0, cfg.vocab_size - 1, n)))
+            eng.submit(toks, int(rng.integers(1, 6)))
+        elif op == "cancel":
+            live = [r.rid for r in eng.waiting + eng.running]
+            if live:
+                eng.cancel(int(rng.choice(live)))
+        elif op == "drain":
+            eng.drain()
+            eng.resume()
+        elif op == "snapshot":
+            eng = ServingEngine.restore(cfg, params, eng.snapshot())
+            auditor = InvariantAuditor()     # the mesh check is per-engine
+        else:
+            eng.step()
+        violations = auditor.check(eng.kv, engine=eng)
+        assert not violations, (seed, i, op, violations)
+    eng.run(500)
+    assert not (eng.waiting or eng.running)
+    assert auditor.check(eng.kv, engine=eng) == []
+
+
+def test_engine_chaos_lifecycle_ops_keep_every_invariant():
+    cfg = smoke_config(get_config(ARCH))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    for seed in (0, 1, 2):
+        _engine_chaos_round(seed, cfg, params)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,386 @@
+"""Request-lifecycle robustness: cancellation out of every state with
+auditor-verified page reclamation, TTFT/e2e deadlines on both clocks,
+graceful drain/resume, the no-progress watchdog, and crash-consistent
+snapshot/restore with bit-identical token completion.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import errors as errs
+from repro.core.aqua_tensor import HOST, REMOTE
+from repro.core.faults import FaultEvent, FaultInjector, InvariantAuditor
+from repro.models import api
+from repro.serving.engine import EngineMetrics, ServingEngine
+from repro.serving.kv_cache import PagedStateRuntime
+
+ARCH = "qwen1.5-0.5b"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config(get_config(ARCH))
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return api.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, n=4, length=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, 1 + rng.integers(0, cfg.vocab_size - 1, length)))
+            for _ in range(n)]
+
+
+def _engine(cfg, params, **kw):
+    args = dict(max_running=2, max_seq=64, scheduler="cfs", slice_tokens=4,
+                offload_tier=HOST, prefetch=False)
+    args.update(kw)
+    return ServingEngine(cfg, params, **args)
+
+
+def _finished_map(eng):
+    return {tuple(r.prompt_tokens): r.generated for r in eng.finished
+            if r.terminal == "finished"}
+
+
+def _baseline(cfg, params, prompts, max_new=6, **kw):
+    eng = _engine(cfg, params, **kw)
+    for p in prompts:
+        eng.submit(p, max_new)
+    eng.run(500)
+    return _finished_map(eng)
+
+
+# ---------------------------------------------------------------------------
+# cancellation: any state, zero leaks, idempotent, typed result path
+# ---------------------------------------------------------------------------
+def test_cancel_every_state_reclaims_all_pages(cfg, params):
+    prompts = _prompts(cfg, n=4)
+    # an 8-token step budget over two 10-token prompts lands mid-prefill
+    eng = _engine(cfg, params, audit=True, step_tokens=8)
+    rs = [eng.submit(p, 6) for p in prompts]
+    auditor = InvariantAuditor()
+
+    # waiting: never stepped, holds nothing but (possibly) adopted prefix
+    assert rs[3].lifecycle == "waiting"
+    assert eng.cancel(rs[3].rid)
+    assert auditor.check(eng.kv, engine=eng) == []
+
+    # prefilling: one step in, mid-chunk (10-token prompt, 4-token slices)
+    eng.step()
+    victim = next(r for r in (rs[0], rs[1]) if r.lifecycle == "prefilling")
+    assert eng.cancel(victim.rid)
+    assert auditor.check(eng.kv, engine=eng) == []
+
+    # running (decoding): step until a survivor has generated tokens
+    survivor = rs[1] if victim is rs[0] else rs[0]
+    for _ in range(20):
+        if survivor.generated:
+            break
+        eng.step()
+    assert survivor.lifecycle == "running"
+    assert eng.cancel(survivor.rid, reason="client")
+    assert auditor.check(eng.kv, engine=eng) == []
+
+    # the torn-down rids hold no plane pages and no batch slot
+    for r in (rs[3], victim, survivor):
+        assert r.terminal == "cancelled" and r.lifecycle == "cancelled"
+        assert r.slot is None
+        assert all(r.rid not in p.pages for p in eng.kv.planes.values())
+        with pytest.raises(errs.CancelledError) as ei:
+            eng.output(r.rid)
+        assert ei.value.rid == r.rid
+        # cancel is idempotent: a second call is a no-op
+        assert eng.cancel(r.rid) is False
+    assert eng.cancel(10 ** 9) is False          # unknown rid: no-op too
+
+    # the remaining request still completes and the books balance
+    m = eng.run(500)
+    assert rs[2].terminal == "finished"
+    assert m.cancelled == 3 and m.submitted == 4
+    assert auditor.check(eng.kv, engine=eng) == []
+    assert eng.auditor.audits == m.steps         # audit=True ran every step
+
+
+def test_cancel_parked_request_mid_offload_pressure(cfg, params):
+    """Cancel a request whose pages sit OFF-device (parked to the remote
+    tier under page pressure): the release must walk the remote pool's
+    refcounts, not just LOCAL."""
+    prompts = _prompts(cfg, n=3, length=8, seed=1)
+    kv = PagedStateRuntime(cfg, max_seq=64, page_tokens=8, max_running=1,
+                           prefix_sharing=False)
+    eng = ServingEngine(cfg, params, max_running=2, max_seq=64,
+                        scheduler="cfs", slice_tokens=3, offload_tier=REMOTE,
+                        kv=kv, prefetch=False)
+    eng.pager.add_remote_lease("d0", 2 ** 24)
+    rs = [eng.submit(p, 6) for p in prompts]
+    parked = None
+    for _ in range(200):
+        eng.step()
+        parked = next((r for r in eng.running + eng.waiting if r.parked),
+                      None)
+        if parked is not None:
+            break
+    assert parked is not None, "1-page runtime under 2 runners must park"
+    auditor = InvariantAuditor()
+    assert eng.cancel(parked.rid)
+    assert all(parked.rid not in p.pages for p in eng.kv.planes.values())
+    assert auditor.check(eng.kv, engine=eng) == []
+    eng.run(500)
+    assert sum(r.terminal == "finished" for r in eng.finished) == 2
+
+
+# ---------------------------------------------------------------------------
+# deadlines: e2e and TTFT, on the engine clock
+# ---------------------------------------------------------------------------
+def test_deadline_expiry_sheds_and_counts(cfg, params):
+    prompts = _prompts(cfg, n=2, seed=2)
+    base = _baseline(cfg, params, prompts)
+
+    eng = _engine(cfg, params)
+    r1 = eng.submit(prompts[0], 6, deadline_s=1e-9)      # unmeetable
+    r2 = eng.submit(prompts[1], 6, deadline_s=1e9)       # generous
+    m = eng.run(500)
+    assert r1.terminal == "expired" and r1.cancel_reason == "deadline"
+    assert r2.terminal == "finished"
+    assert m.deadline_missed == 1 and m.cancelled == 1
+    assert all(r1.rid not in p.pages for p in eng.kv.planes.values())
+    with pytest.raises(errs.CancelledError):
+        eng.output(r1.rid)
+    # the survivor's tokens are unaffected by the shed neighbour
+    assert r2.generated == base[tuple(prompts[1])]
+
+
+def test_ttft_deadline_binds_only_until_first_token(cfg, params):
+    prompts = _prompts(cfg, n=2, seed=3)
+    # cap the step budget so prefill spans steps — the first token cannot
+    # land before the sweep has a chance to see the missed deadline
+    eng = _engine(cfg, params, step_tokens=8)
+    r1 = eng.submit(prompts[0], 6, ttft_deadline_s=1e-9)
+    r2 = eng.submit(prompts[1], 6, ttft_deadline_s=1e9)
+    m = eng.run(500)
+    assert r1.terminal == "expired" and m.deadline_missed == 1
+    # a met TTFT deadline never expires the request later in decode
+    assert r2.terminal == "finished"
+
+
+# ---------------------------------------------------------------------------
+# graceful drain / resume
+# ---------------------------------------------------------------------------
+def test_drain_quiesces_and_resume_completes_bit_identically(cfg, params):
+    prompts = _prompts(cfg, n=4, seed=4)
+    base = _baseline(cfg, params, prompts)
+
+    eng = _engine(cfg, params)
+    for p in prompts:
+        eng.submit(p, 6)
+    for _ in range(3):
+        eng.step()
+    n = eng.drain()
+    assert n >= 1 and eng.metrics.drained == n
+    # quiescent: no batch slot held, no active pins, nothing running
+    assert not eng.running
+    assert not eng.kv._active
+    assert all(r.slot is None for r in eng.waiting)
+    # a draining engine admits nothing
+    steps_before = eng.metrics.steps
+    eng.step()
+    assert not eng.running and eng.metrics.steps == steps_before + 1
+    eng.resume()
+    eng.run(500)
+    assert _finished_map(eng) == base
+
+
+# ---------------------------------------------------------------------------
+# watchdog: honest starvation is flagged, work still completes
+# ---------------------------------------------------------------------------
+def test_watchdog_flags_noprogress_requests(cfg, params):
+    # 10 requests x 24-token prompts under an 8-token step budget: most of
+    # the FCFS batch makes no progress for many consecutive steps
+    prompts = _prompts(cfg, n=10, length=24, seed=5)
+    eng = _engine(cfg, params, max_running=10, scheduler="fcfs",
+                  step_tokens=8, watchdog_steps=5)
+    for p in prompts:
+        eng.submit(p, 4)
+    m = eng.run(2000)
+    assert m.watchdog_trips > 0
+    assert sum(r.terminal == "finished" for r in eng.finished) == 10
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent snapshot / restore
+# ---------------------------------------------------------------------------
+def test_snapshot_restore_mid_stream_bit_identical(cfg, params):
+    prompts = _prompts(cfg, n=4, seed=6)
+    base = _baseline(cfg, params, prompts)
+
+    eng = _engine(cfg, params)
+    for p in prompts:
+        eng.submit(p, 6)
+    for _ in range(3):                           # prefilling + running mix
+        eng.step()
+    snap = eng.snapshot()
+
+    restored = ServingEngine.restore(cfg, params, snap)
+    # audit with a FRESH auditor (the mesh check is stateful per engine)
+    assert InvariantAuditor().check(restored.kv, engine=restored) == []
+    assert restored.metrics.submitted == 4
+    restored.run(500)
+    assert _finished_map(restored) == base
+
+    # snapshot is non-destructive: the original keeps serving, identically
+    eng.run(500)
+    assert _finished_map(eng) == base
+
+
+def test_snapshot_restore_with_admission_and_prefix_cache(cfg, params):
+    shared = list(range(1, 17))                  # two page-aligned pages
+    prompts = [shared + t for t in _prompts(cfg, n=3, length=6, seed=7)]
+    base = _baseline(cfg, params, prompts, admission=True)
+
+    # stagger the submissions: adoption matches against pages a LIVE
+    # request already wrote, so the leader must prefill before followers
+    eng = _engine(cfg, params, admission=True)
+    eng.submit(prompts[0], 6)
+    for _ in range(3):
+        eng.step()
+    for p in prompts[1:]:
+        eng.submit(p, 6)
+    for _ in range(2):
+        eng.step()
+    assert eng.kv.prefix_hits > 0                # sharing actually engaged
+    snap = eng.snapshot()
+    restored = ServingEngine.restore(cfg, params, snap)
+    assert InvariantAuditor().check(restored.kv, engine=restored) == []
+    # the admitted set and the radix counters survive the crash boundary
+    assert restored.admission._admitted == eng.admission._admitted
+    assert restored.kv.prefix_hits == eng.kv.prefix_hits
+    assert restored.kv.adopted_tokens == eng.kv.adopted_tokens
+    restored.run(500)
+    assert _finished_map(restored) == base
+
+
+def test_engine_crash_fault_is_recoverable(cfg, params):
+    prompts = _prompts(cfg, n=3, seed=8)
+    base = _baseline(cfg, params, prompts)
+
+    fi = FaultInjector(seed=0, events=[
+        FaultEvent(kind="engine_crash", at_step=4)])
+    eng = _engine(cfg, params, faults=fi)
+    for p in prompts:
+        eng.submit(p, 6)
+    snap = eng.snapshot()
+    with pytest.raises(errs.EngineCrashError):
+        for _ in range(500):
+            snap = eng.snapshot()                # journal each step boundary
+            eng.step()
+            if not (eng.waiting or eng.running):
+                break
+    # crash-consistent restart from the last journal record
+    restored = ServingEngine.restore(cfg, params, snap)
+    assert InvariantAuditor().check(restored.kv, engine=restored) == []
+    restored.run(500)
+    assert _finished_map(restored) == base
+
+
+def test_restore_refuses_a_dirty_runtime(cfg, params):
+    eng = _engine(cfg, params)
+    eng.submit(_prompts(cfg, n=1, seed=9)[0], 4)
+    eng.step()
+    snap = eng.snapshot()
+    with pytest.raises(ValueError, match="FRESH"):
+        eng.kv.restore_state(snap["kv"])         # engine already has pages
+
+
+# ---------------------------------------------------------------------------
+# metrics: explicit right-censoring in the TTFT quantile
+# ---------------------------------------------------------------------------
+def test_ttft_quantile_censoring():
+    m = EngineMetrics()
+    assert np.isnan(m.ttft_quantile(0.5))
+    m.ttft = {0: 1.0, 1: 2.0, 2: 3.0}
+    assert m.ttft_quantile(0.5) == 2.0
+    # 3 observed + 3 never-first-token: p99 lands in the censored tail
+    assert m.ttft_quantile(0.99, censored=3) == float("inf")
+    assert m.ttft_quantile(0.25, censored=3) == 2.0
+    # all censored: every quantile is honestly unbounded
+    empty = EngineMetrics()
+    assert empty.ttft_quantile(0.5, censored=4) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# seedable abandonment schedules
+# ---------------------------------------------------------------------------
+def test_make_cancel_events_deterministic_and_sorted():
+    from repro.core.workload import make_bursty_requests, make_cancel_events
+    reqs = make_bursty_requests(24, seed=1)
+    a = make_cancel_events(reqs, frac=0.5, seed=2)
+    b = make_cancel_events(reqs, frac=0.5, seed=2)
+    assert [(e.rid, e.at_time) for e in a] == [(e.rid, e.at_time) for e in b]
+    assert a, "frac=0.5 over 24 requests must select someone"
+    c = make_cancel_events(reqs, frac=0.5, seed=3)
+    assert [(e.rid, e.at_time) for e in a] != [(e.rid, e.at_time) for e in c]
+    assert all(e.kind == "cancel" for e in a)
+    assert all(x.at_time <= y.at_time for x, y in zip(a, a[1:]))
+    by_rid = {r.rid: r for r in reqs}
+    assert all(e.at_time >= by_rid[e.rid].arrival for e in a)
+    assert make_cancel_events(reqs, frac=0.0) == []
+    with pytest.raises(ValueError):
+        make_cancel_events(reqs, frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# simulator mirror: the same lifecycle on the analytic byte clock
+# ---------------------------------------------------------------------------
+def _sim(faults=None):
+    from repro.core.perfmodel import A100_NVLINK, ModelCost
+    from repro.core.simulator import ServingSimulator
+    scfg = get_config("aqua-codellama-34b")
+    wb = scfg.param_count() * 2
+    return ServingSimulator(A100_NVLINK, ModelCost.from_config(scfg),
+                            weight_bytes=wb,
+                            kv_capacity_bytes=80e9 - wb - 2e9,
+                            scheduler="cfs", offload_tier="fabric",
+                            max_running=4, step_tokens=256, faults=faults)
+
+
+def _sim_requests(n=12, seed=2, **kw):
+    from repro.core.simulator import Request
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / 80.0, n))
+    return [Request(i, float(arr[i]), int(rng.integers(300, 800)),
+                    int(rng.integers(40, 120)), **kw) for i in range(n)]
+
+
+def test_simulator_cancel_events_tear_out_the_named_request():
+    reqs = _sim_requests()
+    fi = FaultInjector(seed=0, events=[
+        FaultEvent(kind="cancel", rid=2, at_time=reqs[2].arrival + 0.01),
+        FaultEvent(kind="cancel", rid=7, at_time=reqs[7].arrival + 0.01)])
+    sim = _sim(faults=fi)
+    res = sim.run(reqs)
+    assert sim.cancelled == 2
+    for r in res.requests:
+        if r.rid in (2, 7):
+            assert r.cancelled and r.cancel_reason == "fault"
+            assert r.finish is None and not r.resident
+        else:
+            assert r.finish is not None and not r.cancelled
+
+
+def test_simulator_deadline_sweep_mirrors_the_engine():
+    reqs = _sim_requests(seed=5)
+    reqs[3].deadline_s = 1e-6                    # unmeetable e2e deadline
+    reqs[6].ttft_deadline_s = 1e-6               # unmeetable TTFT deadline
+    sim = _sim()
+    res = sim.run(reqs)
+    assert sim.deadline_missed == 2 and sim.cancelled == 2
+    for r in res.requests:
+        if r.rid in (3, 6):
+            assert r.cancelled and r.cancel_reason == "deadline"
+            assert r.finish is None
+        else:
+            assert r.finish is not None
